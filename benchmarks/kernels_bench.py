@@ -1,0 +1,50 @@
+"""Kernel micro-benchmarks: wall time of the oracle math (the CPU stand-in
+for the TPU kernels) + derived HBM-traffic model for the fused kernels."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+
+def _timeit(fn, reps=10):
+    fn()[0].block_until_ready() if isinstance(fn(), tuple) else jax.block_until_ready(fn())
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn()
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def kernel_times():
+    rows = []
+    key = jax.random.PRNGKey(0)
+    H = W = 512
+    x = jax.random.normal(key, (H, W), jnp.float32)
+    hn = jnp.zeros(W)
+    hw = jnp.zeros(H)
+    st = jax.jit(lambda: ref.stencil2d_ref(x, hn, hn, hw, hw))
+    rows.append(("kern/stencil2d_512", _timeit(st),
+                 f"bytes={(H*W*2+2*W+2*H)*4};flops={5*H*W}"))
+    for l in (1, 3, 5):
+        m, n = 2 * l + 1, 1 << 18
+        Wm = jax.random.normal(key, (m, n), jnp.float32)
+        z = jax.random.normal(key, (n,), jnp.float32)
+        md = jax.jit(lambda Wm=Wm, z=z: ref.multidot_ref(Wm, z))
+        naive_bytes = 2 * m * n * 4
+        fused_bytes = (m + 1) * n * 4
+        rows.append((f"kern/multidot_l{l}", _timeit(md),
+                     f"fused_traffic={fused_bytes};naive={naive_bytes};"
+                     f"saving={naive_bytes/fused_bytes:.2f}x"))
+        g = jax.random.normal(key, (m,), jnp.float32)
+        wa = jax.jit(lambda Wm=Wm, z=z, g=g: ref.window_axpy_ref(Wm, z, g, 1.1))
+        rows.append((f"kern/window_axpy_l{l}", _timeit(wa),
+                     f"fused_traffic={(m+2)*n*4};"
+                     f"naive={(2*m+1)*n*4}"))
+    return rows
+
+
+ALL = [kernel_times]

@@ -1,0 +1,75 @@
+"""Roofline aggregation: turn the dry-run JSONs into the EXPERIMENTS.md
+SRoofline table (per arch x shape x mesh: three terms, dominant bottleneck,
+MODEL_FLOPS/HLO_FLOPS ratio)."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+DRYRUN = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def load_cells(mesh: str = "single"):
+    cells = []
+    d = DRYRUN / mesh
+    if not d.exists():
+        return cells
+    for p in sorted(d.glob("*.json")):
+        rec = json.loads(p.read_text())
+        if rec.get("tag"):          # hillclimb variants live in SPerf
+            continue
+        cells.append(rec)
+    return cells
+
+
+def table_rows(mesh: str = "single"):
+    rows = []
+    for c in load_cells(mesh):
+        name = f"{c['arch']}/{c['shape']}"
+        if c.get("skipped"):
+            rows.append((f"roofline[{mesh}]/{name}", 0.0, "SKIP(full-attn@500k)"))
+            continue
+        if not c.get("ok"):
+            rows.append((f"roofline[{mesh}]/{name}", 0.0,
+                         "FAIL:" + c.get("error", "?")[:60]))
+            continue
+        r = c["roofline"]
+        mem = c["memory"]["peak_per_device"] / 1e9
+        ratio = r.get("model_flops_ratio")
+        rows.append((
+            f"roofline[{mesh}]/{name}", 0.0,
+            f"tc={r['t_compute_s']:.3f}s;tm={r['t_memory_s']:.3f}s;"
+            f"tn={r['t_collective_s']:.3f}s;dom={r['dominant'][2:-2]};"
+            f"mem={mem:.1f}GB;useful={ratio:.2f}" if ratio else "n/a"))
+    return rows
+
+
+def markdown_table(mesh: str = "single") -> str:
+    lines = [
+        f"| arch | shape | t_compute | t_memory | t_collective | dominant "
+        f"| useful-flops ratio | mem/dev | fits 16GB |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for c in load_cells(mesh):
+        if c.get("skipped"):
+            lines.append(f"| {c['arch']} | {c['shape']} | -- | -- | -- | "
+                         f"n/a (skipped: full attention @524k) | -- | -- | -- |")
+            continue
+        if not c.get("ok"):
+            lines.append(f"| {c['arch']} | {c['shape']} | FAILED | | | | | | |")
+            continue
+        r = c["roofline"]
+        mem = c["memory"]["peak_per_device"] / 1e9
+        ratio = r.get("model_flops_ratio")
+        lines.append(
+            f"| {c['arch']} | {c['shape']} | {r['t_compute_s']:.3f}s | "
+            f"{r['t_memory_s']:.3f}s | {r['t_collective_s']:.3f}s | "
+            f"{r['dominant'].replace('t_', '').replace('_s', '')} | "
+            f"{ratio:.2f} | {mem:.1f}GB | "
+            f"{'yes' if c['memory']['fits_16GB'] else 'NO'} |"
+            if ratio is not None else
+            f"| {c['arch']} | {c['shape']} | ? | | | | | | |")
+    return "\n".join(lines)
+
+
+ALL = [lambda: table_rows("single"), lambda: table_rows("multi")]

@@ -1,0 +1,33 @@
+"""Benchmark harness: one function per paper table/figure + kernel timings
++ the dry-run roofline aggregation.  Prints ``name,us_per_call,derived``
+CSV rows (the contract consumed by EXPERIMENTS.md)."""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import kernels_bench, paper_figs, roofline
+    groups = list(paper_figs.ALL) + list(kernels_bench.ALL) + list(roofline.ALL)
+    print("name,us_per_call,derived")
+    failures = 0
+    for fn in groups:
+        t0 = time.time()
+        try:
+            rows = fn()
+        except Exception as e:  # noqa: BLE001
+            print(f"{getattr(fn, '__name__', 'roofline')},0,"
+                  f"ERROR:{type(e).__name__}:{str(e)[:120]}")
+            failures += 1
+            continue
+        for name, us, derived in rows:
+            print(f"{name},{us:.1f},{derived}")
+        sys.stderr.write(f"[{getattr(fn, '__name__', 'roofline')}: "
+                         f"{time.time()-t0:.1f}s]\n")
+    if failures:
+        sys.stderr.write(f"{failures} benchmark group(s) failed\n")
+
+
+if __name__ == "__main__":
+    main()

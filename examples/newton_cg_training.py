@@ -1,0 +1,24 @@
+"""Train a small LM with Newton-pCG: the paper's deep-pipelined CG as the
+inner solver of a second-order optimizer (HVP = the overlapped 'SPMV').
+
+    PYTHONPATH=src python examples/newton_cg_training.py
+"""
+import jax
+
+from repro.configs import get_reduced
+from repro.models import init_params, loss_fn
+from repro.training import NewtonPCGConfig, newton_pcg_step
+from repro.training.data import synth_batch
+
+cfg = get_reduced("qwen3-14b")
+params = init_params(cfg, jax.random.PRNGKey(0))
+ncfg = NewtonPCGConfig(l=2, cg_iters=8, lr=0.5)
+lf = lambda p, b: loss_fn(cfg, p, b)  # noqa: E731
+step = jax.jit(lambda p, b: newton_pcg_step(lf, p, b, ncfg))
+
+for i in range(5):
+    batch = synth_batch(cfg, i, batch=4, seq=64)
+    params, stats = step(params, batch)
+    print(f"step {i}: loss {float(stats['loss']):.4f} "
+          f"|g| {float(stats['grad_norm']):.3f} "
+          f"cg_breakdown={bool(stats['cg_breakdown'])}")

@@ -1,0 +1,34 @@
+"""Distributed p(l)-CG on a 2-D device mesh (shard_map + ppermute halos +
+one fused psum per iteration).
+
+Run with several host devices to see real sharding:
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python examples/poisson_distributed.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.shifts import chebyshev_shifts
+from repro.distributed import DistPoisson, dist_cg, dist_plcg_solve
+from repro.launch.mesh import make_mesh_for
+
+ndev = len(jax.devices())
+mp = 2 if ndev % 2 == 0 and ndev > 1 else 1
+mesh = make_mesh_for(ndev, model_parallel=mp)
+print(f"mesh: {dict(mesh.shape)}")
+
+nx = ny = 80
+op = DistPoisson(nx, ny, mesh)
+from repro.operators import poisson2d
+A = poisson2d(nx, ny)
+b = jnp.asarray((A @ np.ones(nx * ny)).reshape(nx, ny))
+
+x, resn, info = dist_plcg_solve(op, b, l=2, sigma=chebyshev_shifts(0, 8, 2),
+                                tol=1e-8, maxiter=1000)
+res = np.linalg.norm((A @ np.ones(nx * ny)) - A @ np.asarray(x).reshape(-1))
+print(f"p(2)-CG: {len(resn)} iters, |b-Ax| = {res:.3e}, {info}")
+
+xc, resn_c, conv = dist_cg(op, b, iters=1000, tol=1e-8)
+res = np.linalg.norm((A @ np.ones(nx * ny)) - A @ np.asarray(xc).reshape(-1))
+print(f"classic CG (2 sync reductions/iter): |b-Ax| = {res:.3e}")

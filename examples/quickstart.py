@@ -1,0 +1,29 @@
+"""Quickstart: solve a 2D Poisson system with deep-pipelined CG (p(l)-CG).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core.cg import classic_cg
+from repro.core.plcg import plcg
+from repro.operators import poisson2d
+
+# the paper's model problem: unscaled 5-point stencil, spectrum in (0, 8)
+A = poisson2d(100, 100)
+x_true = np.ones(A.n)
+b = A @ x_true
+
+print("method      iters  converged   |b - A x|")
+ref = classic_cg(A, b, tol=1e-8, maxiter=1000)
+print(f"CG         {ref.iters:6d}  {ref.converged!s:9}  "
+      f"{np.linalg.norm(b - A @ ref.x):.3e}")
+
+for l in (1, 2, 3):
+    r = plcg(A, b, l=l, tol=1e-8, maxiter=1000, spectrum=(0.0, 8.0))
+    print(f"p({l})-CG    {r.iters:6d}  {r.converged!s:9}  "
+          f"{np.linalg.norm(b - A @ r.x):.3e}   "
+          f"(breakdowns: {r.breakdowns})")
+
+print("\nIn exact arithmetic all rows produce identical iterates; the "
+      "pipelined variants\nhide the global reduction of iteration i behind "
+      "the next l SPMVs (paper Alg. 3).")

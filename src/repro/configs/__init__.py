@@ -1,0 +1,34 @@
+"""Architecture registry: --arch <id> resolves here."""
+from __future__ import annotations
+
+import importlib
+
+ARCHS = [
+    "mamba2-370m",
+    "qwen2-vl-2b",
+    "qwen3-moe-235b-a22b",
+    "arctic-480b",
+    "mistral-large-123b",
+    "chatglm3-6b",
+    "qwen1.5-32b",
+    "qwen3-14b",
+    "recurrentgemma-9b",
+    "whisper-large-v3",
+]
+
+#: the paper's own workload (Poisson solves) -- not an LM architecture
+SOLVER_CONFIGS = ["poisson2d"]
+
+_MODULE_FOR = {a: a.replace("-", "_").replace(".", "_") for a in ARCHS}
+
+
+def get_config(arch_id: str):
+    if arch_id not in _MODULE_FOR:
+        raise KeyError(f"unknown arch {arch_id!r}; choose from {ARCHS}")
+    mod = importlib.import_module(f"repro.configs.{_MODULE_FOR[arch_id]}")
+    return mod.CONFIG
+
+
+def get_reduced(arch_id: str):
+    from repro.models.config import reduced
+    return reduced(get_config(arch_id))

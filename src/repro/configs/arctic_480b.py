@@ -1,0 +1,20 @@
+"""arctic-480b [moe] -- 128 experts top-2 + dense residual
+(hf:Snowflake/snowflake-arctic-base).
+
+35L d_model=7168 56H (GQA kv=8) d_ff=4864 vocab=32000.
+"""
+from repro.models.config import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    arch_id="arctic-480b",
+    family="moe",
+    n_layers=35,
+    d_model=7168,
+    n_heads=56,
+    n_kv=8,
+    d_ff=4864,
+    vocab=32000,
+    head_dim=128,
+    moe=MoEConfig(num_experts=128, top_k=2, d_ff_expert=4864,
+                  dense_residual=True, d_ff_dense=4864),
+)

@@ -1,0 +1,22 @@
+"""mamba2-370m [ssm] -- SSD (state-space duality), arXiv:2405.21060.
+
+48L d_model=1024 (attention-free) vocab=50280, ssm_state=128.
+Sub-quadratic: runs the long_500k shape (O(1) decode state).
+"""
+from repro.models.config import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    arch_id="mamba2-370m",
+    family="ssm",
+    n_layers=48,
+    d_model=1024,
+    n_heads=32,            # d_inner/headdim = 2048/64
+    n_kv=32,
+    d_ff=0,
+    vocab=50280,
+    rope_style="none",
+    ssm=SSMConfig(d_state=128, d_conv=4, expand=2, head_dim=64, chunk=128,
+                  n_groups=1),
+    tie_embeddings=True,
+    subquadratic=True,
+)

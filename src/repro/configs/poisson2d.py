@@ -1,0 +1,23 @@
+"""The paper's own workload: 2D Poisson systems solved with p(l)-CG.
+
+Grid sizes follow Sec. 5: 1000x1000 (test setup 1), 1750x1750 (test setup
+2), 200x200 (stability study).  The production solve distributes the grid
+over the full ("data","model") device grid -- see repro.distributed.
+"""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class SolverConfig:
+    arch_id: str = "poisson2d"
+    nx: int = 1000
+    ny: int = 1000
+    l: int = 3
+    tol: float = 1e-5
+    maxiter: int = 2000
+    lmin: float = 0.0
+    lmax: float = 8.0
+    dtype: str = "float64"
+
+
+CONFIG = SolverConfig()

@@ -1,0 +1,17 @@
+"""qwen1.5-32b [dense] -- QKV bias (hf:Qwen/Qwen1.5-0.5B family).
+
+64L d_model=5120 40H (kv=40, MHA) d_ff=27392 vocab=152064.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="qwen1.5-32b",
+    family="dense",
+    n_layers=64,
+    d_model=5120,
+    n_heads=40,
+    n_kv=40,
+    d_ff=27392,
+    vocab=152064,
+    qkv_bias=True,
+)

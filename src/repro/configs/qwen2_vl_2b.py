@@ -1,0 +1,23 @@
+"""qwen2-vl-2b [vlm] -- M-RoPE, dynamic resolution, arXiv:2409.12191.
+
+28L d_model=1536 12H (GQA kv=2) d_ff=8960 vocab=151936.  Backbone only:
+input_specs provides precomputed patch embeddings (frontend stub).
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="qwen2-vl-2b",
+    family="vlm",
+    n_layers=28,
+    d_model=1536,
+    n_heads=12,
+    n_kv=2,
+    d_ff=8960,
+    vocab=151936,
+    head_dim=128,
+    rope_style="mrope",
+    mrope_sections=(16, 24, 24),
+    qkv_bias=True,
+    tie_embeddings=True,
+    embeds_input=True,
+)

@@ -1,0 +1,19 @@
+"""qwen3-moe-235b-a22b [moe] -- 128 experts top-8 (hf:Qwen/Qwen3-30B-A3B).
+
+94L d_model=4096 64H (GQA kv=4) d_ff(expert)=1536 vocab=151936.
+"""
+from repro.models.config import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    arch_id="qwen3-moe-235b-a22b",
+    family="moe",
+    n_layers=94,
+    d_model=4096,
+    n_heads=64,
+    n_kv=4,
+    d_ff=1536,
+    vocab=151936,
+    head_dim=128,
+    qk_norm=True,
+    moe=MoEConfig(num_experts=128, top_k=8, d_ff_expert=1536),
+)

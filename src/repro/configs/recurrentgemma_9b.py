@@ -1,0 +1,24 @@
+"""recurrentgemma-9b [hybrid] -- RG-LRU + local attention 1:2,
+arXiv:2402.19427 (Griffin).
+
+38L d_model=4096 16H (MQA kv=1) d_ff=12288 vocab=256000.
+Sub-quadratic: runs the long_500k shape (O(1) recurrent state + fixed
+local-attention window).
+"""
+from repro.models.config import ModelConfig, HybridConfig
+
+CONFIG = ModelConfig(
+    arch_id="recurrentgemma-9b",
+    family="hybrid",
+    n_layers=38,
+    d_model=4096,
+    n_heads=16,
+    n_kv=1,
+    d_ff=12288,
+    vocab=256000,
+    head_dim=256,
+    rope_theta=1e4,
+    hybrid=HybridConfig(window=2048, pattern=("rglru", "rglru", "attn"),
+                        lru_width=4096, conv_width=4),
+    subquadratic=True,
+)

@@ -1,0 +1,20 @@
+"""whisper-large-v3 [audio] -- enc-dec, conv frontend (stub), arXiv:2212.04356.
+
+32L (enc) + 32L (dec) d_model=1280 20H d_ff=5120 vocab=51866.  Backbone
+only: input_specs provides precomputed mel-frame embeddings.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="whisper-large-v3",
+    family="encdec",
+    n_layers=32,
+    n_enc_layers=32,
+    d_model=1280,
+    n_heads=20,
+    n_kv=20,
+    d_ff=5120,
+    vocab=51866,
+    rope_style="none",
+    embeds_input=True,
+)

@@ -1,0 +1,68 @@
+"""Classic (preconditioned) Conjugate Gradients -- paper Alg. 4.
+
+Array-library agnostic: works on numpy or JAX arrays (python loop driver).
+This is the baseline every communication-hiding variant is compared against;
+per iteration it has 2 global reduction phases (the two dot products) that
+are *synchronous* -- nothing overlaps them (Table 1, row 'CG').
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from .linop import LinearOperator, Preconditioner
+from .results import SolveResult
+
+
+def _dot(a, b):
+    return (a * b).sum()
+
+
+def classic_cg(
+    A: LinearOperator,
+    b,
+    x0=None,
+    *,
+    tol: float = 1e-8,
+    maxiter: int = 1000,
+    M: Optional[Preconditioner] = None,
+    trace_true_residual: bool = False,
+) -> SolveResult:
+    """Hestenes-Stiefel CG with optional SPD preconditioner M^{-1}.
+
+    Stops on ||r_i|| / ||b|| <= tol (recursive residual).
+    """
+    x = b * 0 if x0 is None else x0
+    r = b - A @ x
+    u = M(r) if M is not None else r            # preconditioned residual
+    p = u
+    gamma = _dot(r, u)
+    bnorm = float(_dot(b, b)) ** 0.5
+    resnorms = [float(_dot(r, r)) ** 0.5]
+    true_resnorms = [resnorms[0]] if trace_true_residual else None
+    converged = resnorms[-1] <= tol * bnorm
+    it = 0
+    while not converged and it < maxiter:
+        s = A @ p
+        sp = _dot(s, p)
+        if sp == 0 or gamma == 0:     # exact convergence / lucky breakdown
+            converged = True
+            break
+        alpha = gamma / sp
+        x = x + alpha * p
+        r = r - alpha * s
+        u = M(r) if M is not None else r
+        gamma_new = _dot(r, u)
+        beta = gamma_new / gamma
+        gamma = gamma_new
+        p = u + beta * p
+        it += 1
+        resnorms.append(float(_dot(r, r)) ** 0.5)
+        if trace_true_residual:
+            tr = b - A @ x
+            true_resnorms.append(float(_dot(tr, tr)) ** 0.5)
+        converged = resnorms[-1] <= tol * bnorm
+    return SolveResult(
+        x=x, resnorms=resnorms, iters=it, converged=bool(converged),
+        true_resnorms=true_resnorms,
+        info={"method": "cg"},
+    )

@@ -1,0 +1,86 @@
+"""Direct Lanczos (D-Lanczos) -- Saad, 'Iterative methods', Sec. 6.7.1.
+
+Mathematically equivalent to CG in exact arithmetic (paper Remark 7); the
+p(l)-CG method of the paper is exactly a deep-pipelined reorganization of
+this algorithm.  Kept as an exact-arithmetic cross-check: p(l)-CG with any
+pipeline depth must reproduce the D-Lanczos iterates to rounding error.
+
+Solution update via the LU factorization of the tridiagonal Lanczos matrix
+T = L U (paper eqs. (21)-(26)) -- identical eta/lambda/zeta recurrences.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from .linop import LinearOperator, Preconditioner
+from .results import SolveResult
+
+
+def _dot(a, b):
+    return (a * b).sum()
+
+
+def d_lanczos(
+    A: LinearOperator,
+    b,
+    x0=None,
+    *,
+    tol: float = 1e-8,
+    maxiter: int = 1000,
+    M: Optional[Preconditioner] = None,
+) -> SolveResult:
+    """D-Lanczos; with M, runs Lanczos for M^{-1}A in the M inner product
+    (same convention as preconditioned p(l)-CG, Sec. 2.3). |zeta_k| then
+    equals ||r_k||_M."""
+    x = b * 0 if x0 is None else x0
+    rhat = b - A @ x                      # unpreconditioned residual
+    r = M(rhat) if M is not None else rhat
+    # ||r0||_M = sqrt((rhat, M^{-1} rhat)) = sqrt((rhat, r))
+    beta0 = float(_dot(rhat, r)) ** 0.5
+    bnorm_ref = float(_dot(b, b)) ** 0.5 if M is None else float(_dot(b, M(b))) ** 0.5
+    if beta0 == 0.0:
+        return SolveResult(x=x, resnorms=[0.0], iters=0, converged=True,
+                           info={"method": "dlanczos"})
+    v = r / beta0          # v_0, M-orthonormal basis of K(M^{-1}A, r0)
+    vhat = rhat / beta0    # M v_0 (kept so dot products avoid applying M)
+    v_prev = v * 0
+    vhat_prev = vhat * 0
+    delta_prev = 0.0       # delta_{j-1}
+    eta_prev = None
+    zeta_prev = None
+    p_prev = None
+    resnorms = [beta0]
+    converged = resnorms[-1] <= tol * bnorm_ref
+    it = 0
+    while not converged and it < maxiter:
+        # Lanczos step for M^{-1}A in the M inner product.
+        w_hat = A @ v                                # A v_j   (= M * (M^{-1}A v_j))
+        w = M(w_hat) if M is not None else w_hat     # M^{-1}A v_j
+        gamma = float(_dot(w_hat, v))                # (M^{-1}A v, v)_M
+        w = w - gamma * v - delta_prev * v_prev
+        w_hat = w_hat - gamma * vhat - delta_prev * vhat_prev
+        delta = float(_dot(w_hat, w)) ** 0.5         # ||w||_M
+        # LU-factorization driven solution update (eqs. 21-26).
+        if it == 0:
+            eta = gamma
+            zeta = beta0
+            p = v / eta
+        else:
+            lam = delta_prev / eta_prev
+            eta = gamma - lam * delta_prev
+            zeta = -lam * zeta_prev
+            p = (v - delta_prev * p_prev) / eta
+        x = x + zeta * p
+        # zeta_{k+1} = -lambda_{k+1} zeta_k with lambda_{k+1}=delta/eta
+        resnorms.append(abs(delta / eta * zeta))
+        v_prev, vhat_prev = v, vhat
+        if delta == 0.0:
+            converged = True
+            it += 1
+            break
+        v, vhat = w / delta, w_hat / delta
+        delta_prev, eta_prev, zeta_prev, p_prev = delta, eta, zeta, p
+        it += 1
+        converged = resnorms[-1] <= tol * bnorm_ref
+    return SolveResult(x=x, resnorms=resnorms, iters=it, converged=bool(converged),
+                       info={"method": "dlanczos"})

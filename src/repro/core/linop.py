@@ -1,0 +1,65 @@
+"""Linear operator abstraction shared by every solver in the library.
+
+A :class:`LinearOperator` is a thin, array-library-agnostic wrapper around a
+``matvec`` callable.  The same object drives the numpy reference solvers, the
+jitted JAX production solvers, and (through duck typing) the distributed
+shard_map path -- the solvers only ever call ``A @ v`` / ``A.matvec(v)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+Array = Any  # numpy or jax array
+
+
+@dataclasses.dataclass(frozen=True)
+class LinearOperator:
+    """Matrix-free symmetric linear operator ``v -> A v``.
+
+    Attributes:
+      matvec: the operator application.
+      n: problem dimension (vectors have shape ``(n,)``).
+      diag: optional diagonal of A (used by Jacobi-type preconditioners).
+      name: human-readable tag used in benchmark tables.
+    """
+
+    matvec: Callable[[Array], Array]
+    n: int
+    diag: Optional[Array] = None
+    name: str = "A"
+
+    def __matmul__(self, v: Array) -> Array:
+        return self.matvec(v)
+
+    def __call__(self, v: Array) -> Array:
+        return self.matvec(v)
+
+
+@dataclasses.dataclass(frozen=True)
+class Preconditioner:
+    """SPD preconditioner; ``apply`` computes ``M^{-1} v``.
+
+    Only the *inverse* application is ever required by the algorithms in this
+    repo (the paper's preconditioned p(l)-CG never applies ``M`` itself --
+    the unpreconditioned auxiliary basis removes that need, Sec. 2.3).
+    """
+
+    apply: Callable[[Array], Array]
+    name: str = "M"
+
+    def __call__(self, v: Array) -> Array:
+        return self.apply(v)
+
+
+def dense_operator(A: Array, name: str = "dense") -> LinearOperator:
+    """Wrap a dense (n, n) symmetric matrix as a LinearOperator."""
+    n = A.shape[0]
+    if A.shape != (n, n):
+        raise ValueError(f"dense_operator expects a square matrix, got {A.shape}")
+    diag = A.diagonal()
+    return LinearOperator(matvec=lambda v: A @ v, n=n, diag=diag, name=name)
+
+
+def identity_preconditioner() -> Preconditioner:
+    return Preconditioner(apply=lambda v: v, name="I")

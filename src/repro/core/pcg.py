@@ -1,0 +1,81 @@
+"""Pipelined CG of Ghysels & Vanroose 2014 -- paper Alg. 5 (+ preconditioning).
+
+Pipeline length one: a *single* global reduction per iteration (the fused
+(gamma_i, delta_i) pair) overlapped with one SPMV + preconditioner apply.
+Included both as the closest-related prior method (paper Remark 10 stresses
+p-CG and p(l)-CG are *different* algorithms) and as the l=1 comparison point
+in every accuracy/performance experiment.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from .linop import LinearOperator, Preconditioner
+from .results import SolveResult
+
+
+def _dot(a, b):
+    return (a * b).sum()
+
+
+def ghysels_pcg(
+    A: LinearOperator,
+    b,
+    x0=None,
+    *,
+    tol: float = 1e-8,
+    maxiter: int = 1000,
+    M: Optional[Preconditioner] = None,
+    trace_true_residual: bool = False,
+) -> SolveResult:
+    """Ghysels-Vanroose pipelined CG.
+
+    Unpreconditioned recurrences (Alg. 5): auxiliary vectors
+    w = A r, z = A s, s = A p; one fused reduction for (gamma, delta).
+    Preconditioned version introduces u = M^{-1} r, q = M^{-1} s,
+    following Ghysels & Vanroose (2014), Alg. 5 therein.
+    """
+    x = b * 0 if x0 is None else x0
+    r = b - A @ x
+    u = M(r) if M is not None else r
+    w = A @ u
+    bnorm = float(_dot(b, b)) ** 0.5
+    resnorms = [float(_dot(r, r)) ** 0.5]
+    true_resnorms = [resnorms[0]] if trace_true_residual else None
+    converged = resnorms[-1] <= tol * bnorm
+    it = 0
+    alpha_prev = None
+    gamma_prev = None
+    z = s = p = q = None
+    while not converged and it < maxiter:
+        # --- one fused global reduction (overlapped with the SPMV below) ---
+        gamma = float(_dot(r, u))
+        delta = float(_dot(w, u))
+        # --- SPMV (+ preconditioner) that hides the reduction latency ------
+        m_vec = M(w) if M is not None else w
+        n_vec = A @ m_vec
+        # --- scalar updates ------------------------------------------------
+        if it > 0:
+            beta = gamma / gamma_prev
+            alpha = 1.0 / (delta / gamma - beta / alpha_prev)
+        else:
+            beta = 0.0
+            alpha = gamma / delta
+        # --- AXPY recurrences ----------------------------------------------
+        z = n_vec + beta * z if it > 0 else n_vec
+        q = m_vec + beta * q if it > 0 else m_vec
+        s = w + beta * s if it > 0 else w
+        p = u + beta * p if it > 0 else u
+        x = x + alpha * p
+        r = r - alpha * s
+        u = u - alpha * q
+        w = w - alpha * z
+        gamma_prev, alpha_prev = gamma, alpha
+        it += 1
+        resnorms.append(float(_dot(r, r)) ** 0.5)
+        if trace_true_residual:
+            tr = b - A @ x
+            true_resnorms.append(float(_dot(tr, tr)) ** 0.5)
+        converged = resnorms[-1] <= tol * bnorm
+    return SolveResult(x=x, resnorms=resnorms, iters=it, converged=bool(converged),
+                       true_resnorms=true_resnorms, info={"method": "pcg-ghysels"})

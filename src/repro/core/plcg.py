@@ -1,0 +1,332 @@
+"""Deep-pipelined Conjugate Gradients p(l)-CG -- paper Alg. 2 (+ Sec. 2.3).
+
+This is the *reference* implementation: a faithful, python-loop transcription
+of Alg. 2 with exact index bookkeeping, used as the oracle for the jitted
+scan/shard_map production engines (``plcg_scan.py``, ``distributed/``) and as
+the workhorse for the paper's accuracy experiments (Figs. 1, 6, 9, 10,
+Table 2).  It is array-library agnostic (numpy fp64 for the stability
+studies, JAX arrays elsewhere).
+
+Structure of one iteration i (kernel map of Alg. 3):
+  (K1) SPMV            z_{i+1} <- A z_i (and M^{-1} A z_i when preconditioned)
+  (K2) SCALAR          finalize column c = i-l+1 of G   (lines 7-8)
+  (K3) SCALAR          gamma_{c-1}, delta_{c-1}         (lines 10-16)
+  (K4) AXPY            v_c (line 17), z_{i+1} correction (line 18)
+  (K5) DOTPR           column i+1 dot products -> *arrive at iteration i+l*
+  (K6) AXPY            eta/lambda/zeta/p/x solution update (lines 22-31)
+
+The dot products stored into column i+1 at iteration i are only read at
+iteration i+l (lines 7-8 with c = i+1): the algorithm's data flow itself
+realizes the paper's MPI_Iallreduce/MPI_Wait pair with l-deep overlap.
+
+Storage faithfulness: vectors are kept in pruned dicts holding exactly the
+paper's sliding windows (Sec. 3.2 / Appendix B): l+1 z-vectors, 2l+1
+v-vectors, 3 zhat-vectors, p and x -- i.e. 3l+2 basis vectors (3l+5
+preconditioned).  ``record_G=True`` retains the full G matrix for the
+stability diagnostics of Sec. 4 (Fig. 10).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Optional, Sequence
+
+from .linop import LinearOperator, Preconditioner
+from .results import SolveResult
+from .shifts import chebyshev_shifts
+
+Array = Any
+
+
+def _dot(a, b):
+    return float((a * b).sum())
+
+
+@dataclasses.dataclass
+class PLCGTrace:
+    """Optional finite-precision diagnostics (Sec. 4 experiments)."""
+    true_resnorms: list = dataclasses.field(default_factory=list)    # ||b - A x_k||
+    implicit_resnorms: list = dataclasses.field(default_factory=list)  # |zeta_k|
+    basis_gap_norms: list = dataclasses.field(default_factory=list)  # ||vbar_k - v_k||
+    residual_gap_norms: list = dataclasses.field(default_factory=list)
+    G: Optional[Any] = None          # full G matrix (record_G=True)
+    breakdown_iters: list = dataclasses.field(default_factory=list)
+
+
+class _Pruned(dict):
+    """Dict of index -> vector with explicit window pruning."""
+
+    def prune_below(self, j0: int) -> None:
+        for j in [j for j in self if j < j0]:
+            del self[j]
+
+
+def _plcg_single(
+    A: LinearOperator,
+    b: Array,
+    x0: Array,
+    *,
+    l: int,
+    sigma: Sequence[float],
+    tol: float,
+    maxiter: int,
+    M: Optional[Preconditioner],
+    exploit_symmetry: bool,
+    record_G: bool,
+    trace_gaps: bool,
+    prune: bool,
+    dot: Callable = _dot,
+):
+    """One p(l)-CG sweep (no restarts).  Returns (x, resnorms, k, status, trace).
+
+    status: 'converged' | 'maxiter' | 'breakdown'
+    """
+    import numpy as np
+
+    N = maxiter + 2 * l + 3          # scalar table size
+    # --- initialization (Alg. 2 lines 1-3) --------------------------------
+    x = x0
+    rhat0 = b - A @ x                 # unpreconditioned residual
+    r0 = M(rhat0) if M is not None else rhat0
+    beta0 = dot(rhat0, r0) ** 0.5 if M is not None else dot(rhat0, rhat0) ** 0.5
+    bnorm = dot(b, M(b)) ** 0.5 if M is not None else dot(b, b) ** 0.5
+    if bnorm == 0.0:
+        bnorm = 1.0
+    trace = PLCGTrace()
+    if record_G:
+        trace.G = np.zeros((N, N))
+    if beta0 == 0.0:
+        return x, [0.0], 0, "converged", trace
+
+    z = _Pruned(); v = _Pruned(); zh = _Pruned()
+    v[0] = r0 / beta0
+    z[0] = v[0]
+    if M is not None:
+        zh[0] = rhat0 / beta0         # zhat_0 = M z_0
+
+    # scalar tables; out-of-range reads must see exact zeros
+    G = np.zeros((N, N))
+    gam = np.zeros(N); dlt = np.zeros(N)
+    eta = np.zeros(N); zet = np.zeros(N)
+    G[0, 0] = 1.0
+    p_prev = None                     # p_{k-1}
+    resnorms: list[float] = []
+    status = "maxiter"
+    k_done = -1                       # highest solution index k with x_k computed
+
+    i = 0
+    while True:
+        # ----- (K1) SPMV: raw z_{i+1} (line 5) ----------------------------
+        t_hat = A @ z[i]
+        t = M(t_hat) if M is not None else t_hat
+        if i < l:
+            znew = t - sigma[i] * z[i]
+            if M is not None:
+                zhnew = t_hat - sigma[i] * zh[i]
+        else:
+            znew = t                  # corrected at line 18 below
+            if M is not None:
+                zhnew = t_hat
+
+        breakdown = False
+        if i >= l:
+            c = i - l + 1             # column being finalized == new v index
+            # ----- symmetric fill (Lemma 5 / eq. (14), Sec. 3.1) ----------
+            if exploit_symmetry:
+                for j in range(max(0, c - 2 * l), c - l):
+                    G[j, c] = G[c - l, j + l]
+            # ----- (K2) finalize column c of G (lines 7-8) ----------------
+            for j in range(max(0, c - l + 1), c):
+                s = sum(G[kk, j] * G[kk, c] for kk in range(max(0, c - 2 * l), j))
+                G[j, c] = (G[j, c] - s) / G[j, j]
+            arg = G[c, c] - sum(G[kk, c] ** 2 for kk in range(max(0, c - 2 * l), c))
+            if arg <= 0.0:
+                # square-root breakdown (Remark 8)
+                trace.breakdown_iters.append(i)
+                breakdown = True
+            else:
+                G[c, c] = math.sqrt(arg)
+                if record_G:
+                    trace.G[: c + 1, c] = G[: c + 1, c]
+                # ----- (K3) gamma_{c-1}, delta_{c-1} (lines 10-16) --------
+                gdiag = G[c - 1, c - 1]
+                sub = G[c - 2, c - 1] * dlt[c - 2] if c >= 2 else 0.0
+                if i < 2 * l:         # c <= l
+                    gam[c - 1] = (G[c - 1, c] + sigma[c - 1] * gdiag - sub) / gdiag
+                    dlt[c - 1] = G[c, c] / gdiag
+                else:                 # c > l
+                    gam[c - 1] = (gdiag * gam[c - 1 - l] + G[c - 1, c] * dlt[c - 1 - l]
+                                  - sub) / gdiag
+                    dlt[c - 1] = G[c, c] * dlt[c - 1 - l] / gdiag
+                # ----- (K4) basis recurrences (lines 17-18) ---------------
+                acc = z[c]
+                for j in range(max(0, c - 2 * l), c):
+                    if G[j, c] != 0.0:
+                        acc = acc - G[j, c] * v[j]
+                v[c] = acc / G[c, c]
+                zim1 = z[i - 1] if i >= 1 else None
+                znew = znew - gam[c - 1] * z[i]
+                if c >= 2:
+                    znew = znew - dlt[c - 2] * zim1
+                znew = znew / dlt[c - 1]
+                if M is not None:
+                    zhnew = zhnew - gam[c - 1] * zh[i]
+                    if c >= 2:
+                        zhnew = zhnew - dlt[c - 2] * zh[i - 1]
+                    zhnew = zhnew / dlt[c - 1]
+                if trace_gaps and c >= 1:
+                    # actual basis vector via the exact Lanczos relation (39)
+                    kk = c - 1
+                    vm1 = v[kk - 1] if kk >= 1 else 0.0 * v[kk]
+                    vbar = (A @ v[kk] - gam[kk] * v[kk] - (dlt[kk - 1] if kk >= 1 else 0.0) * vm1) / dlt[kk]
+                    gapv = vbar - v[c]
+                    trace.basis_gap_norms.append(dot(gapv, gapv) ** 0.5)
+
+        if breakdown:
+            status = "breakdown"
+            break
+
+        z[i + 1] = znew
+        if M is not None:
+            zh[i + 1] = zhnew
+
+        # ----- (K5) dot products for column i+1 (line 20) -----------------
+        # these values are *read* for the first time at iteration i+l:
+        # the payload of the paper's single MPI_Iallreduce per iteration.
+        lhs = zh[i + 1] if M is not None else z[i + 1]
+        lo_v = max(0, i - 2 * l + 1)
+        hi_v = i - l + 1
+        if hi_v >= 0:
+            start = hi_v if (exploit_symmetry and i >= 2 * l - 1) else lo_v
+            for j in range(start, hi_v + 1):
+                G[j, i + 1] = dot(lhs, v[j])
+        for j in range(max(0, i - l + 2), i + 2):
+            G[j, i + 1] = dot(lhs, z[j])
+
+        # ----- (K6) solution update (lines 22-31) --------------------------
+        if i == l:
+            eta[0] = gam[0]
+            zet[0] = beta0
+            p_prev = v[0] / eta[0]
+            resnorms.append(abs(zet[0]))
+            k_done = 0
+        elif i >= l + 1:
+            k = i - l
+            lam = dlt[k - 1] / eta[k - 1]
+            eta[k] = gam[k] - lam * dlt[k - 1]
+            zet[k] = -lam * zet[k - 1]
+            x = x + zet[k - 1] * p_prev
+            p_prev = (v[k] - dlt[k - 1] * p_prev) / eta[k]
+            resnorms.append(abs(zet[k]))
+            k_done = k
+            if trace_gaps:
+                tr = b - A @ x
+                trace.true_resnorms.append(dot(tr, tr) ** 0.5)
+                trace.implicit_resnorms.append(abs(zet[k]))
+                # residual gap (b - A x_k) - zeta_k v_k   (eq. 41/42)
+                gap = tr - zet[k] * v[k]
+                trace.residual_gap_norms.append(dot(gap, gap) ** 0.5)
+            # stopping criterion (Remark 11): |zeta_{i-l}| available together
+            # with x_{i-l}
+            if abs(zet[k]) <= tol * bnorm:
+                status = "converged"
+                break
+            if k >= maxiter:
+                status = "maxiter"
+                break
+
+        # ----- sliding-window pruning (Sec. 3.2 / Appendix B) --------------
+        if prune:
+            z.prune_below(i - l + 1)          # keep z_{i-l+1} .. z_{i+1}
+            v.prune_below(i - 3 * l + 2)      # keep v_{i-3l+2} .. v_{i-l+1}
+            zh.prune_below(i - 1)             # keep zhat_{i-1} .. zhat_{i+1}
+        i += 1
+
+    return x, resnorms, max(k_done, 0), status, trace
+
+
+def plcg(
+    A: LinearOperator,
+    b: Array,
+    x0: Optional[Array] = None,
+    *,
+    l: int = 1,
+    tol: float = 1e-8,
+    maxiter: int = 1000,
+    M: Optional[Preconditioner] = None,
+    sigma: Optional[Sequence[float]] = None,
+    spectrum: Optional[tuple] = None,
+    exploit_symmetry: bool = True,
+    record_G: bool = False,
+    trace_gaps: bool = False,
+    prune: bool = True,
+    max_restarts: int = 5,
+) -> SolveResult:
+    """l-length pipelined CG (paper Alg. 2) with breakdown restarts.
+
+    Args:
+      l: pipeline depth (>= 1).
+      sigma: l basis shifts; default Chebyshev roots on ``spectrum``
+        (= (lmin, lmax)); ``spectrum`` defaults to a crude Gershgorin bound
+        when the operator exposes a diagonal, else (0, 8) (the paper's
+        Poisson interval).
+      exploit_symmetry: use eq. (14) to compute only l+1 (instead of 2l+1)
+        dot products per iteration (Sec. 3.1, Table 1 FLOPS count).
+      record_G / trace_gaps: stability-analysis instrumentation (Sec. 4).
+      max_restarts: explicit restart budget on square-root breakdown
+        (Remark 8).
+    """
+    if l < 1:
+        raise ValueError("pipeline depth l must be >= 1")
+    if sigma is None:
+        lmin, lmax = spectrum if spectrum is not None else (0.0, 8.0)
+        sigma = chebyshev_shifts(lmin, lmax, l)
+    sigma = list(sigma)
+    if len(sigma) != l:
+        raise ValueError(f"need exactly l={l} shifts, got {len(sigma)}")
+
+    x = b * 0 if x0 is None else x0
+    all_resnorms: list[float] = []
+    traces: list[PLCGTrace] = []
+    restarts = 0
+    breakdowns = 0
+    total_k = 0
+    converged = False
+    remaining = maxiter
+    while remaining > 0:
+        x, resnorms, k, status, trace = _plcg_single(
+            A, b, x,
+            l=l, sigma=sigma, tol=tol, maxiter=remaining, M=M,
+            exploit_symmetry=exploit_symmetry, record_G=record_G,
+            trace_gaps=trace_gaps, prune=prune,
+        )
+        all_resnorms.extend(resnorms)
+        traces.append(trace)
+        total_k += k
+        remaining -= max(k, 1)
+        if status == "converged":
+            converged = True
+            break
+        if status == "maxiter":
+            break
+        # square-root breakdown: restart from the last computed solution
+        breakdowns += 1
+        if all_resnorms and all_resnorms[-1] <= tol * max(1e-300, float((b * b).sum()) ** 0.5):
+            converged = True       # happy breakdown: already at tolerance
+            break
+        if restarts >= max_restarts:
+            break
+        restarts += 1
+
+    trace0 = traces[0] if len(traces) == 1 else None
+    return SolveResult(
+        x=x, resnorms=all_resnorms, iters=total_k, converged=converged,
+        breakdowns=breakdowns, restarts=restarts,
+        true_resnorms=(trace0.true_resnorms if trace0 and trace_gaps else None),
+        info={
+            "method": f"p({l})-CG",
+            "l": l,
+            "sigma": sigma,
+            "traces": traces,
+        },
+    )

@@ -1,0 +1,314 @@
+"""Production p(l)-CG engine: jittable, windowed, pipeline-queued (JAX).
+
+This is the TPU-native realization of paper Alg. 2 + Alg. 3:
+
+* vectors live in fixed-size **sliding windows** (Appendix B): ``Zw`` holds
+  the last l+1 auxiliary vectors, ``Vw`` the last 2l+1 basis vectors, so the
+  memory footprint is exactly the paper's 3l+2 vectors (3l+5 preconditioned);
+* G is stored **banded by column** (Lemma 5): row c of ``Gb`` holds the
+  2l+1-entry band of G's column c;
+* the 2l+1 dot products of iteration i form one fused payload (the paper's
+  single ``MPI_Iallreduce``) that is pushed into a depth-l **in-flight
+  queue** carried through ``lax.scan`` state and *read l iterations later*
+  (the ``MPI_Wait`` of Alg. 3).  Nothing in body i consumes the freshly
+  reduced payload, so XLA's latency-hiding scheduler / collective pipeliner
+  is free to overlap the all-reduce with the l interleaved SPMVs -- the
+  compiler-scheduled equivalent of asynchronous MPI progress.
+
+``dot_local`` and ``reduce_payload`` are injected so the same engine drives:
+  - the single-device path (dot = full dot, reduce = identity),
+  - the shard_map distributed path (dot = local partial, reduce = one psum),
+  - the Newton-pCG parameter-space path (flat parameter vectors).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+class PLCGState(NamedTuple):
+    Zw: jax.Array          # (l+1, n)  z_{i}   .. z_{i-l}     (slot 0 newest)
+    Vw: jax.Array          # (2l+1, n) v_{i-l} .. v_{i-3l}    (slot 0 newest)
+    Zhw: jax.Array         # (3, n) zhat window (preconditioned) or (1,1) dummy
+    Gb: jax.Array          # (ncols, 2l+1) banded G, row c = band of column c
+    gam: jax.Array         # (ncols,)
+    dlt: jax.Array         # (ncols,)
+    inflight: jax.Array    # (l, 2l+1) in-flight reduction payloads
+    x: jax.Array           # (n,) current solution x_{i-l}
+    p: jax.Array           # (n,) search direction p_{i-l}
+    eta: jax.Array         # scalar eta_{i-l}
+    zeta: jax.Array        # scalar zeta_{i-l}
+    k_done: jax.Array      # highest solution index committed
+    done: jax.Array        # bool: converged or broken down (frozen)
+    converged: jax.Array   # bool
+    breakdown: jax.Array   # bool
+
+
+class PLCGOut(NamedTuple):
+    x: jax.Array
+    resnorms: jax.Array    # (iters,) |zeta_k| per body (0 where not computed)
+    k_done: jax.Array
+    converged: jax.Array
+    breakdown: jax.Array
+
+
+def _default_dot(a, b):
+    return jnp.vdot(a, b)
+
+
+def plcg_scan(
+    matvec: Callable,
+    b: jax.Array,
+    x0: Optional[jax.Array] = None,
+    *,
+    l: int,
+    iters: int,
+    sigma: Sequence[float],
+    tol: float = 0.0,
+    prec: Optional[Callable] = None,
+    dot_local: Optional[Callable] = None,
+    reduce_scalars: Optional[Callable] = None,
+    exploit_symmetry: bool = True,
+    unroll: int = 1,
+) -> PLCGOut:
+    """Run ``iters`` bodies of p(l)-CG (solution index reaches iters-l-1).
+
+    All shapes are static; convergence/breakdown freeze the state.  Works
+    under jit / inside shard_map.  ``reduce_scalars(payload)`` performs the
+    global sum of a stacked scalar payload (identity on a single device,
+    ``psum`` in the distributed runtime) -- exactly one call per iteration.
+    """
+    if l < 1:
+        raise ValueError("l must be >= 1")
+    dot = dot_local or _default_dot
+    red = reduce_scalars or (lambda p: p)
+    W = 2 * l + 1
+    x0 = jnp.zeros_like(b) if x0 is None else x0
+    sig = jnp.asarray(list(sigma), dtype=b.dtype)
+    ncols = iters + 2 * l + 2
+
+    # ---- initialization (Alg. 2 lines 1-3) -------------------------------
+    rhat0 = b - matvec(x0)
+    r0 = prec(rhat0) if prec is not None else rhat0
+    init_pay = jnp.stack([dot(rhat0, r0), dot(b, prec(b) if prec is not None else b)])
+    init_pay = red(init_pay)
+    beta0 = jnp.sqrt(init_pay[0])
+    bnorm = jnp.sqrt(init_pay[1])
+    bnorm = jnp.where(bnorm == 0, 1.0, bnorm)
+    v0 = r0 / beta0
+
+    n = b.shape[0]
+    Zw = jnp.zeros((l + 1, n), b.dtype).at[0].set(v0)
+    Vw = jnp.zeros((W, n), b.dtype).at[0].set(v0)
+    Zhw = (jnp.zeros((3, n), b.dtype).at[0].set(rhat0 / beta0)
+           if prec is not None else jnp.zeros((1, 1), b.dtype))
+    Gb = jnp.zeros((ncols, W), b.dtype).at[0, 2 * l].set(1.0)
+    state = PLCGState(
+        Zw=Zw, Vw=Vw, Zhw=Zhw, Gb=Gb,
+        gam=jnp.zeros(ncols, b.dtype), dlt=jnp.zeros(ncols, b.dtype),
+        inflight=jnp.zeros((l, W), b.dtype),
+        x=x0, p=jnp.zeros_like(b),
+        eta=jnp.asarray(0.0, b.dtype), zeta=jnp.asarray(0.0, b.dtype),
+        k_done=jnp.asarray(-1), done=jnp.asarray(False),
+        converged=jnp.asarray(False), breakdown=jnp.asarray(False),
+    )
+
+    def gb_row(Gb, r):
+        """Safe banded-G row read (negative rows -> zeros)."""
+        row = jax.lax.dynamic_slice_in_dim(Gb, jnp.maximum(r, 0), 1, 0)[0]
+        return jnp.where(r >= 0, row, jnp.zeros_like(row))
+
+    def body(st: PLCGState, i):
+        # ---------------- (K1) SPMV --------------------------------------
+        t_hat = matvec(st.Zw[0])
+        t = prec(t_hat) if prec is not None else t_hat
+
+        c = i - l + 1                       # column being finalized
+
+        def warmup(_):
+            s = sig[jnp.minimum(i, l - 1)]
+            znew = t - s * st.Zw[0]
+            zhnew = (t_hat - s * st.Zhw[0]) if prec is not None else None
+            return (st.Vw, st.Gb, st.gam, st.dlt, znew, zhnew,
+                    jnp.asarray(False), st.x, st.p, st.eta, st.zeta, st.k_done)
+
+        def steady(_):
+            # -------- arrived payload = raw band of column c --------------
+            col = st.inflight[0]
+            # symmetric fill (eq. 14): rows c-2l+k, k<l, from earlier columns
+            if exploit_symmetry:
+                filled = []
+                for k in range(l):
+                    r = c - 2 * l + k
+                    src = gb_row(st.Gb, c - l + k)[2 * l - k]
+                    use_fill = (i >= 3 * l - 1) & (r >= 0)
+                    filled.append(jnp.where(use_fill, src, col[k]))
+                col = jnp.concatenate([jnp.stack(filled), col[l:]])
+            # -------- (K2) Gram-Schmidt correction (lines 7-8) ------------
+            rows = [gb_row(st.Gb, c - 2 * l + k) for k in range(l + 1, 2 * l)]
+            col_list = [col[k] for k in range(W)]
+            for k in range(l + 1, 2 * l):          # z-rows r = c-2l+k
+                r = c - 2 * l + k
+                grow = rows[k - (l + 1)]
+                s = sum(grow[k2 - k + 2 * l] * col_list[k2] for k2 in range(k))
+                denom = jnp.where(r >= 0, grow[2 * l], 1.0)
+                corrected = (col_list[k] - s) / denom
+                col_list[k] = jnp.where(r >= 0, corrected, col_list[k])
+            arg = col_list[2 * l] - sum(col_list[k2] ** 2 for k2 in range(2 * l))
+            brk = arg <= 0.0
+            gcc = jnp.sqrt(jnp.maximum(arg, jnp.finfo(b.dtype).tiny))
+            col_list[2 * l] = gcc
+            col = jnp.stack(col_list)
+            Gb2 = jax.lax.dynamic_update_slice_in_dim(st.Gb, col[None], c, 0)
+            # -------- (K3) gamma_{c-1}, delta_{c-1} (lines 10-16) ---------
+            rowm1 = gb_row(Gb2, c - 1)
+            gd = rowm1[2 * l]                       # g_{c-1,c-1}
+            g_cm1_c = col[2 * l - 1]                # g_{c-1,c}
+            sub = jnp.where(c >= 2, rowm1[2 * l - 1]
+                            * st.dlt[jnp.maximum(c - 2, 0)], 0.0)
+            sig_c = sig[jnp.clip(c - 1, 0, l - 1)]
+            gam_lo = (g_cm1_c + sig_c * gd - sub) / gd
+            dlt_lo = gcc / gd
+            idx = jnp.maximum(c - 1 - l, 0)
+            gam_hi = (gd * st.gam[idx] + g_cm1_c * st.dlt[idx] - sub) / gd
+            dlt_hi = gcc * st.dlt[idx] / gd
+            early = i < 2 * l
+            gam_c1 = jnp.where(early, gam_lo, gam_hi)
+            dlt_c1 = jnp.where(early, dlt_lo, dlt_hi)
+            gam2 = st.gam.at[jnp.maximum(c - 1, 0)].set(gam_c1)
+            dlt2 = st.dlt.at[jnp.maximum(c - 1, 0)].set(dlt_c1)
+            # -------- (K4) v recurrence (line 17) -------------------------
+            # v_c = (z_c - sum_k col[k] v_{c-2l+k}) / gcc ; v_{c-2l+k}=Vw[2l-1-k]
+            vsum = jnp.tensordot(col[:2 * l][::-1], st.Vw[: 2 * l], axes=1)
+            vnew = (st.Zw[l - 1] - vsum) / gcc
+            Vw2 = jnp.concatenate([vnew[None], st.Vw[:-1]])
+            # -------- (K4) z recurrence (line 18) -------------------------
+            dsub = jnp.where(c >= 2, st.dlt[jnp.maximum(c - 2, 0)], 0.0)
+            znew = (t - gam_c1 * st.Zw[0] - dsub * st.Zw[1]) / dlt_c1
+            zhnew = ((t_hat - gam_c1 * st.Zhw[0] - dsub * st.Zhw[1]) / dlt_c1
+                     if prec is not None else None)
+            # -------- (K6) solution update (lines 22-31) ------------------
+            k = i - l
+            at_first = i == l
+            eta0 = gam2[0]
+            lam = jnp.where(at_first, 0.0, st.dlt[jnp.maximum(k - 1, 0)]
+                            / jnp.where(st.eta == 0, 1.0, st.eta))
+            dkm1 = st.dlt[jnp.maximum(k - 1, 0)]
+            eta_k = jnp.where(at_first, eta0, gam2[jnp.maximum(k, 0)] - lam * dkm1)
+            zeta_k = jnp.where(at_first, beta0, -lam * st.zeta)
+            x2 = jnp.where(at_first, st.x, st.x + st.zeta * st.p)
+            v_k = Vw2[1]                            # v_{i-l}
+            eta_safe = jnp.where(eta_k == 0, 1.0, eta_k)
+            p2 = jnp.where(at_first, v_k / eta_safe,
+                           (v_k - dkm1 * st.p) / eta_safe)
+            return (Vw2, Gb2, gam2, dlt2, znew, zhnew, brk,
+                    x2, p2, eta_k, zeta_k, jnp.maximum(k, st.k_done))
+
+        (Vw2, Gb2, gam2, dlt2, znew, zhnew, brk, x2, p2, eta2, zeta2,
+         k2) = jax.lax.cond(i >= l, steady, warmup, operand=None)
+
+        Zw2 = jnp.concatenate([znew[None], st.Zw[:-1]])
+        Zhw2 = (jnp.concatenate([zhnew[None], st.Zhw[:-1]])
+                if prec is not None else st.Zhw)
+        # ---------------- (K5) dot-product payload for column i+1 --------
+        lhs = zhnew if prec is not None else znew
+        if exploit_symmetry:
+            def vdots_full(_):
+                return jnp.tensordot(Vw2[: l + 1], lhs, axes=1)
+
+            def vdots_one(_):
+                out = jnp.zeros(l + 1, b.dtype)
+                return out.at[0].set(dot(Vw2[0], lhs))
+
+            vd = jax.lax.cond(i < 2 * l - 1, vdots_full, vdots_one, None)
+        else:
+            vd = jnp.stack([dot(Vw2[t], lhs) for t in range(l + 1)])
+        zd = jnp.stack([dot(Zw2[t], lhs) for t in range(l)])
+        # mask payload slots whose row index i+1-2l+k is negative (the v
+        # window is zero-initialized except v_0, which must not leak into
+        # nonexistent rows during warmup)
+        vmask = jnp.arange(l + 1) + (i + 1 - 2 * l) >= 0
+        payload = jnp.concatenate([vd[::-1] * vmask, zd[::-1]])  # band layout
+        payload = red(payload)
+        inflight2 = jnp.concatenate([st.inflight[1:], payload[None]], axis=0)
+
+        # ---------------- convergence / freeze ---------------------------
+        conv_now = ((i >= l) & jnp.logical_not(st.done) & jnp.logical_not(brk)
+                    & (jnp.abs(zeta2) <= tol * bnorm))
+        commit = jnp.logical_not(st.done | brk)
+        new = PLCGState(
+            Zw=Zw2, Vw=Vw2, Zhw=Zhw2, Gb=Gb2, gam=gam2, dlt=dlt2,
+            inflight=inflight2, x=x2, p=p2, eta=eta2, zeta=zeta2,
+            k_done=k2, done=st.done | brk | conv_now,
+            converged=st.converged | conv_now,
+            breakdown=st.breakdown | (brk & jnp.logical_not(st.done)),
+        )
+        out_state = jax.tree.map(
+            lambda a_new, a_old: jnp.where(commit, a_new, a_old), new,
+            st._replace(done=new.done, converged=new.converged,
+                        breakdown=new.breakdown))
+        res = jnp.where(commit & (i >= l), jnp.abs(zeta2), 0.0)
+        return out_state, res
+
+    final, resnorms = jax.lax.scan(body, state, jnp.arange(iters),
+                                   unroll=unroll)
+    return PLCGOut(x=final.x, resnorms=resnorms, k_done=final.k_done,
+                   converged=final.converged, breakdown=final.breakdown)
+
+
+def plcg_jit(matvec, b, x0=None, *, l, iters, sigma, tol=0.0, prec=None,
+             exploit_symmetry: bool = True, unroll: int = 1) -> PLCGOut:
+    """Convenience jitted single-device entry point."""
+    fn = functools.partial(
+        plcg_scan, matvec, l=l, iters=iters, sigma=tuple(sigma), tol=tol,
+        prec=prec, exploit_symmetry=exploit_symmetry, unroll=unroll)
+    return jax.jit(lambda bb, xx: fn(bb, xx))(b, x0 if x0 is not None
+                                              else jnp.zeros_like(b))
+
+
+def plcg_solve(matvec, b, x0=None, *, l, sigma, tol=1e-8, maxiter=1000,
+               prec=None, exploit_symmetry: bool = True, max_restarts: int = 5,
+               unroll: int = 1):
+    """Driver around the jitted engine: explicit restart on square-root
+    breakdown (paper Remark 8), happy-breakdown detection, restart budget.
+
+    Returns (x, resnorms, info dict).
+    """
+    x = jnp.zeros_like(b) if x0 is None else x0
+    bnorm = float(jnp.linalg.norm(b))
+    if bnorm == 0:
+        bnorm = 1.0
+    fn = jax.jit(functools.partial(
+        plcg_scan, matvec, l=l, iters=maxiter + l + 1, sigma=tuple(sigma),
+        tol=tol, prec=prec, exploit_symmetry=exploit_symmetry, unroll=unroll))
+    resnorms: list[float] = []
+    restarts = breakdowns = 0
+    total_k = 0
+    converged = False
+    while total_k < maxiter:
+        out = fn(b, x)
+        seg = [float(r) for r in out.resnorms if r > 0]
+        resnorms.extend(seg)
+        x = out.x
+        k = int(out.k_done) + 1
+        total_k += max(k, 1)
+        if bool(out.converged):
+            converged = True
+            break
+        if bool(out.breakdown):
+            breakdowns += 1
+            if resnorms and resnorms[-1] <= 4 * tol * bnorm:
+                converged = True          # happy breakdown at tolerance
+                break
+            if restarts >= max_restarts:
+                break
+            restarts += 1
+            continue
+        break                             # iteration budget exhausted
+    return x, resnorms, {
+        "converged": converged, "breakdowns": breakdowns,
+        "restarts": restarts, "iterations": total_k,
+    }

@@ -1,0 +1,122 @@
+"""Deep-pipelined GMRES p(l)-GMRES (Ghysels et al.) -- paper Alg. 1.
+
+Full-storage reference implementation.  Two roles in this repo:
+
+1. derivation cross-check: p(l)-CG (Alg. 2) is derived from this algorithm
+   by exploiting symmetry; for SPD systems the Hessenberg matrix produced
+   here must be tridiagonal and the FOM-mode iterates (Remark 6) must match
+   p(l)-CG / classic CG;
+2. storage comparison: p(l)-GMRES keeps *all* basis vectors (O(i) memory,
+   Table 1) versus p(l)-CG's 3l+2 window -- quantified in the benchmarks.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence
+
+import numpy as np
+
+from .linop import LinearOperator
+from .results import SolveResult
+from .shifts import chebyshev_shifts
+
+
+def plgmres(
+    A: LinearOperator,
+    b: np.ndarray,
+    x0: Optional[np.ndarray] = None,
+    *,
+    l: int = 1,
+    m: int = 50,
+    sigma: Optional[Sequence[float]] = None,
+    spectrum: Optional[tuple] = None,
+    mode: str = "gmres",          # 'gmres' (least squares) or 'fom' (Remark 6)
+) -> SolveResult:
+    """Run m iterations of p(l)-GMRES and return x_m (no restarts)."""
+    if sigma is None:
+        lmin, lmax = spectrum if spectrum is not None else (0.0, 8.0)
+        sigma = chebyshev_shifts(lmin, lmax, l)
+    sigma = list(sigma)
+    n = A.n
+    x = np.zeros(n) if x0 is None else np.asarray(x0, dtype=float)
+    N = m + l + 2
+    V = np.zeros((N, n))
+    Z = np.zeros((N, n))
+    G = np.zeros((N, N))
+    H = np.zeros((N, N))
+
+    r0 = b - A @ x
+    beta = float(np.linalg.norm(r0))
+    if beta == 0.0:
+        return SolveResult(x=x, resnorms=[0.0], iters=0, converged=True,
+                           info={"method": f"p({l})-GMRES"})
+    V[0] = r0 / beta
+    Z[0] = V[0]
+    G[0, 0] = 1.0
+    breakdown_at = None
+    n_v = 1                        # number of finalized v basis vectors
+
+    for i in range(m + l):
+        # (K1) SPMV
+        znew = A @ Z[i]
+        if i < l:
+            znew = znew - sigma[i] * Z[i]
+        if i >= l:
+            c = i - l + 1          # new basis vector index
+            # lines 7-8: finalize column c of G
+            for j in range(max(0, c - l + 1), c):
+                s = float(G[:j, j] @ G[:j, c])
+                G[j, c] = (G[j, c] - s) / G[j, j]
+            arg = G[c, c] - float(G[:c, c] @ G[:c, c])
+            if arg <= 0.0:
+                breakdown_at = i
+                break
+            G[c, c] = math.sqrt(arg)
+            # lines 10-15: Hessenberg column col = i-l
+            col = i - l
+            if i < 2 * l:
+                for j in range(0, i - l + 1):
+                    s = float(H[j, :col] @ G[:col, col])
+                    H[j, col] = (G[j, col + 1] + sigma[col] * G[j, col] - s) / G[col, col]
+                H[col + 1, col] = G[col + 1, col + 1] / G[col, col]
+            else:
+                for j in range(0, i - l + 1):
+                    s1 = sum(G[j, k + l] * H[k, i - 2 * l] for k in range(0, i - 2 * l + 2))
+                    s2 = float(H[j, :col] @ G[:col, col])
+                    H[j, col] = (s1 - s2) / G[col, col]
+                H[col + 1, col] = G[col + 1, col + 1] * H[i - 2 * l + 1, i - 2 * l] / G[col, col]
+            # line 17: extend V
+            V[c] = (Z[c] - G[:c, c] @ V[:c]) / G[c, c]
+            n_v = c + 1
+            # line 18: finish the z recurrence
+            znew = (znew - H[: i - l + 1, col] @ Z[l: i + 1]) / H[col + 1, col]
+        Z[i + 1] = znew
+        # line 20: dot products for column i+1
+        if i - l + 1 >= 0:
+            for j in range(0, i - l + 2):
+                G[j, i + 1] = float(Z[i + 1] @ V[j])
+        for j in range(max(0, i - l + 2), i + 2):
+            G[j, i + 1] = float(Z[i + 1] @ Z[j])
+
+    m_eff = min(m, n_v - 1) if breakdown_at is not None else m
+    m_eff = max(m_eff, 1)
+    e1 = np.zeros(m_eff + 1)
+    e1[0] = beta
+    Hm = H[: m_eff + 1, :m_eff]
+    if mode == "gmres":
+        y, *_ = np.linalg.lstsq(Hm, e1, rcond=None)
+        resnorm = float(np.linalg.norm(Hm @ y - e1))
+    elif mode == "fom":
+        y = np.linalg.solve(H[:m_eff, :m_eff], e1[:m_eff])
+        resnorm = float(abs(H[m_eff, m_eff - 1] * y[-1]))
+    else:
+        raise ValueError(f"unknown mode {mode!r}")
+    x_m = x + V[:m_eff].T @ y
+    return SolveResult(
+        x=x_m, resnorms=[beta, resnorm], iters=m_eff,
+        converged=breakdown_at is None,
+        breakdowns=0 if breakdown_at is None else 1,
+        info={"method": f"p({l})-GMRES[{mode}]", "H": H[: m_eff + 1, :m_eff].copy(),
+              "V": V[:n_v].copy(), "G": G[:n_v, :n_v].copy(),
+              "breakdown_at": breakdown_at},
+    )

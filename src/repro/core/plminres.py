@@ -1,0 +1,39 @@
+"""Deep-pipelined MINRES (paper Remark 6).
+
+For symmetric (possibly indefinite) A, running the pipelined Arnoldi
+process of Alg. 1 and replacing the Galerkin solve by the least-squares
+minimization over the Krylov subspace yields a pipelined MINRES: exactly
+``plgmres(mode="gmres")`` specialized by the symmetry simplifications.
+This wrapper exposes it under its proper name and verifies the residual
+optimality property the method guarantees:
+
+    ||b - A x_m||_2 = min_{y} ||b - A (x_0 + V_m y)||_2,
+
+which, unlike p(l)-CG, holds for indefinite systems too.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import numpy as np
+
+from .linop import LinearOperator
+from .plgmres import plgmres
+from .results import SolveResult
+
+
+def plminres(
+    A: LinearOperator,
+    b: np.ndarray,
+    x0: Optional[np.ndarray] = None,
+    *,
+    l: int = 1,
+    m: int = 50,
+    sigma: Optional[Sequence[float]] = None,
+    spectrum: Optional[tuple] = None,
+) -> SolveResult:
+    """m iterations of l-deep pipelined MINRES (symmetric, indefinite OK)."""
+    r = plgmres(A, b, x0, l=l, m=m, sigma=sigma, spectrum=spectrum,
+                mode="gmres")
+    r.info["method"] = f"p({l})-MINRES"
+    return r

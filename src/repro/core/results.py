@@ -1,0 +1,23 @@
+"""Common result record for every Krylov solver in the library."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+Array = Any
+
+
+@dataclasses.dataclass
+class SolveResult:
+    x: Array                      # final iterate
+    resnorms: list                # recursive / implicit residual norm history
+    iters: int                    # number of solution updates performed
+    converged: bool
+    breakdowns: int = 0           # square-root breakdowns encountered (p(l)-CG)
+    restarts: int = 0             # explicit restarts performed after breakdowns
+    true_resnorms: Optional[list] = None   # ||b - A x_j|| when traced
+    info: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def final_resnorm(self):
+        return self.resnorms[-1] if self.resnorms else None

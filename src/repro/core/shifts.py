@@ -1,0 +1,51 @@
+"""Shift choices for the auxiliary Krylov basis Z (paper Remark 3, eq. (8)).
+
+The auxiliary basis vectors are ``z_j = P_l(A) v_{j-l}`` with
+``P_l(t) = prod_{j<l} (t - sigma_j)``.  The conditioning of the basis
+transformation matrix G -- and hence the attainable accuracy of p(l)-CG
+(Sec. 4.2, Lemma 15) -- is governed by ``||P_l(A)||``, which is minimized
+over intervals ``[lmin, lmax]`` containing the spectrum by the roots of the
+degree-l Chebyshev polynomial.
+"""
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+
+def chebyshev_shifts(lmin: float, lmax: float, l: int) -> list[float]:
+    """Roots of the degree-l Chebyshev polynomial on [lmin, lmax] (eq. (8)).
+
+    sigma_i = (lmax+lmin)/2 + (lmax-lmin)/2 * cos((2i+1) pi / (2 l)).
+    """
+    if l < 1:
+        raise ValueError("pipeline depth l must be >= 1")
+    mid = 0.5 * (lmax + lmin)
+    rad = 0.5 * (lmax - lmin)
+    return [mid + rad * math.cos((2 * i + 1) * math.pi / (2 * l)) for i in range(l)]
+
+
+def monomial_shifts(l: int) -> list[float]:
+    """All-zero shifts => monomial basis [v0, A v0, ...]; ill-conditioned
+    quickly (Remark 3).  Exposed for the stability ablations."""
+    return [0.0] * l
+
+
+def ritz_shifts(ritz_values: Sequence[float], l: int) -> list[float]:
+    """Use (a subset of) precomputed Ritz values of A as shifts (Remark 3).
+
+    If more than ``l`` Ritz values are supplied the l extremal-spread
+    Leja-ordered values are used, which is the standard choice for Newton
+    bases (Hoemmen 2010).
+    """
+    vals = sorted(float(v) for v in ritz_values)
+    if len(vals) < l:
+        raise ValueError(f"need at least l={l} Ritz values, got {len(vals)}")
+    # Leja ordering: greedily maximize the product of distances.
+    chosen: list[float] = [max(vals, key=abs)]
+    remaining = [v for v in vals if v is not chosen[0]]
+    while len(chosen) < l:
+        nxt = max(remaining, key=lambda v: math.prod(abs(v - c) for c in chosen))
+        chosen.append(nxt)
+        remaining.remove(nxt)
+    return chosen

@@ -1,0 +1,3 @@
+from .plcg_dist import dist_plcg, dist_plcg_solve, dist_cg, DistPoisson
+
+__all__ = ["dist_plcg", "dist_plcg_solve", "dist_cg", "DistPoisson"]

@@ -1,0 +1,55 @@
+"""Pallas TPU kernel: fused multi-dot -- the (K5) payload of p(l)-CG.
+
+Computes the 2l+1 dot products of one iteration, ``out[k] = <Wrow_k, z>``,
+in a single pass over ``z``: the window matrix W (the stacked sliding-window
+basis vectors) streams through VMEM chunk-by-chunk together with exactly one
+copy of z.  A naive implementation reads z once *per dot*; fusing cuts HBM
+traffic from 2(2l+1)n to (2l+2)n words -- the memory-bound win reported in
+EXPERIMENTS.md SPerf (beyond-paper optimization: the paper fuses the
+*reduction*, we additionally fuse the local reads).
+
+Accumulation across grid steps revisits the same output block (sequential
+TPU grid), the canonical Pallas reduction pattern.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(w_ref, z_ref, o_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    w = w_ref[...].astype(jnp.float32)            # (m, bn)
+    z = z_ref[...].astype(jnp.float32)            # (1, bn)
+    o_ref[...] += (w * z).sum(axis=1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "interpret"))
+def multidot(W, z, *, bn: int = 2048, interpret: bool | None = None):
+    """out (m,) = W (m, n) @ z (n,) in one fused pass (f32 accumulation)."""
+    m, n = W.shape
+    bn = min(bn, n)
+    while n % bn:
+        bn //= 2
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    out = pl.pallas_call(
+        _kernel,
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((m, bn), lambda i: (0, i)),
+            pl.BlockSpec((1, bn), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((m, 1), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, 1), jnp.float32),
+        interpret=interpret,
+    )(W, z.reshape(1, n))
+    return out[:, 0]

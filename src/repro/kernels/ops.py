@@ -1,0 +1,40 @@
+"""Jitted public entry points for the Pallas kernels.
+
+On CPU (this container) the kernels run with ``interpret=True`` -- the
+kernel bodies execute exactly, validating the TPU code path; on TPU they
+compile to Mosaic.  ``use_pallas=False`` falls back to the jnp oracles
+(used by default inside the distributed solver on CPU where interpret-mode
+dispatch overhead would dominate).
+"""
+from __future__ import annotations
+
+import jax
+
+from . import ref
+from .multidot import multidot
+from .stencil2d import stencil2d
+from .window_axpy import window_axpy
+
+
+def stencil2d_apply(x, halo_n, halo_s, halo_w, halo_e, *, use_pallas=None):
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if use_pallas:
+        return stencil2d(x, halo_n, halo_s, halo_w, halo_e)
+    return ref.stencil2d_ref(x, halo_n, halo_s, halo_w, halo_e)
+
+
+def multidot_apply(W, z, *, use_pallas=None):
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if use_pallas:
+        return multidot(W, z)
+    return ref.multidot_ref(W, z)
+
+
+def window_axpy_apply(V, z, g, gcc, *, use_pallas=None):
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if use_pallas:
+        return window_axpy(V, z, g, gcc)
+    return ref.window_axpy_ref(V, z, g, gcc)

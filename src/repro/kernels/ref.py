@@ -1,0 +1,21 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def stencil2d_ref(x, halo_n, halo_s, halo_w, halo_e):
+    up = jnp.concatenate([halo_n.reshape(1, -1).astype(x.dtype), x[:-1]], 0)
+    down = jnp.concatenate([x[1:], halo_s.reshape(1, -1).astype(x.dtype)], 0)
+    left = jnp.concatenate([halo_w.reshape(-1, 1).astype(x.dtype), x[:, :-1]], 1)
+    right = jnp.concatenate([x[:, 1:], halo_e.reshape(-1, 1).astype(x.dtype)], 1)
+    return 4.0 * x - up - down - left - right
+
+
+def multidot_ref(W, z):
+    return (W.astype(jnp.float32) @ z.astype(jnp.float32))
+
+
+def window_axpy_ref(V, z, g, gcc):
+    acc = z.astype(jnp.float32) - g.astype(jnp.float32) @ V.astype(jnp.float32)
+    return (acc / gcc).astype(V.dtype)

@@ -1,0 +1,70 @@
+"""Pallas TPU kernel: 5-point stencil SPMV on a local 2-D subdomain.
+
+This is kernel (K1) of the p(l)-CG iteration (paper Alg. 3): the local part
+of ``y = A x`` for the unscaled Poisson stencil (diag 4, neighbors -1), with
+halo rows/columns received from the 4 mesh neighbors (repro.distributed
+performs the ``ppermute`` exchange; the kernel is purely local).
+
+TPU mapping: the grid tiles the local block over rows; each step holds a
+(bh, W) tile in VMEM plus its row-neighbors, so vertical neighbor access
+never leaves VMEM.  W should be a multiple of 128 (lane width); bh a
+multiple of 8 (f32 sublanes).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(nblocks, xp_ref, xc_ref, xn_ref, hn_ref, hs_ref, hw_ref, he_ref,
+            o_ref):
+    i = pl.program_id(0)
+    xc = xc_ref[...]
+    top_halo = jnp.where(i == 0, hn_ref[...], xp_ref[-1:, :])
+    bot_halo = jnp.where(i == nblocks - 1, hs_ref[...], xn_ref[:1, :])
+    up = jnp.concatenate([top_halo, xc[:-1]], axis=0)
+    down = jnp.concatenate([xc[1:], bot_halo], axis=0)
+    left = jnp.concatenate([hw_ref[...], xc[:, :-1]], axis=1)
+    right = jnp.concatenate([xc[:, 1:], he_ref[...]], axis=1)
+    o_ref[...] = 4.0 * xc - up - down - left - right
+
+
+@functools.partial(jax.jit, static_argnames=("bh", "interpret"))
+def stencil2d(x, halo_n, halo_s, halo_w, halo_e, *, bh: int = 256,
+              interpret: bool | None = None):
+    """y = A_local x with Dirichlet halos.
+
+    x: (H, W) local block; halo_n/halo_s: (W,); halo_w/halo_e: (H,).
+    """
+    H, W = x.shape
+    bh = min(bh, H)
+    while H % bh:
+        bh //= 2
+    nblocks = H // bh
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    dtype = x.dtype
+    hn = halo_n.reshape(1, W).astype(dtype)
+    hs = halo_s.reshape(1, W).astype(dtype)
+    hw = halo_w.reshape(H, 1).astype(dtype)
+    he = halo_e.reshape(H, 1).astype(dtype)
+    kernel = functools.partial(_kernel, nblocks)
+    return pl.pallas_call(
+        kernel,
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec((bh, W), lambda i: (jnp.maximum(i - 1, 0), 0)),
+            pl.BlockSpec((bh, W), lambda i: (i, 0)),
+            pl.BlockSpec((bh, W), lambda i: (jnp.minimum(i + 1, nblocks - 1), 0)),
+            pl.BlockSpec((1, W), lambda i: (0, 0)),
+            pl.BlockSpec((1, W), lambda i: (0, 0)),
+            pl.BlockSpec((bh, 1), lambda i: (i, 0)),
+            pl.BlockSpec((bh, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bh, W), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((H, W), dtype),
+        interpret=interpret,
+    )(x, x, x, hn, hs, hw, he)

@@ -1,0 +1,98 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""SPerf hillclimbing driver: hypothesis -> change -> re-lower -> validate.
+
+Each experiment re-runs one dry-run cell with a code/config knob changed and
+records the three roofline terms under experiments/dryrun/<mesh>/<tag>.json.
+The narrative (hypothesis, napkin math, confirmed/refuted) lives in
+EXPERIMENTS.md SPerf; this script produces the numbers.
+
+  PYTHONPATH=src python -m repro.launch.hillclimb --cell whisper_prefill
+"""
+import argparse
+import json
+import pathlib
+
+from repro.launch.dryrun import OUT_DIR, run_cell
+
+
+def _report(rec, label):
+    if not rec.get("ok") or rec.get("skipped"):
+        print(f"{label}: FAIL {rec.get('error', '')[:200]}")
+        return
+    r = rec["roofline"]
+    print(f"{label}: tc={r['t_compute_s']:.3f} tm={r['t_memory_s']:.3f} "
+          f"tn={r['t_collective_s']:.3f} dom={r['dominant']} "
+          f"mem={rec['memory']['peak_per_device']/1e9:.1f}GB "
+          f"useful={r['model_flops_ratio']:.3f}")
+
+
+def whisper_prefill(out):
+    """Cell: whisper-large-v3 / prefill_32k / single (worst useful-flops
+    ratio, memory-dominated).  Knob: flash tile sizes -- traffic of the
+    streaming KV read scales with nq = S/qb."""
+    from repro.models import flash
+    for qb, kb in [(512, 1024), (1024, 2048), (2048, 4096)]:
+        flash.set_blocks(qb, kb)
+        rec = run_cell("whisper-large-v3", "prefill_32k", "single", out,
+                       force=True, extra_tag=f"qb{qb}_kb{kb}")
+        _report(rec, f"whisper prefill qb={qb} kb={kb}")
+    flash.set_blocks(512, 1024)
+
+
+def mistral_train(out):
+    """Cell: mistral-large-123b / train_4k / multi (most collective-bound).
+    Knob: gradient-accumulation depth -- FSDP weight gathers repeat per
+    microbatch, so halving microbatches should ~halve gather bytes at the
+    cost of 2x activation memory."""
+    for micro in (8, 4, 2):
+        rec = run_cell("mistral-large-123b", "train_4k", "multi", out,
+                       force=True, extra_tag=f"micro{micro}",
+                       step_overrides={"microbatches": micro})
+        _report(rec, f"mistral train micro={micro}")
+
+
+def mistral_train_remat(out):
+    """Same cell, remat policy: 'dots' saves matmul outputs (no recompute of
+    the big einsums in the backward) -- trades memory for a lower compute
+    term and fewer regathers in the rematerialized segments."""
+    for remat in ("full", "dots"):
+        rec = run_cell("mistral-large-123b", "train_4k", "multi", out,
+                       force=True, extra_tag=f"remat_{remat}",
+                       step_overrides={"remat": remat, "microbatches": 8})
+        _report(rec, f"mistral train remat={remat}")
+
+
+def moe_train(out):
+    """Cell: qwen3-moe / train_4k / single (collective-bound MoE).
+    Knob: microbatches (gather amplification) -- same hypothesis family as
+    mistral but with expert all-gathers in the mix."""
+    for micro in (32, 8, 2):
+        rec = run_cell("qwen3-moe-235b-a22b", "train_4k", "single", out,
+                       force=True, extra_tag=f"micro{micro}",
+                       step_overrides={"microbatches": micro})
+        _report(rec, f"qwen3-moe train micro={micro}")
+
+
+CELLS = {
+    "whisper_prefill": whisper_prefill,
+    "mistral_train": mistral_train,
+    "mistral_train_remat": mistral_train_remat,
+    "moe_train": moe_train,
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", choices=list(CELLS) + ["all"], default="all")
+    ap.add_argument("--out", default=str(OUT_DIR))
+    args = ap.parse_args()
+    out = pathlib.Path(args.out)
+    names = list(CELLS) if args.cell == "all" else [args.cell]
+    for n in names:
+        print(f"=== {n} ===", flush=True)
+        CELLS[n](out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,230 @@
+"""Loop-aware static analysis of optimized HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body exactly once,
+which silently undercounts every scan-over-layers model by its depth.  The
+optimized HLO, however, annotates loops with ``known_trip_count`` -- so this
+module re-derives the three roofline inputs by walking the HLO text with
+per-computation execution multipliers:
+
+  * ``flops``            -- 2 * numel(out) * contracted for every dot, inside
+                            fusions included, x trip counts;
+  * ``traffic_bytes``    -- operand+result bytes of every top-level op in an
+                            executable computation (fusion = one kernel, so
+                            its boundary IS the HBM traffic), x trip counts;
+  * ``collective_bytes`` -- result bytes of all-reduce / all-gather /
+                            reduce-scatter / all-to-all / collective-permute,
+                            x trip counts, split per collective type.
+
+Shapes in post-SPMD HLO are per-device, so all numbers are *per-device*.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_OPLINE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(?[^=]*?\)?)\s*([\w\-]+)\((.*)$")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\((.*?)\)\s*->")
+_TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLED = re.compile(r"(?:calls|to_apply|body|condition)=%?([\w.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_OPERANDS = re.compile(r"%([\w.\-]+)")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute", "collective-broadcast")
+_NO_TRAFFIC = {"parameter", "constant", "get-tuple-element", "tuple",
+               "bitcast", "after-all", "add-dependency", "partition-id",
+               "replica-id", "opt-barrier"}
+
+
+def _shape_elems(type_str: str) -> List[Tuple[str, int]]:
+    out = []
+    for dt, dims in _SHAPE.findall(type_str):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        out.append((dt, n))
+    return out
+
+
+def shape_bytes(type_str: str) -> int:
+    return sum(n * DTYPE_BYTES[dt] for dt, n in _shape_elems(type_str))
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str                      # operand list + attributes
+    operands: List[str]
+    called: List[str]
+    trip: Optional[int]
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    params: Dict[str, str]         # param name -> type str
+    ops: List[Op]
+
+
+_COMMENT = re.compile(r"/\*.*?\*/")
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        line = _COMMENT.sub("", line)
+        if cur is None:
+            m = _COMP_HDR.match(line.strip()) if "{" in line else None
+            if m and "->" in line:
+                params = {}
+                for pm in re.finditer(r"([\w.\-]+):\s*((?:\([^)]*\)|[^,]+))",
+                                      m.group(2)):
+                    params[pm.group(1)] = pm.group(2)
+                cur = Computation(m.group(1), params, [])
+            continue
+        s = line.strip()
+        if s == "}" or s.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _OPLINE.match(line)
+        if not m:
+            continue
+        name, type_str, opcode, rest = m.groups()
+        # operand segment = up to the matching close paren at depth 0
+        depth, end = 1, len(rest)
+        for idx, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = idx
+                    break
+        operand_seg, attr_seg = rest[:end], rest[end:]
+        operands = _OPERANDS.findall(operand_seg)
+        called = _CALLED.findall(attr_seg)
+        bm = _BRANCHES.search(attr_seg)
+        if bm:
+            called += _OPERANDS.findall(bm.group(1))
+        tm = _TRIP.search(attr_seg)
+        cur.ops.append(Op(name, type_str, opcode, rest, operands, called,
+                          int(tm.group(1)) if tm else None))
+    return comps
+
+
+@dataclasses.dataclass
+class HLOStats:
+    flops: float = 0.0
+    traffic_bytes: float = 0.0
+    collective_bytes: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: collections.defaultdict(float))
+    collective_counts: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: collections.defaultdict(float))
+    dot_flops_by_comp: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+
+def _dot_flops(op: Op, symtab: Dict[str, str]) -> float:
+    out = _shape_elems(op.type_str)
+    out_elems = sum(n for _, n in out)
+    lhs = symtab.get(op.operands[0]) if op.operands else None
+    if lhs is None:
+        return 0.0
+    cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.rest)
+    dims = []
+    sm = _SHAPE.search(lhs)
+    if sm:
+        dims = [int(d) for d in sm.group(2).split(",") if d]
+    contracted = 1
+    if cm:
+        for ci in cm.group(1).split(","):
+            if ci and int(ci) < len(dims):
+                contracted *= dims[int(ci)]
+    return 2.0 * out_elems * contracted
+
+
+def analyze(text: str) -> HLOStats:
+    comps = parse_hlo(text)
+    entry = None
+    for name in comps:
+        if name.startswith("main") or ".main" in name or entry is None:
+            if entry is None or "main" in name:
+                entry = name
+    # call-graph multipliers
+    mult: Dict[str, float] = collections.defaultdict(float)
+    fusion_internal: set = set()
+    mult[entry] = 1.0
+    order = [entry]
+    seen = {entry}
+    # BFS through the call graph, propagating execution multipliers
+    i = 0
+    while i < len(order):
+        cname = order[i]
+        i += 1
+        comp = comps.get(cname)
+        if comp is None:
+            continue
+        for op in comp.ops:
+            factor = float(op.trip) if (op.opcode == "while" and op.trip) else 1.0
+            for callee in op.called:
+                if callee not in comps:
+                    continue
+                if op.opcode == "fusion":
+                    fusion_internal.add(callee)
+                if op.opcode == "while" and callee.endswith(
+                        tuple(f"{k}" for k in ())):
+                    pass
+                extra = mult[cname] * (factor if op.opcode == "while" else 1.0)
+                mult[callee] += extra
+                if callee not in seen:
+                    seen.add(callee)
+                    order.append(callee)
+
+    stats = HLOStats()
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        symtab = dict(comp.params)
+        for op in comp.ops:
+            symtab[op.name] = op.type_str
+        comp_dot = 0.0
+        for op in comp.ops:
+            if op.opcode in ("dot", "convolution"):
+                comp_dot += _dot_flops(op, symtab)
+            if cname in fusion_internal:
+                continue                      # traffic counted at call site
+            if op.opcode in _NO_TRAFFIC or op.opcode == "while":
+                continue
+            out_b = shape_bytes(op.type_str)
+            in_b = sum(shape_bytes(symtab.get(o, "")) for o in op.operands)
+            stats.traffic_bytes += m * (out_b + in_b)
+            for coll in COLLECTIVES:
+                if op.opcode == coll or op.opcode == coll + "-start":
+                    stats.collective_bytes[coll] += m * out_b
+                    stats.collective_counts[coll] += m
+        if comp_dot:
+            stats.flops += m * comp_dot
+            stats.dot_flops_by_comp[cname] = m * comp_dot
+    return stats

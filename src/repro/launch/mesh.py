@@ -1,0 +1,33 @@
+"""Production mesh construction (single-pod v5e-256 and 2-pod 512-chip).
+
+Defined as functions (never module-level constants) so importing this
+module does not touch jax device state.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_mesh_for(devices: int, model_parallel: int = 1, pods: int = 1):
+    """Generic mesh helper for examples/tests on arbitrary device counts."""
+    data = devices // (model_parallel * pods)
+    if pods > 1:
+        return jax.make_mesh((pods, data, model_parallel),
+                             ("pod", "data", "model"),
+                             axis_types=(AxisType.Auto,) * 3)
+    return jax.make_mesh((data, model_parallel), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)
+
+
+def make_solver_mesh(*, multi_pod: bool = False):
+    """Flat 2-D processor grid for the distributed p(l)-CG solver: the
+    Poisson domain is decomposed over ("data","model") as a (16,16) (or
+    (32,16) across pods) grid of subdomains."""
+    return make_production_mesh(multi_pod=multi_pod)

@@ -1,0 +1,91 @@
+"""Assigned input shapes and abstract input specs per (arch x shape) cell.
+
+Shapes (LM family, seq_len x global_batch):
+  train_4k     4,096 x 256    (training       -> train_step)
+  prefill_32k  32,768 x 32    (inference      -> prefill step)
+  decode_32k   32,768 x 128   (decode: 1 new token, KV cache of seq_len)
+  long_500k    524,288 x 1    (long-context decode; sub-quadratic archs only)
+
+``input_specs`` returns ShapeDtypeStructs with shardings attached (the
+dry-run's stand-ins: weak-type-correct, shardable, no device allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import abstract_caches, cache_shardings
+from repro.models.config import ModelConfig
+from repro.models import sharding as shd
+
+SHAPES = {
+    "train_4k": dict(seq=4096, batch=256, kind="train"),
+    "prefill_32k": dict(seq=32768, batch=32, kind="prefill"),
+    "decode_32k": dict(seq=32768, batch=128, kind="decode"),
+    "long_500k": dict(seq=524288, batch=1, kind="decode"),
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape_name: str) -> tuple[bool, str]:
+    if shape_name == "long_500k" and not cfg.subquadratic:
+        return False, ("pure full-attention architecture: O(L^2) attention at "
+                       "524k tokens is not runnable; long_500k is assigned to "
+                       "SSM/hybrid archs only (see DESIGN.md)")
+    return True, ""
+
+
+def _sds(shape, dtype, logical):
+    sh = shd.sharding_for(logical, shape)
+    if sh is None:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sh)
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> dict:
+    """Abstract model inputs for one cell.  For decode shapes this includes
+    the KV/state caches (the serve_step signature is (params, batch, caches,
+    pos))."""
+    info = SHAPES[shape_name]
+    B, S = info["batch"], info["seq"]
+    kind = info["kind"]
+    dt = jnp.dtype(cfg.compute_dtype)
+
+    def token_batch(b, s):
+        out = {}
+        if cfg.family == "encdec":
+            out["frames"] = _sds((b, s, cfg.d_model), dt, ("batch", "seq", None))
+            out["tokens"] = _sds((b, s), jnp.int32, ("batch", "seq"))
+        elif cfg.embeds_input:
+            out["embeds"] = _sds((b, s, cfg.d_model), dt, ("batch", "seq", None))
+            out["labels"] = _sds((b, s), jnp.int32, ("batch", "seq"))
+            if cfg.rope_style == "mrope":
+                out["positions"] = _sds((3, b, s), jnp.int32,
+                                        (None, "batch", "seq"))
+        else:
+            out["tokens"] = _sds((b, s), jnp.int32, ("batch", "seq"))
+        return out
+
+    if kind in ("train", "prefill"):
+        return {"batch": token_batch(B, S)}
+
+    # decode: one new token against caches of length S
+    caches = abstract_caches(cfg, B, S, enc_len=S if cfg.family == "encdec" else 0)
+    cshard = cache_shardings(cfg, B, S, enc_len=S if cfg.family == "encdec" else 0)
+    caches = jax.tree.map(
+        lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s)
+        if s is not None else a, caches, cshard)
+    tok = {}
+    if cfg.family == "encdec":
+        tok["frames"] = _sds((B, 1, cfg.d_model), dt, ("batch", None, None))
+        tok["tokens"] = _sds((B, 1), jnp.int32, ("batch", None))
+    elif cfg.embeds_input:
+        tok["embeds"] = _sds((B, 1, cfg.d_model), dt, ("batch", None, None))
+        if cfg.rope_style == "mrope":
+            tok["positions"] = _sds((3, B, 1), jnp.int32, (None, "batch", None))
+    else:
+        tok["tokens"] = _sds((B, 1), jnp.int32, ("batch", None))
+    return {"batch": tok, "caches": caches,
+            "pos": jax.ShapeDtypeStruct((), jnp.int32)}

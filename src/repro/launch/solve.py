@@ -1,0 +1,116 @@
+"""Solver launcher: the paper's own workload -- distributed p(l)-CG Poisson
+solves on the device mesh.
+
+  PYTHONPATH=src python -m repro.launch.solve --nx 200 --l 2 --tol 1e-5
+  PYTHONPATH=src python -m repro.launch.solve --dryrun            # 16x16 mesh
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--nx", type=int, default=200)
+    ap.add_argument("--ny", type=int, default=0)
+    ap.add_argument("--l", type=int, default=2)
+    ap.add_argument("--iters", type=int, default=1500)
+    ap.add_argument("--tol", type=float, default=1e-5)
+    ap.add_argument("--dryrun", action="store_true",
+                    help="lower+compile on the production 16x16 (or 2x16x16 "
+                    "with --multi-pod) mesh and report roofline terms")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.dryrun:
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core.shifts import chebyshev_shifts
+    from repro.distributed import DistPoisson, dist_plcg
+    from repro.distributed.plcg_dist import dist_plcg_solve
+    from repro.launch.mesh import make_mesh_for, make_solver_mesh
+
+    ny = args.ny or args.nx
+    sigma = chebyshev_shifts(0.0, 8.0, args.l)
+
+    if args.dryrun:
+        from repro.launch import hlo_analysis
+        from repro.launch.dryrun import HBM_BW, ICI_BW, PEAK_FLOPS
+        mesh = make_solver_mesh(multi_pod=args.multi_pod)
+        # the solver mesh is a flat 2-D processor grid; multi-pod folds the
+        # pod axis into rows (32 x 16 subdomains)
+        if args.multi_pod:
+            import jax as _j
+            mesh = _j.make_mesh((32, 16), ("data", "model"),
+                                axis_types=(_j.sharding.AxisType.Auto,) * 2)
+        px, py = mesh.shape["data"], mesh.shape["model"]
+        nx = max(args.nx, px * 128)       # production-scale local blocks
+        nyy = max(ny, py * 128)
+        op = DistPoisson(nx, nyy, mesh)
+        b = jax.ShapeDtypeStruct((nx, nyy), jnp.float32)
+        t0 = time.time()
+        fn = lambda bb: dist_plcg(op, bb, l=args.l, iters=args.iters,  # noqa: E731
+                                  sigma=sigma, tol=args.tol)
+        lowered = jax.jit(fn).lower(b)
+        compiled = lowered.compile()
+        ma = compiled.memory_analysis()
+        st = hlo_analysis.analyze(compiled.as_text())
+        rec = {
+            "arch": "poisson2d", "mesh": "multi" if args.multi_pod else "single",
+            "grid": [nx, nyy], "l": args.l, "iters": args.iters,
+            "compile_s": round(time.time() - t0, 1),
+            "memory": {"peak_per_device":
+                       ma.argument_size_in_bytes + ma.temp_size_in_bytes},
+            "hlo": {"flops_per_device": st.flops,
+                    "traffic_bytes_per_device": st.traffic_bytes,
+                    "collective_bytes": dict(st.collective_bytes),
+                    "collective_counts": dict(st.collective_counts)},
+            "roofline": {
+                "t_compute_s": st.flops / PEAK_FLOPS,
+                "t_memory_s": st.traffic_bytes / HBM_BW,
+                "t_collective_s": st.total_collective_bytes / ICI_BW,
+            },
+        }
+        out = pathlib.Path("experiments/dryrun/solver")
+        out.mkdir(parents=True, exist_ok=True)
+        name = f"poisson2d__{'multi' if args.multi_pod else 'single'}__l{args.l}.json"
+        (out / name).write_text(json.dumps(rec, indent=1))
+        print(json.dumps(rec["roofline"], indent=1))
+        print("memory/device GB:",
+              rec["memory"]["peak_per_device"] / 1e9)
+        return rec
+
+    # real solve on available devices
+    ndev = len(jax.devices())
+    mp = 1
+    while mp * mp <= ndev and ny % mp == 0:
+        mp *= 2
+    mp //= 2
+    mesh = make_mesh_for(ndev, model_parallel=max(mp, 1))
+    op = DistPoisson(args.nx, ny, mesh)
+    A_rows = 4.0
+    xs = np.ones((args.nx, ny))
+    # b = A @ 1 (interior nodes see 4 - #neighbors)
+    from repro.operators import poisson2d
+    A = poisson2d(args.nx, ny)
+    b = jnp.asarray((A @ xs.reshape(-1)).reshape(args.nx, ny))
+    t0 = time.time()
+    x, resn, info = dist_plcg_solve(op, b, l=args.l, maxiter=args.iters,
+                                    sigma=sigma, tol=args.tol)
+    x = np.asarray(x)
+    dt = time.time() - t0
+    res = np.linalg.norm((A @ xs.reshape(-1)) - (A @ x.reshape(-1)))
+    print(f"p({args.l})-CG on {args.nx}x{ny} over {ndev} devices: "
+          f"{len(resn)} iters, {dt:.2f}s, |b-Ax| = {res:.3e}, "
+          f"converged={info['converged']}, restarts={info['restarts']}")
+    return x
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""Step builders: train_step / prefill_step / decode_step used by the
+trainer, the server, and the multi-pod dry-run."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import loss_fn, prefill, decode_step, param_shardings
+from repro.models import sharding as shd
+from repro.models.config import ModelConfig
+from repro.training.optim import AdamWConfig, adamw_update
+
+
+def build_train_step(cfg: ModelConfig, ocfg: AdamWConfig, *,
+                     remat: str = "full", block_skip: bool = False,
+                     microbatches: int = 1):
+    """Full training step: (micro-batched) fwd+bwd, gradient accumulation,
+    AdamW update.  ``microbatches > 1`` bounds activation memory to one
+    microbatch (standard large-model practice; the f32 accumulator is
+    sharded like the params)."""
+    def constrain_like_params(tree):
+        if shd.get_mesh() is None:
+            return tree
+        # keep stacked per-layer gradients sharded like the params: an
+        # unconstrained backward-scan accumulator materializes replicated
+        return jax.tree.map(jax.lax.with_sharding_constraint, tree,
+                            param_shardings(cfg))
+
+    def grad_fn(params, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, batch, remat=remat,
+                              block_skip=block_skip))(params)
+        return loss, constrain_like_params(grads)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            loss, grads = grad_fn(params, batch)
+        else:
+            mb_batch = jax.tree.map(
+                lambda a: a.reshape((a.shape[0], microbatches,
+                                     a.shape[1] // microbatches)
+                                    + a.shape[2:]).swapaxes(0, 1)
+                if a.ndim >= 2 and a.shape[0] == 3          # mrope positions
+                else a.reshape((microbatches, a.shape[0] // microbatches)
+                               + a.shape[1:]), batch)
+
+            def mb_body(acc, mb):
+                loss, grads = grad_fn(params, mb)
+                acc = jax.tree.map(lambda a, g: a + g.astype(a.dtype),
+                                   acc, grads)
+                return constrain_like_params(acc), loss
+
+            acc0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                params)
+            acc0 = constrain_like_params(acc0)
+            acc, losses = jax.lax.scan(mb_body, acc0, mb_batch)
+            grads = jax.tree.map(
+                lambda a, p: (a / microbatches).astype(p.dtype), acc, params)
+            loss = losses.mean()
+        new_params, new_opt = adamw_update(params, grads, opt_state, ocfg)
+        new_params = constrain_like_params(new_params)
+        return new_params, new_opt, {"loss": loss}
+    return train_step
+
+
+def build_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        logits, caches = prefill(cfg, params, batch)
+        return logits[:, -1:], caches
+    return prefill_step
+
+
+def build_decode_step(cfg: ModelConfig):
+    def serve_step(params, batch, caches, pos):
+        logits, caches = decode_step(cfg, params, batch, caches, pos)
+        # greedy token for the serving loop; logits stay available
+        next_tok = jnp.argmax(logits[:, -1], axis=-1)
+        return next_tok, logits, caches
+    return serve_step

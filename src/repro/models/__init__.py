@@ -1,0 +1,11 @@
+from .config import ModelConfig, MoEConfig, SSMConfig, HybridConfig, reduced
+from .schema import abstract_params, init_params, param_shardings, model_schema
+from .transformer import (forward, loss_fn, prefill, decode_step, init_caches,
+                          abstract_caches, cache_shardings, cache_spec)
+
+__all__ = [
+    "ModelConfig", "MoEConfig", "SSMConfig", "HybridConfig", "reduced",
+    "abstract_params", "init_params", "param_shardings", "model_schema",
+    "forward", "loss_fn", "prefill", "decode_step", "init_caches",
+    "abstract_caches", "cache_shardings", "cache_spec",
+]

@@ -1,0 +1,162 @@
+"""Model configuration schema for the architecture zoo.
+
+One :class:`ModelConfig` describes any of the 10 assigned architectures
+(dense / MoE / SSM / hybrid / enc-dec / VLM-backbone / audio-backbone).
+Reduced smoke-test variants are produced with :func:`reduced`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_ff_expert: int
+    dense_residual: bool = False       # arctic-style parallel dense MLP
+    d_ff_dense: int = 0
+    capacity_factor: float = 1.0
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64                 # mamba2 P (headdim)
+    chunk: int = 128                   # SSD chunk length
+    n_groups: int = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class HybridConfig:
+    window: int = 2048                 # local attention window
+    pattern: Tuple[str, ...] = ("rglru", "rglru", "attn")   # Griffin 1:2
+    lru_width: Optional[int] = None    # defaults to d_model
+    conv_width: int = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    arch_id: str
+    family: str                        # dense|moe|ssm|hybrid|encdec|vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None     # default d_model // n_heads
+    # --- attention details -------------------------------------------------
+    rope_style: str = "full"           # full | partial | mrope | none
+    rope_theta: float = 1e6
+    rotary_pct: float = 1.0            # chatglm: 0.5 ("RoPE 2d")
+    mrope_sections: Tuple[int, int, int] = (16, 24, 24)
+    qk_norm: bool = False              # qwen3
+    qkv_bias: bool = False             # qwen1.5 / qwen2-vl / chatglm
+    causal: bool = True
+    # --- family-specific ----------------------------------------------------
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    hybrid: Optional[HybridConfig] = None
+    n_enc_layers: int = 0              # whisper encoder depth
+    # --- embeddings / io -----------------------------------------------------
+    tie_embeddings: bool = False
+    embeds_input: bool = False         # vlm/audio stub frontend: embeddings in
+    norm_eps: float = 1e-6
+    # --- numerics ------------------------------------------------------------
+    param_dtype: str = "bfloat16"
+    compute_dtype: str = "bfloat16"
+    # --- long-context capability (drives long_500k applicability) -----------
+    subquadratic: bool = False
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim if self.head_dim is not None else self.d_model // self.n_heads
+
+    def num_params(self) -> int:
+        """Analytic parameter count (embeddings + per-layer weights)."""
+        d, hd = self.d_model, self.hd
+        emb = self.vocab * d * (1 if self.tie_embeddings else 2)
+        per_layer = 0
+        if self.family in ("dense", "moe", "vlm"):
+            attn = d * (self.n_heads * hd) + 2 * d * (self.n_kv * hd) + (self.n_heads * hd) * d
+            per_layer = attn
+            if self.moe:
+                router = d * self.moe.num_experts
+                experts = self.moe.num_experts * 3 * d * self.moe.d_ff_expert
+                per_layer += router + experts
+                if self.moe.dense_residual:
+                    per_layer += 3 * d * self.moe.d_ff_dense
+            else:
+                per_layer += 3 * d * self.d_ff
+        elif self.family == "ssm":
+            s = self.ssm
+            d_in = s.expand * d
+            nheads = d_in // s.head_dim
+            per_layer = d * (2 * d_in + 2 * s.n_groups * s.d_state + nheads) + d_in * d
+        elif self.family == "hybrid":
+            h = self.hybrid
+            lw = h.lru_width or d
+            attn = d * (self.n_heads * hd) + 2 * d * (self.n_kv * hd) + (self.n_heads * hd) * d
+            rglru = 2 * d * lw + lw * d + 2 * lw * lw // 8   # approx gates
+            n_attn = sum(1 for i in range(self.n_layers)
+                         if h.pattern[i % len(h.pattern)] == "attn")
+            per_layer = 0
+            total = (n_attn * (attn + 3 * d * self.d_ff)
+                     + (self.n_layers - n_attn) * (rglru + 3 * d * self.d_ff))
+            return emb + total
+        elif self.family == "encdec":
+            attn = d * (self.n_heads * hd) + 2 * d * (self.n_kv * hd) + (self.n_heads * hd) * d
+            enc = self.n_enc_layers * (attn + 2 * d * self.d_ff)
+            dec = self.n_layers * (2 * attn + 2 * d * self.d_ff)
+            return emb + enc + dec
+        return emb + self.n_layers * per_layer
+
+    def num_active_params(self) -> int:
+        """Active parameters per token (MoE: top-k experts only)."""
+        if not self.moe:
+            return self.num_params()
+        d = self.d_model
+        total = self.num_params()
+        experts_all = self.n_layers * self.moe.num_experts * 3 * d * self.moe.d_ff_expert
+        experts_act = self.n_layers * self.moe.top_k * 3 * d * self.moe.d_ff_expert
+        return total - experts_all + experts_act
+
+
+def reduced(cfg: ModelConfig, **overrides) -> ModelConfig:
+    """Smoke-test-sized variant of the same family (tiny dims, same wiring)."""
+    small: dict = dict(
+        n_layers=min(cfg.n_layers, 4 if cfg.family != "hybrid" else 5),
+        d_model=128,
+        n_heads=4,
+        n_kv=min(cfg.n_kv, 2) if cfg.n_kv < cfg.n_heads else 4,
+        head_dim=32,
+        d_ff=256,
+        vocab=512,
+        param_dtype="float32",
+        compute_dtype="float32",
+    )
+    if cfg.moe:
+        # capacity high enough that no token drops: keeps the smoke tests'
+        # train/prefill/decode consistency exact (production uses 1.0)
+        small["moe"] = MoEConfig(
+            num_experts=8, top_k=min(cfg.moe.top_k, 2), d_ff_expert=64,
+            dense_residual=cfg.moe.dense_residual, d_ff_dense=128,
+            capacity_factor=16.0)
+    if cfg.ssm:
+        small["ssm"] = SSMConfig(d_state=16, d_conv=4, expand=2, head_dim=16,
+                                 chunk=16, n_groups=1)
+    if cfg.hybrid:
+        small["hybrid"] = HybridConfig(window=32, pattern=cfg.hybrid.pattern,
+                                       lru_width=128, conv_width=4)
+    if cfg.family == "encdec":
+        small["n_enc_layers"] = 2
+        small["n_layers"] = 2
+    if cfg.rope_style == "mrope":
+        # sections must sum to head_dim//2 (pairs)
+        small["mrope_sections"] = (4, 6, 6)
+    small.update(overrides)
+    return dataclasses.replace(cfg, **small)

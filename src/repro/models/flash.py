@@ -1,0 +1,164 @@
+"""Flash attention in pure JAX with a custom VJP.
+
+Forward: online-softmax streaming over (q-block, kv-block) tiles; saves only
+(out, lse) besides the inputs.  Backward: second tiled sweep recomputing the
+block probabilities -- O(qb*kb) live memory, no stacked scan residuals
+(a plain lax.scan backward would stack its carries, reproducing the full
+S x T score tensor; that is why this needs a hand-written VJP).
+
+This is the TPU-shaped algorithm (MXU-aligned tiles, f32 accumulators); on
+real hardware the same tiling maps 1:1 onto a Pallas kernel.  GQA layout:
+q (B,S,K,G,hd), k/v (B,T,K,hd).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+NEG_INF = float("-inf")
+
+#: default tile sizes -- perf knobs swept in EXPERIMENTS.md SPerf
+_BLOCKS = {"qb": 512, "kb": 1024}
+
+
+def set_blocks(qb: int, kb: int) -> None:
+    _BLOCKS["qb"], _BLOCKS["kb"] = qb, kb
+
+
+def get_blocks() -> tuple:
+    return _BLOCKS["qb"], _BLOCKS["kb"]
+
+
+def _mask(qpos, kpos, causal, window):
+    m = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    if causal:
+        m = m & (kpos[None, :] <= qpos[:, None])
+    if window:
+        m = m & (kpos[None, :] > qpos[:, None] - window)
+    return m
+
+
+def _fwd_impl(q, k, v, causal, window, qb, kb):
+    B, S, K, G, hd = q.shape
+    T = k.shape[1]
+    qb = min(qb, S)
+    kb = min(kb, T)
+    nq, nk = S // qb, T // kb
+    scale = hd ** -0.5
+    qs = q.reshape(B, nq, qb, K, G, hd)
+    ks = k.reshape(B, nk, kb, K, hd)
+    vs = v.reshape(B, nk, kb, K, hd)
+
+    def q_step(_, qi):
+        qblk = qs[:, qi].astype(F32) * scale
+        qpos = qi * qb + jnp.arange(qb)
+        m0 = jnp.full((B, K, G, qb), NEG_INF, F32)
+        l0 = jnp.zeros((B, K, G, qb), F32)
+        a0 = jnp.zeros((B, qb, K, G, hd), F32)
+
+        def kv_step(carry, kj):
+            m, l, acc = carry
+            kblk = ks[:, kj].astype(F32)
+            vblk = vs[:, kj].astype(F32)
+            kpos = kj * kb + jnp.arange(kb)
+            s = jnp.einsum("bskgh,btkh->bkgst", qblk, kblk)
+            s = jnp.where(_mask(qpos, kpos, causal, window), s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            safe = jnp.logical_not(jnp.isinf(m_new))
+            corr = jnp.where(safe, jnp.exp(m - m_new), 0.0)
+            p = jnp.where(safe[..., None], jnp.exp(s - m_new[..., None]), 0.0)
+            l_new = l * corr + p.sum(axis=-1)
+            a_new = (acc * corr.transpose(0, 3, 1, 2)[..., None]
+                     + jnp.einsum("bkgst,btkh->bskgh", p, vblk))
+            return (m_new, l_new, a_new), None
+
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(nk))
+        lt = l.transpose(0, 3, 1, 2)[..., None]
+        out = acc / jnp.where(lt == 0, 1.0, lt)
+        lse = jnp.where(l > 0, m + jnp.log(jnp.where(l > 0, l, 1.0)), NEG_INF)
+        return None, (out.astype(q.dtype), lse)          # lse: (B,K,G,qb)
+
+    _, (outs, lses) = jax.lax.scan(q_step, None, jnp.arange(nq))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, S, K, G, hd)
+    lse = lses.transpose(1, 2, 3, 0, 4).reshape(B, K, G, S)
+    return out, lse
+
+
+def _bwd_impl(res, dout, causal, window, qb, kb):
+    q, k, v, out, lse = res
+    B, S, K, G, hd = q.shape
+    T = k.shape[1]
+    qb = min(qb, S)
+    kb = min(kb, T)
+    nq, nk = S // qb, T // kb
+    scale = hd ** -0.5
+    qs = q.reshape(B, nq, qb, K, G, hd)
+    ks = k.reshape(B, nk, kb, K, hd)
+    vs = v.reshape(B, nk, kb, K, hd)
+    dos = dout.reshape(B, nq, qb, K, G, hd)
+    lses = lse.reshape(B, K, G, nq, qb)
+    # D_i = rowsum(dout * out)  (B,S,K,G) -> blocked (B,K,G,nq,qb)
+    delta = (dout.astype(F32) * out.astype(F32)).sum(-1)
+    deltas = delta.transpose(0, 2, 3, 1).reshape(B, K, G, nq, qb)
+
+    def q_step(carry, qi):
+        dk_acc, dv_acc = carry
+        qblk = qs[:, qi].astype(F32) * scale
+        doblk = dos[:, qi].astype(F32)
+        lseb = lses[:, :, :, qi]
+        dlt = deltas[:, :, :, qi]
+        qpos = qi * qb + jnp.arange(qb)
+
+        def kv_step(carry2, kj):
+            dq_blk, dk_a, dv_a = carry2
+            kblk = ks[:, kj].astype(F32)
+            vblk = vs[:, kj].astype(F32)
+            kpos = kj * kb + jnp.arange(kb)
+            s = jnp.einsum("bskgh,btkh->bkgst", qblk, kblk)
+            s = jnp.where(_mask(qpos, kpos, causal, window), s, NEG_INF)
+            safe = jnp.logical_not(jnp.isinf(lseb))
+            p = jnp.where(safe[..., None],
+                          jnp.exp(s - jnp.where(safe, lseb, 0.0)[..., None]),
+                          0.0)                           # (B,K,G,qb,kb)
+            dv_a = dv_a.at[:, kj].add(
+                jnp.einsum("bkgst,bskgh->btkh", p, doblk))
+            dp = jnp.einsum("bskgh,btkh->bkgst", doblk, vblk)
+            ds = p * (dp - dlt[..., None])
+            dq_blk = dq_blk + jnp.einsum("bkgst,btkh->bskgh", ds, kblk)
+            # qblk is pre-scaled, so this already carries the 1/sqrt(hd)
+            dk_a = dk_a.at[:, kj].add(
+                jnp.einsum("bkgst,bskgh->btkh", ds, qblk))
+            return (dq_blk, dk_a, dv_a), None
+
+        dq0 = jnp.zeros((B, qb, K, G, hd), F32)
+        (dq_blk, dk_acc, dv_acc), _ = jax.lax.scan(
+            kv_step, (dq0, dk_acc, dv_acc), jnp.arange(nk))
+        return (dk_acc, dv_acc), dq_blk * scale
+
+    dk0 = jnp.zeros((B, nk, kb, K, hd), F32)
+    dv0 = jnp.zeros((B, nk, kb, K, hd), F32)
+    (dk, dv), dqs = jax.lax.scan(q_step, (dk0, dv0), jnp.arange(nq))
+    dq = dqs.transpose(1, 0, 2, 3, 4, 5).reshape(B, S, K, G, hd)
+    return (dq.astype(q.dtype), dk.reshape(B, T, K, hd).astype(k.dtype),
+            dv.reshape(B, T, K, hd).astype(v.dtype))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def flash_attention(q, k, v, causal=True, window=0, qb=512, kb=1024):
+    out, _ = _fwd_impl(q, k, v, causal, window, qb, kb)
+    return out
+
+
+def _fwd_rule(q, k, v, causal, window, qb, kb):
+    out, lse = _fwd_impl(q, k, v, causal, window, qb, kb)
+    return out, (q, k, v, out, lse)
+
+
+def _bwd_rule(causal, window, qb, kb, res, dout):
+    return _bwd_impl(res, dout, causal, window, qb, kb)
+
+
+flash_attention.defvjp(_fwd_rule, _bwd_rule)

@@ -1,0 +1,385 @@
+"""Layer forward math: norms, RoPE variants, attention (direct + blocked
+flash-style), SwiGLU/GeLU MLPs and capacity-based top-k MoE.
+
+Everything is a pure function over param dicts produced by ``schema.py``;
+activations are annotated through ``sharding.constrain`` so the same code
+lowers on one device or on the production mesh.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .flash import flash_attention
+from .sharding import constrain
+
+F32 = jnp.float32
+
+
+def rmsnorm(p: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(F32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * p["scale"].astype(F32)).astype(x.dtype)
+
+
+def _head_rms(scale: jax.Array, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(F32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(F32)).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# rotary embeddings: full / partial (chatglm "2d") / M-RoPE (qwen2-vl)
+# --------------------------------------------------------------------------
+
+def apply_rope(cfg: ModelConfig, x: jax.Array, pos: jax.Array) -> jax.Array:
+    """x: (B, S, Hx, hd); pos: (B, S) int32 or (3, B, S) for mrope."""
+    if cfg.rope_style == "none":
+        return x
+    hd = x.shape[-1]
+    rot = int(hd * (cfg.rotary_pct if cfg.rope_style == "partial" else 1.0))
+    rot -= rot % 2
+    half = rot // 2
+    inv = 1.0 / (cfg.rope_theta ** (jnp.arange(half, dtype=F32) / half))
+    if cfg.rope_style == "mrope":
+        secs = cfg.mrope_sections
+        assert sum(secs) == half, (secs, half)
+        parts, off = [], 0
+        for comp, sec in enumerate(secs):
+            parts.append(pos[comp].astype(F32)[..., None] * inv[off:off + sec])
+            off += sec
+        ang = jnp.concatenate(parts, axis=-1)            # (B, S, half)
+    else:
+        ang = pos.astype(F32)[..., None] * inv           # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    xr, xp = x[..., :rot].astype(F32), x[..., rot:]
+    x1, x2 = xr[..., :half], xr[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return jnp.concatenate([out.astype(x.dtype), xp], axis=-1)
+
+
+# --------------------------------------------------------------------------
+# scaled dot-product attention
+# --------------------------------------------------------------------------
+
+def _direct_sdpa(q, k, v, *, causal, window, q_offset, kv_pos=None,
+                 kv_len=None):
+    """q: (B,S,K,G,hd), k/v: (B,T,K,hd).  Small-S/T path with explicit mask."""
+    B, S, K, G, hd = q.shape
+    T = k.shape[1]
+    scale = hd ** -0.5
+    # preferred_element_type avoids materializing an f32 copy of the whole
+    # KV cache (2x decode HBM in the dry-run)
+    s = jnp.einsum("bskgh,btkh->bkgst", q, k,
+                   preferred_element_type=F32) * scale
+    qpos = q_offset + jnp.arange(S)
+    kpos = kv_pos if kv_pos is not None else jnp.arange(T)
+    mask = jnp.ones((S, T) if kpos.ndim == 1 else (B, S, T), bool)
+    if causal:
+        mask = mask & (kpos[..., None, :] <= qpos[:, None])
+    if window:
+        mask = mask & (kpos[..., None, :] > qpos[:, None] - window)
+    if kv_len is not None:
+        mask = mask & (kpos[..., None, :] < kv_len) & (kpos[..., None, :] >= 0)
+    mask = mask if mask.ndim == 3 else mask[None]
+    s = jnp.where(mask[:, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)          # fully-masked rows
+    out = jnp.einsum("bkgst,btkh->bskgh", p.astype(v.dtype), v,
+                     preferred_element_type=F32)
+    return out.astype(q.dtype)
+
+
+def _blocked_sdpa(q, k, v, *, causal, window, q_block=512, kv_block=1024,
+                  block_skip=False):
+    """Flash-style online-softmax attention, O(q_block*kv_block) memory.
+
+    ``block_skip``: runtime-skip fully-masked kv blocks (beyond-paper perf
+    knob -- removes the 2x causal flop waste; see EXPERIMENTS.md SPerf).
+    """
+    B, S, K, G, hd = q.shape
+    T = k.shape[1]
+    qb = min(q_block, S)
+    kb = min(kv_block, T)
+    nq, nk = S // qb, T // kb
+    assert S % qb == 0 and T % kb == 0, (S, qb, T, kb)
+    scale = hd ** -0.5
+    qs = q.reshape(B, nq, qb, K, G, hd)
+    ks = k.reshape(B, nk, kb, K, hd)
+    vs = v.reshape(B, nk, kb, K, hd)
+
+    def q_step(_, qi):
+        qblk = qs[:, qi].astype(F32) * scale      # (B,qb,K,G,hd)
+        qpos = qi * qb + jnp.arange(qb)
+        m0 = jnp.full((B, K, G, qb), -jnp.inf, F32)
+        l0 = jnp.zeros((B, K, G, qb), F32)
+        a0 = jnp.zeros((B, qb, K, G, hd), F32)
+
+        def kv_step(carry, kj):
+            m, l, acc = carry
+
+            def compute(_):
+                kblk = ks[:, kj].astype(F32)
+                vblk = vs[:, kj].astype(F32)
+                kpos = kj * kb + jnp.arange(kb)
+                s = jnp.einsum("bskgh,btkh->bkgst", qblk, kblk)
+                msk = jnp.ones((qb, kb), bool)
+                if causal:
+                    msk = msk & (kpos[None, :] <= qpos[:, None])
+                if window:
+                    msk = msk & (kpos[None, :] > qpos[:, None] - window)
+                s = jnp.where(msk, s, -jnp.inf)
+                m_new = jnp.maximum(m, s.max(axis=-1))
+                corr = jnp.exp(m - m_new)
+                pexp = jnp.exp(s - m_new[..., None])
+                pexp = jnp.where(jnp.isinf(m_new)[..., None], 0.0, pexp)
+                corr = jnp.where(jnp.isinf(m_new), 0.0, corr)
+                l_new = l * corr + pexp.sum(axis=-1)
+                a_new = (acc * corr.transpose(0, 3, 1, 2)[..., None]
+                         + jnp.einsum("bkgst,btkh->bskgh", pexp, vblk))
+                return m_new, l_new, a_new
+
+            if block_skip and (causal or window):
+                lo_ok = (kj * kb <= qpos[-1]) if causal else True
+                hi_ok = ((kj + 1) * kb - 1 > qpos[0] - window) if window else True
+                live = jnp.logical_and(lo_ok, hi_ok) if window else lo_ok
+                m2, l2, a2 = jax.lax.cond(live, compute,
+                                          lambda _: (m, l, acc), None)
+            else:
+                m2, l2, a2 = compute(None)
+            return (m2, l2, a2), None
+
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(nk))
+        lt = l.transpose(0, 3, 1, 2)[..., None]
+        out = acc / jnp.where(lt == 0, 1.0, lt)
+        return None, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_step, None, jnp.arange(nq))   # (nq,B,qb,K,G,hd)
+    return outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, S, K, G, hd)
+
+
+def attention(cfg: ModelConfig, p: dict, x: jax.Array, *, pos: jax.Array,
+              mode: str = "train", cache: Optional[dict] = None,
+              window: int = 0, kv_states: Optional[jax.Array] = None,
+              causal: Optional[bool] = None, block_skip: bool = False):
+    """Returns (out, new_cache).  modes: train | prefill | decode | cross."""
+    B, S, d = x.shape
+    H, K, hd = cfg.n_heads, cfg.n_kv, cfg.hd
+    G = H // K
+    causal = cfg.causal if causal is None else causal
+
+    q = x @ p["wq"]
+    if "bq" in p:
+        q = q + p["bq"]
+    q = q.reshape(B, S, H, hd)
+    if mode == "cross" and cache is not None and "k" in cache:
+        k, v = cache["k"], cache["v"]        # precomputed encoder K/V
+        new_cache = cache
+    else:
+        src = kv_states if kv_states is not None else x
+        Tk = src.shape[1]
+        k = src @ p["wk"]
+        v = src @ p["wv"]
+        if "bk" in p:
+            k, v = k + p["bk"], v + p["bv"]
+        k = k.reshape(B, Tk, K, hd)
+        v = v.reshape(B, Tk, K, hd)
+        if cfg.qk_norm:
+            k = _head_rms(p["k_norm"], k)
+        if mode != "cross":
+            k = apply_rope(cfg, k, pos)
+        new_cache = {"k": k, "v": v} if mode == "cross" else None
+    if cfg.qk_norm:
+        q = _head_rms(p["q_norm"], q)
+    if mode != "cross":
+        q = apply_rope(cfg, q, pos)
+    q = constrain(q.reshape(B, S, H * hd), ("batch", None, "tp")).reshape(B, S, H, hd)
+    qg = q.reshape(B, S, K, G, hd)
+
+    kv_pos = None
+    kv_len = None
+    if mode == "decode":
+        assert cache is not None and S == 1
+        ln = cache["len"]
+        if "pos" in cache:                    # rolling local-attention window
+            W = cache["k"].shape[1]
+            slot = ln % W
+            knew = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, 1)
+            vnew = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, 1)
+            posn = cache["pos"].at[slot].set(ln)
+            new_cache = {"k": knew, "v": vnew, "pos": posn, "len": ln + 1}
+            k, v, kv_pos = knew, vnew, posn
+            kv_len = ln + 1
+        else:
+            knew = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, ln, 1)
+            vnew = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, ln, 1)
+            new_cache = {"k": knew, "v": vnew, "len": ln + 1}
+            k, v = knew, vnew
+            kv_len = ln + 1
+        out = _direct_sdpa(qg, k, v, causal=causal, window=window,
+                           q_offset=ln, kv_pos=kv_pos, kv_len=kv_len)
+    elif S * k.shape[1] <= 1 << 22:
+        out = _direct_sdpa(qg, k, v, causal=(causal and mode != "cross"),
+                           window=window, q_offset=0)
+    else:
+        # custom-VJP flash attention: O(block) live memory in fwd AND bwd.
+        # Gather the sequence dimension ONCE here -- seq-sharded inputs
+        # would make GSPMD re-gather k/v inside every (q,kv) block step.
+        qg = constrain(qg, ("batch", None, "heads", None, None))
+        k = constrain(k, ("batch", None, "heads", None))
+        v = constrain(v, ("batch", None, "heads", None))
+        from .flash import get_blocks
+        qb, kb = get_blocks()
+        out = flash_attention(qg, k, v, causal and mode != "cross", window,
+                              qb, kb)
+
+    if mode == "prefill" and new_cache is None:
+        if window:
+            # rolling buffer: position p lives at slot p % W so that decode
+            # (slot = len % W) continues seamlessly
+            W = cache["k"].shape[1] if cache is not None else min(window, S)
+            m = min(S, W)
+            pos_keep = jnp.arange(S - m, S)
+            slots = pos_keep % W
+            kb = jnp.zeros((B, W) + k.shape[2:], k.dtype).at[:, slots].set(k[:, S - m:])
+            vb = jnp.zeros((B, W) + v.shape[2:], v.dtype).at[:, slots].set(v[:, S - m:])
+            posarr = jnp.full((W,), -1, jnp.int32).at[slots].set(pos_keep)
+            new_cache = {"k": kb, "v": vb, "pos": posarr, "len": jnp.int32(S)}
+        elif cache is not None and "k" in cache:
+            # write into the pre-allocated decode buffer (may exceed S)
+            kb = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"].astype(k.dtype), k, 0, 1)
+            vb = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"].astype(v.dtype), v, 0, 1)
+            new_cache = {"k": kb, "v": vb, "len": jnp.int32(S)}
+        else:
+            new_cache = {"k": k, "v": v, "len": jnp.int32(S)}
+
+    out = out.reshape(B, S, H * hd)
+    out = constrain(out, ("batch", None, "tp"))
+    return out @ p["wo"], new_cache
+
+
+# --------------------------------------------------------------------------
+# MLPs and MoE
+# --------------------------------------------------------------------------
+
+def mlp_swiglu(p: dict, x: jax.Array) -> jax.Array:
+    gu = x @ p["w_in"]
+    gu = constrain(gu, ("batch", None, "tp"))
+    gate, up = jnp.split(gu, 2, axis=-1)
+    return (jax.nn.silu(gate.astype(F32)).astype(x.dtype) * up) @ p["w_out"]
+
+
+def mlp_gelu(p: dict, x: jax.Array) -> jax.Array:
+    h = x @ p["w_in"] + p["b_in"]
+    h = constrain(h, ("batch", None, "tp"))
+    h = jax.nn.gelu(h.astype(F32)).astype(x.dtype)
+    return h @ p["w_out"] + p["b_out"]
+
+
+def _moe_local(cfg: ModelConfig, router, w_in, w_out, x, n_local: int,
+               e_offset) -> jax.Array:
+    """Token-choice top-k dispatch/compute/combine over ``n_local`` experts
+    whose global ids start at ``e_offset``.  Pure local math (runs on one
+    device inside shard_map, or standalone when unsharded)."""
+    mc = cfg.moe
+    B, S, d = x.shape
+    E, k = mc.num_experts, mc.top_k
+    T = B * S
+    C = max(int(T * k / E * mc.capacity_factor), 1)
+    xt = x.reshape(T, d)
+
+    logits = (xt.astype(F32) @ router.astype(F32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, k)                      # (T, k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    e_flat = idx.reshape(-1)                                 # (T*k,)
+    onehot = jax.nn.one_hot(e_flat, E, dtype=jnp.int32)
+    pos_in_e = (jnp.cumsum(onehot, axis=0) * onehot).sum(-1) - 1
+    local_e = e_flat - e_offset
+    in_local = (local_e >= 0) & (local_e < n_local)
+    keep = in_local & (pos_in_e < C)
+    slot = jnp.where(keep, pos_in_e, C)                      # C = overflow bin
+    eidx = jnp.where(in_local, local_e, 0)
+
+    xrep = jnp.repeat(xt, k, axis=0)                         # (T*k, d)
+    disp = jnp.zeros((n_local, C + 1, d), x.dtype)
+    disp = disp.at[eidx, slot].add(xrep * keep[:, None].astype(x.dtype))
+
+    gu = jnp.einsum("ecd,edf->ecf", disp[:, :C], w_in)
+    g, u = jnp.split(gu, 2, axis=-1)
+    h = jax.nn.silu(g.astype(F32)).astype(x.dtype) * u
+    eout = jnp.einsum("ecf,efd->ecd", h, w_out)
+
+    eout = jnp.concatenate([eout, jnp.zeros((n_local, 1, d), x.dtype)], axis=1)
+    back = eout[eidx, slot]                                  # (T*k, d)
+    back = back * (keep * gate.reshape(-1)).astype(x.dtype)[:, None]
+    y = back.reshape(T, k, d).sum(axis=1)
+    return y.reshape(B, S, d)
+
+
+def moe_layer(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
+    """Top-k token-choice MoE with static per-expert capacity (dropping).
+
+    Expert parallelism is expressed with an explicit ``shard_map`` over the
+    "model" axis: each device routes its (data-sharded) tokens to its E/ep
+    local experts and the partial outputs are combined with one
+    ``psum_scatter`` (sequence-sharded output, matching the seq_act residual
+    boundary).  A GSPMD scatter formulation replicated the (E, C, d)
+    dispatch buffers -- 7.6 TB/device for arctic train_4k in the dry-run.
+    """
+    from . import sharding as shd
+    import jax as _jax
+    from jax.sharding import PartitionSpec as P
+
+    mesh = shd.get_mesh()
+    E = cfg.moe.num_experts
+    if (mesh is None or "model" not in mesh.shape
+            or E % mesh.shape["model"]):
+        return _moe_local(cfg, p["router"], p["w_in"], p["w_out"], x, E, 0)
+
+    ep = mesh.shape["model"]
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    B, S, d = x.shape
+    scatter_ok = S % ep == 0
+
+    def local_fn(xb, router, w_in, w_out):
+        j = _jax.lax.axis_index("model")
+        y = _moe_local(cfg, router, w_in, w_out, xb, E // ep, j * (E // ep))
+        if scatter_ok:
+            return _jax.lax.psum_scatter(y, "model", scatter_dimension=1,
+                                         tiled=True)
+        return _jax.lax.psum(y, "model")
+
+    bspec = batch_axes if len(batch_axes) > 1 else (batch_axes[0] if batch_axes else None)
+    out_spec = P(bspec, "model" if scatter_ok else None, None)
+    fn = _jax.shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(P(bspec, None, None), P(None, None),
+                  P("model", None, None), P("model", None, None)),
+        out_specs=out_spec,
+        check_vma=False,
+    )
+    return fn(x, p["router"], p["w_in"], p["w_out"])
+
+
+def lm_logits(cfg: ModelConfig, params: dict, h: jax.Array) -> jax.Array:
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", h, params["embed"])
+    else:
+        logits = h @ params["lm_head"]
+    return constrain(logits, ("batch", None, "vocab"))
+
+
+def xent_loss(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    lg = logits.astype(F32)
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    ll = jnp.take_along_axis(lg, labels[..., None], axis=-1)[..., 0]
+    return (lse - ll).mean()

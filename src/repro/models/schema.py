@@ -1,0 +1,238 @@
+"""Parameter schemas: one source of truth for shapes, logical sharding axes
+and initialization of every architecture family.
+
+A schema is a pytree of :class:`Spec`; from it we derive
+  - ``init_params``      (PRNG materialization, used by smoke tests/examples)
+  - ``abstract_params``  (ShapeDtypeStructs, used by the multi-pod dry-run)
+  - ``param_shardings``  (NamedShardings via the logical rule table)
+Per-layer blocks are stacked along a leading "layers" axis and consumed with
+``lax.scan`` so HLO size stays O(1) in depth.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from . import sharding as shd
+
+
+@dataclasses.dataclass(frozen=True)
+class Spec:
+    shape: Tuple[int, ...]
+    logical: Tuple
+    init: str = "normal"          # normal | zeros | ones
+    scale: Optional[float] = None  # stddev override
+
+
+def _is_spec(x):
+    return isinstance(x, Spec)
+
+
+# --------------------------------------------------------------------------
+# component schemas
+# --------------------------------------------------------------------------
+
+def norm_schema(d: int) -> dict:
+    return {"scale": Spec((d,), (None,), "ones")}
+
+
+def attn_schema(cfg: ModelConfig, cross: bool = False) -> dict:
+    d, H, K, hd = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.hd
+    s = {
+        "wq": Spec((d, H * hd), ("embed", "tp")),
+        "wk": Spec((d, K * hd), ("embed", "tp")),
+        "wv": Spec((d, K * hd), ("embed", "tp")),
+        "wo": Spec((H * hd, d), ("tp", "embed")),
+    }
+    if cfg.qkv_bias:
+        s["bq"] = Spec((H * hd,), ("tp",), "zeros")
+        s["bk"] = Spec((K * hd,), ("tp",), "zeros")
+        s["bv"] = Spec((K * hd,), ("tp",), "zeros")
+    if cfg.qk_norm:
+        s["q_norm"] = Spec((hd,), (None,), "ones")
+        s["k_norm"] = Spec((hd,), (None,), "ones")
+    return s
+
+
+def mlp_schema(cfg: ModelConfig, d_ff: Optional[int] = None,
+               gated: bool = True) -> dict:
+    d = cfg.d_model
+    ff = d_ff if d_ff is not None else cfg.d_ff
+    if gated:   # SwiGLU, gate+up fused
+        return {"w_in": Spec((d, 2 * ff), ("embed", "tp")),
+                "w_out": Spec((ff, d), ("ff", "embed"))}
+    return {"w_in": Spec((d, ff), ("embed", "tp")),
+            "b_in": Spec((ff,), ("tp",), "zeros"),
+            "w_out": Spec((ff, d), ("ff", "embed")),
+            "b_out": Spec((d,), (None,), "zeros")}
+
+
+def moe_schema(cfg: ModelConfig) -> dict:
+    mc = cfg.moe
+    d, E, fe = cfg.d_model, mc.num_experts, mc.d_ff_expert
+    return {
+        "router": Spec((d, E), ("embed", None)),
+        "w_in": Spec((E, d, 2 * fe), ("expert", "embed", None)),
+        "w_out": Spec((E, fe, d), ("expert", None, "embed")),
+    }
+
+
+def mamba2_schema(cfg: ModelConfig) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in = s.expand * d
+    nheads = d_in // s.head_dim
+    conv_dim = d_in + 2 * s.n_groups * s.d_state
+    proj = 2 * d_in + 2 * s.n_groups * s.d_state + nheads
+    return {
+        "w_in": Spec((d, proj), ("embed", None)),
+        "conv_w": Spec((s.d_conv, conv_dim), (None, None)),
+        "conv_b": Spec((conv_dim,), (None,), "zeros"),
+        "A_log": Spec((nheads,), (None,), "zeros"),
+        "D": Spec((nheads,), (None,), "ones"),
+        "dt_bias": Spec((nheads,), (None,), "zeros"),
+        "gnorm": Spec((d_in,), (None,), "ones"),
+        "w_out": Spec((d_in, d), ("tp", "embed")),
+    }
+
+
+def rglru_schema(cfg: ModelConfig) -> dict:
+    h = cfg.hybrid
+    d = cfg.d_model
+    lw = h.lru_width or d
+    nb = cfg.n_heads                       # block-diagonal gate heads
+    bw = lw // nb
+    return {
+        "w_x": Spec((d, lw), ("embed", "tp")),        # recurrent branch in
+        "w_gate": Spec((d, lw), ("embed", "tp")),     # gelu gate branch in
+        "conv_w": Spec((h.conv_width, lw), (None, "tp")),
+        "conv_b": Spec((lw,), ("tp",), "zeros"),
+        "wa": Spec((nb, bw, bw), (None, None, None)),  # recurrence gate
+        "wi": Spec((nb, bw, bw), (None, None, None)),  # input gate
+        "ba": Spec((lw,), ("tp",), "zeros"),
+        "bi": Spec((lw,), ("tp",), "zeros"),
+        "a_param": Spec((lw,), ("tp",), "ones"),       # Lambda
+        "w_out": Spec((lw, d), ("tp", "embed")),
+    }
+
+
+# --------------------------------------------------------------------------
+# block and model schemas
+# --------------------------------------------------------------------------
+
+def block_schema(cfg: ModelConfig, kind: str) -> dict:
+    d = cfg.d_model
+    if kind == "attn":
+        blk = {"ln1": norm_schema(d), "attn": attn_schema(cfg),
+               "ln2": norm_schema(d)}
+        if cfg.moe:
+            blk["moe"] = moe_schema(cfg)
+            if cfg.moe.dense_residual:
+                blk["mlp"] = mlp_schema(cfg, d_ff=cfg.moe.d_ff_dense)
+        else:
+            blk["mlp"] = mlp_schema(cfg)
+        return blk
+    if kind == "ssm":
+        return {"ln": norm_schema(d), "mamba": mamba2_schema(cfg)}
+    if kind == "rglru":
+        return {"ln1": norm_schema(d), "rglru": rglru_schema(cfg),
+                "ln2": norm_schema(d), "mlp": mlp_schema(cfg)}
+    if kind == "enc":
+        return {"ln1": norm_schema(d), "attn": attn_schema(cfg),
+                "ln2": norm_schema(d), "mlp": mlp_schema(cfg, gated=False)}
+    if kind == "dec":
+        return {"ln1": norm_schema(d), "self_attn": attn_schema(cfg),
+                "ln2": norm_schema(d), "cross_attn": attn_schema(cfg, cross=True),
+                "ln3": norm_schema(d), "mlp": mlp_schema(cfg, gated=False)}
+    raise ValueError(kind)
+
+
+def _stack(spec_tree: dict, n: int) -> dict:
+    return jax.tree.map(
+        lambda s: Spec((n,) + s.shape, (None,) + tuple(s.logical), s.init, s.scale),
+        spec_tree, is_leaf=_is_spec)
+
+
+def model_schema(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    top: dict = {
+        "embed": Spec((cfg.vocab, d), ("vocab", "embed"), scale=0.02),
+        "final_norm": norm_schema(d),
+    }
+    if not cfg.tie_embeddings:
+        top["lm_head"] = Spec((d, cfg.vocab), ("embed", "vocab"))
+    if cfg.family in ("dense", "moe", "vlm"):
+        top["layers"] = _stack(block_schema(cfg, "attn"), cfg.n_layers)
+    elif cfg.family == "ssm":
+        top["layers"] = _stack(block_schema(cfg, "ssm"), cfg.n_layers)
+    elif cfg.family == "hybrid":
+        pat = cfg.hybrid.pattern
+        n_groups, rem = divmod(cfg.n_layers, len(pat))
+        group = {f"{i}_{k}": block_schema(cfg, k) for i, k in enumerate(pat)}
+        top["groups"] = _stack(group, n_groups)
+        for j in range(rem):
+            top[f"extra_{j}"] = block_schema(cfg, pat[j])
+    elif cfg.family == "encdec":
+        top["enc_layers"] = _stack(block_schema(cfg, "enc"), cfg.n_enc_layers)
+        top["dec_layers"] = _stack(block_schema(cfg, "dec"), cfg.n_layers)
+        top["enc_final_norm"] = norm_schema(d)
+    else:
+        raise ValueError(cfg.family)
+    return top
+
+
+# --------------------------------------------------------------------------
+# materialization
+# --------------------------------------------------------------------------
+
+def abstract_params(cfg: ModelConfig) -> dict:
+    dt = jnp.dtype(cfg.param_dtype)
+    return jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, dt),
+                        model_schema(cfg), is_leaf=_is_spec)
+
+
+def param_shardings(cfg: ModelConfig) -> dict:
+    return jax.tree.map(lambda s: shd.sharding_for(s.logical, s.shape),
+                        model_schema(cfg), is_leaf=_is_spec)
+
+
+def layer_schema(cfg: ModelConfig, key: str = "layers") -> dict:
+    """Per-layer Spec tree (leading stack dim dropped) -- used to re-apply
+    FSDP sharding constraints to scanned parameter slices."""
+    sch = model_schema(cfg)[key]
+    return jax.tree.map(
+        lambda s: Spec(s.shape[1:], tuple(s.logical[1:]), s.init, s.scale),
+        sch, is_leaf=_is_spec)
+
+
+def constrain_layer_params(cfg: ModelConfig, p: dict, key: str = "layers") -> dict:
+    """Keep scanned per-layer weight slices FSDP-sharded inside the loop so
+    XLA cannot hoist a full-parameter all-gather out of the layer scan."""
+    from . import sharding as shd
+    if shd.get_mesh() is None:
+        return p
+    sch = layer_schema(cfg, key)
+    return jax.tree.map(lambda a, s: shd.constrain(a, s.logical), p, sch,
+                        is_leaf=lambda v: _is_spec(v))
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> dict:
+    schema = model_schema(cfg)
+    leaves, treedef = jax.tree.flatten(schema, is_leaf=_is_spec)
+    keys = jax.random.split(key, len(leaves))
+    dt = jnp.dtype(cfg.param_dtype)
+
+    def make(s: Spec, k):
+        if s.init == "zeros":
+            return jnp.zeros(s.shape, dt)
+        if s.init == "ones":
+            return jnp.ones(s.shape, dt)
+        fan_in = s.shape[-2] if len(s.shape) >= 2 else s.shape[-1]
+        scale = s.scale if s.scale is not None else fan_in ** -0.5
+        return (jax.random.normal(k, s.shape, jnp.float32) * scale).astype(dt)
+
+    return jax.tree.unflatten(treedef, [make(s, k) for s, k in zip(leaves, keys)])

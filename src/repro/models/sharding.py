@@ -1,0 +1,104 @@
+"""Logical-axis sharding: one rule table drives params + activations.
+
+Every parameter/activation dimension carries a *logical* name; the rule
+table maps logical names to mesh axes.  ``resolve`` silently drops a mesh
+axis whose size does not divide the dimension (jit arguments must be
+exactly divisible -- see DESIGN.md), which makes one scheme work across all
+10 architectures (40-head models on a 16-way model axis fall back per-dim).
+
+The context is process-global and set by the launch layer; with no mesh set
+all helpers are no-ops, so model code runs unchanged on a single device.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+#: logical axis -> tuple of mesh axis names (in sharding order)
+DEFAULT_RULES = {
+    "batch": ("pod", "data"),
+    "seq": (),                  # sequence unsharded by default
+    "seq_act": ("model",),      # Megatron-style sequence-parallel residual
+    "cache_seq": ("model",),    # decode: shard KV/state over model
+    "vocab": ("model",),
+    "embed": ("data",),         # FSDP axis for parameters
+    "tp": ("model",),           # tensor-parallel flat projection dim
+    "heads": ("model",),
+    "ff": ("model",),
+    "expert": ("model",),
+    "expert_cap": ("data",),
+    None: (),
+}
+
+
+@dataclasses.dataclass
+class ShardingCtx:
+    mesh: Optional[Mesh] = None
+    rules: dict = dataclasses.field(default_factory=lambda: dict(DEFAULT_RULES))
+
+
+_CTX = ShardingCtx()
+
+
+def set_mesh(mesh: Optional[Mesh], rules: Optional[dict] = None) -> None:
+    _CTX.mesh = mesh
+    _CTX.rules = dict(DEFAULT_RULES)
+    if rules:
+        _CTX.rules.update(rules)
+
+
+def get_mesh() -> Optional[Mesh]:
+    return _CTX.mesh
+
+
+def resolve(logical: Sequence, shape: Sequence[int]) -> P:
+    """Logical names -> PartitionSpec with per-dim divisibility fallback."""
+    mesh = _CTX.mesh
+    if mesh is None:
+        return P()
+    axes = []
+    used = set()
+    for dim, name in zip(shape, logical):
+        cand = [a for a in _CTX.rules.get(name, ()) if a in mesh.shape and a not in used]
+        size = 1
+        keep = []
+        for a in cand:
+            if dim % (size * mesh.shape[a]) == 0:
+                keep.append(a)
+                size *= mesh.shape[a]
+        used.update(keep)
+        axes.append(tuple(keep) if len(keep) > 1 else (keep[0] if keep else None))
+    return P(*axes)
+
+
+def sharding_for(logical: Sequence, shape: Sequence[int]) -> Optional[NamedSharding]:
+    if _CTX.mesh is None:
+        return None
+    return NamedSharding(_CTX.mesh, resolve(logical, shape))
+
+
+def replicated() -> Optional[NamedSharding]:
+    if _CTX.mesh is None:
+        return None
+    return NamedSharding(_CTX.mesh, P())
+
+
+def constrain(x: jax.Array, logical: Sequence) -> jax.Array:
+    """with_sharding_constraint by logical names (no-op without a mesh)."""
+    if _CTX.mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_CTX.mesh, resolve(logical, x.shape)))
+
+
+def tree_shardings(logical_tree, shape_tree):
+    """Map a pytree of logical tuples + shapes to NamedShardings."""
+    return jax.tree.map(
+        lambda lg, sh: sharding_for(lg, sh),
+        logical_tree, shape_tree,
+        is_leaf=lambda v: isinstance(v, tuple) and all(
+            isinstance(e, (str, type(None))) for e in v),
+    )

@@ -1,0 +1,150 @@
+"""Mamba-2 SSD (state-space duality) block -- arXiv:2405.21060.
+
+Chunked matmul formulation (MXU-friendly): intra-chunk attention-like
+einsums + inter-chunk state recurrence, matching the paper's minimal
+listing.  Decode is a single recurrent state update (O(1) in context
+length -- this is why mamba2 runs the long_500k shape).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .sharding import constrain
+
+F32 = jnp.float32
+
+
+def segsum(x: jax.Array) -> jax.Array:
+    """(..., T) -> (..., T, T) with out[i,j] = sum_{k=j+1..i} x[k] (i>=j)."""
+    T = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    d = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool))
+    return jnp.where(mask, d, -jnp.inf)
+
+
+def causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                cache: Optional[jax.Array] = None):
+    """Depthwise causal conv; x (B,S,C), w (K,C).  Returns (out, tail)."""
+    K = w.shape[0]
+    if cache is None:
+        xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([cache.astype(x.dtype), x], axis=1)
+    S = x.shape[1]
+    out = sum(xp[:, k:k + S] * w[k] for k in range(K)) + b
+    return out, xp[:, -(K - 1):]
+
+
+def ssd_chunked(x, a, Bc, Cc, chunk: int, init_state=None):
+    """x (B,S,H,P) [pre-scaled by dt], a=(dt*A) (B,S,H), Bc/Cc (B,S,G,N).
+
+    Sequential lax.scan over chunks with a checkpointed body: one chunk's
+    intra-chunk L matrix lives at a time (the all-chunks formulation
+    materializes (B,H,c,q,q), which blew the HBM budget in the dry-run --
+    see EXPERIMENTS.md).  Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    B, S, H, P = x.shape
+    G, N = Bc.shape[2], Bc.shape[3]
+    if S % chunk:
+        # zero-pad to a chunk multiple: a=0 => decay 1, x=B=0 => state
+        # untouched; padded outputs are sliced off below.
+        pad = chunk - S % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+        Bc = jnp.pad(Bc, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cc = jnp.pad(Cc, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    S_orig, S = S, x.shape[1]
+    c = S // chunk
+    hg = H // G
+    # chunk-major layout for scan xs
+    xc = x.reshape(B, c, chunk, H, P).transpose(1, 0, 2, 3, 4)
+    ac = a.reshape(B, c, chunk, H).transpose(1, 0, 3, 2).astype(F32)  # (c,B,H,q)
+    Bh = Bc.reshape(B, c, chunk, G, N).transpose(1, 0, 2, 3, 4)
+    Ch = Cc.reshape(B, c, chunk, G, N).transpose(1, 0, 2, 3, 4)
+
+    if init_state is None:
+        init_state = jnp.zeros((B, H, P, N), F32)
+    else:
+        init_state = init_state.astype(F32)
+
+    def chunk_body(state, xs):
+        xq, aq, Bq, Cq = xs                     # (B,q,H,P),(B,H,q),(B,q,G,N)
+        Bqh = jnp.repeat(Bq, hg, axis=2)        # (B,q,H,N)
+        Cqh = jnp.repeat(Cq, hg, axis=2)
+        a_cum = jnp.cumsum(aq, axis=-1)         # (B,H,q)
+        L = jnp.exp(segsum(aq)).astype(xq.dtype)           # (B,H,q,q)
+        y_diag = jnp.einsum("bqhn,bkhn,bhqk,bkhp->bqhp", Cqh, Bqh, L, xq)
+        decay_states = jnp.exp(a_cum[..., -1:] - a_cum).astype(xq.dtype)
+        contrib = jnp.einsum("bkhn,bhk,bkhp->bhpn", Bqh, decay_states, xq)
+        state_decay = jnp.exp(a_cum).astype(xq.dtype)      # (B,H,q)
+        y_off = jnp.einsum("bqhn,bhpn,bhq->bqhp", Cqh,
+                           state.astype(xq.dtype), state_decay)
+        chunk_decay = jnp.exp(a_cum[..., -1])              # (B,H)
+        state2 = state * chunk_decay[..., None, None] + contrib.astype(F32)
+        return state2, (y_diag + y_off)
+
+    final_state, ys = jax.lax.scan(jax.checkpoint(chunk_body), init_state,
+                                   (xc, ac, Bh, Ch))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S, H, P)[:, :S_orig]
+    return y, final_state
+
+
+def _gated_rmsnorm(scale, y, z, eps=1e-6):
+    g = y * jax.nn.silu(z.astype(F32)).astype(y.dtype)
+    gf = g.astype(F32)
+    var = jnp.mean(gf * gf, axis=-1, keepdims=True)
+    return (gf * jax.lax.rsqrt(var + eps) * scale.astype(F32)).astype(y.dtype)
+
+
+def mamba2_block(cfg: ModelConfig, p: dict, x: jax.Array, *,
+                 cache: Optional[dict] = None, mode: str = "train"):
+    """Returns (out (B,S,d), new_cache {state, conv} or None)."""
+    s = cfg.ssm
+    B, S, d = x.shape
+    d_in = s.expand * d
+    H = d_in // s.head_dim
+    P = s.head_dim
+    G, N = s.n_groups, s.d_state
+
+    zxbcdt = x @ p["w_in"]
+    zxbcdt = constrain(zxbcdt, ("batch", None, "tp"))
+    z = zxbcdt[..., :d_in]
+    xbc = zxbcdt[..., d_in: 2 * d_in + 2 * G * N]
+    dt_raw = zxbcdt[..., 2 * d_in + 2 * G * N:]
+    conv_cache = cache["conv"] if cache is not None else None
+    xbc, conv_tail = causal_conv(xbc, p["conv_w"], p["conv_b"], conv_cache)
+    xbc = jax.nn.silu(xbc.astype(F32)).astype(x.dtype)
+    xr = xbc[..., :d_in].reshape(B, S, H, P)
+    Bc = xbc[..., d_in:d_in + G * N].reshape(B, S, G, N)
+    Cc = xbc[..., d_in + G * N:].reshape(B, S, G, N)
+    dt = jax.nn.softplus(dt_raw.astype(F32) + p["dt_bias"].astype(F32))
+    A = -jnp.exp(p["A_log"].astype(F32))                     # (H,)
+
+    if mode == "decode":
+        assert S == 1 and cache is not None
+        state = cache["state"].astype(F32)                   # (B,H,P,N)
+        a = jnp.exp(dt[:, 0] * A)                            # (B,H)
+        Bh = jnp.repeat(Bc[:, 0], H // G, axis=1).astype(F32)  # (B,H,N)
+        Ch = jnp.repeat(Cc[:, 0], H // G, axis=1).astype(F32)
+        xd = (xr[:, 0].astype(F32) * dt[:, 0][..., None])    # (B,H,P)
+        state = state * a[..., None, None] + xd[..., None] * Bh[:, :, None, :]
+        y = jnp.einsum("bhpn,bhn->bhp", state, Ch)
+        y = y + xr[:, 0].astype(F32) * p["D"].astype(F32)[:, None]
+        y = y[:, None].astype(x.dtype)                       # (B,1,H,P)
+        new_cache = {"state": state, "conv": conv_tail}
+    else:
+        init = cache["state"] if cache is not None else None
+        y, final_state = ssd_chunked(
+            xr * dt.astype(x.dtype)[..., None], dt * A, Bc, Cc, s.chunk,
+            init_state=init)
+        y = y + xr * p["D"].astype(x.dtype)[:, None]
+        new_cache = ({"state": final_state.astype(F32), "conv": conv_tail}
+                     if mode == "prefill" else None)
+
+    y = y.reshape(B, S, d_in)
+    y = _gated_rmsnorm(p["gnorm"], y, z)
+    return y @ p["w_out"], new_cache

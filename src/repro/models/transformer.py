@@ -1,0 +1,410 @@
+"""Model assembly for every architecture family.
+
+Public API (all pure functions over the schema param pytrees):
+  loss_fn(cfg, params, batch)                 -- training loss (train_step core)
+  prefill(cfg, params, batch)                 -- build KV/state caches
+  decode_step(cfg, params, token, caches, pos)-- one serving token
+  init_caches / abstract_caches / cache_shardings
+Layers are consumed with lax.scan over stacked parameters; the per-layer
+body is optionally wrapped in jax.checkpoint (remat) for training.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from . import schema
+from . import sharding as shd
+from .layers import (attention, lm_logits, mlp_gelu, mlp_swiglu, moe_layer,
+                     rmsnorm, xent_loss)
+from .rglru import rglru_block
+from .ssm import mamba2_block
+
+F32 = jnp.float32
+
+
+# --------------------------------------------------------------------------
+# blocks
+# --------------------------------------------------------------------------
+
+def attn_block(cfg, p, x, *, pos, mode, cache, window=0, block_skip=False):
+    h, c2 = attention(cfg, p["attn"], rmsnorm(p["ln1"], x, cfg.norm_eps),
+                      pos=pos, mode=mode, cache=cache, window=window,
+                      block_skip=block_skip)
+    x = x + h
+    y = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if "moe" in p:
+        f = moe_layer(cfg, p["moe"], y)
+        if "mlp" in p:                      # arctic: parallel dense residual
+            f = f + mlp_swiglu(p["mlp"], y)
+    else:
+        f = mlp_swiglu(p["mlp"], y)
+    return x + f, c2
+
+
+def ssm_block(cfg, p, x, *, mode, cache):
+    h, c2 = mamba2_block(cfg, p["mamba"], rmsnorm(p["ln"], x, cfg.norm_eps),
+                         cache=cache, mode=mode)
+    return x + h, c2
+
+
+def rglru_layer_block(cfg, p, x, *, mode, cache):
+    h, c2 = rglru_block(cfg, p["rglru"], rmsnorm(p["ln1"], x, cfg.norm_eps),
+                        cache=cache, mode=mode)
+    x = x + h
+    x = x + mlp_swiglu(p["mlp"], rmsnorm(p["ln2"], x, cfg.norm_eps))
+    return x, c2
+
+
+def enc_block(cfg, p, x):
+    h, _ = attention(cfg, p["attn"], rmsnorm(p["ln1"], x, cfg.norm_eps),
+                     pos=jnp.zeros(x.shape[:2], jnp.int32), mode="train",
+                     causal=False)
+    x = x + h
+    return x + mlp_gelu(p["mlp"], rmsnorm(p["ln2"], x, cfg.norm_eps))
+
+
+def dec_block(cfg, p, x, *, pos, mode, cache, enc_out=None):
+    c_self = cache["self"] if cache is not None else None
+    # the cross cache holds *precomputed* encoder K/V: consume it only at
+    # decode; at prefill it is a zero placeholder and K/V come from enc_out
+    c_cross = cache["cross"] if (cache is not None and mode == "decode") else None
+    h, c_self2 = attention(cfg, p["self_attn"],
+                           rmsnorm(p["ln1"], x, cfg.norm_eps),
+                           pos=pos, mode=mode, cache=c_self)
+    x = x + h
+    h, c_cross2 = attention(cfg, p["cross_attn"],
+                            rmsnorm(p["ln2"], x, cfg.norm_eps),
+                            pos=pos, mode="cross", cache=c_cross,
+                            kv_states=enc_out)
+    x = x + h
+    x = x + mlp_gelu(p["mlp"], rmsnorm(p["ln3"], x, cfg.norm_eps))
+    new_cache = ({"self": c_self2, "cross": c_cross2}
+                 if (mode in ("prefill", "decode")) else None)
+    return x, new_cache
+
+
+def _maybe_remat(fn, policy: str):
+    if policy == "none":
+        return fn
+    if policy == "full":
+        return jax.checkpoint(fn)
+    if policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    raise ValueError(policy)
+
+
+# --------------------------------------------------------------------------
+# embeddings / positions
+# --------------------------------------------------------------------------
+
+def _embed(cfg, params, batch):
+    if cfg.embeds_input and "embeds" in batch:
+        x = batch["embeds"].astype(jnp.dtype(cfg.compute_dtype))
+    else:
+        x = params["embed"][batch["tokens"]].astype(jnp.dtype(cfg.compute_dtype))
+    return shd.constrain(x, ("batch", "seq", None))
+
+
+def _positions(cfg, batch, B, S, offset=0):
+    if "positions" in batch:
+        return batch["positions"]
+    pos = jnp.arange(S, dtype=jnp.int32)[None, :] + offset
+    pos = jnp.broadcast_to(pos, (B, S))
+    if cfg.rope_style == "mrope":
+        pos = jnp.broadcast_to(pos[None], (3, B, S))
+    return pos
+
+
+def _sinusoid(S: int, d: int, offset=0) -> jax.Array:
+    pos = jnp.arange(S, dtype=F32)[:, None] + offset
+    div = jnp.exp(jnp.arange(0, d, 2, dtype=F32) * (-jnp.log(10000.0) / d))
+    pe = jnp.zeros((S, d), F32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div[: (d + 1) // 2]))
+    return pe
+
+
+# --------------------------------------------------------------------------
+# backbone traversal (shared by train / prefill / decode)
+# --------------------------------------------------------------------------
+
+def _run_layers(cfg, params, x, *, pos, mode, caches, remat="none",
+                block_skip=False):
+    """Returns (hidden, new_caches)."""
+    serve = mode in ("prefill", "decode")
+    lc = caches["layers"] if (caches is not None and "layers" in caches) else None
+    boundary = ("batch", "seq_act", None)     # sequence-parallel residual
+    if cfg.family in ("dense", "moe", "vlm"):
+        def body(h, xs):
+            p, c = xs
+            p = schema.constrain_layer_params(cfg, p)
+            h2, c2 = attn_block(cfg, p, h, pos=pos, mode=mode, cache=c,
+                                block_skip=block_skip)
+            return shd.constrain(h2, boundary), c2
+        body = _maybe_remat(body, remat)
+        x, cs = jax.lax.scan(body, x, (params["layers"], lc))
+        return x, ({"layers": cs} if serve else None)
+
+    if cfg.family == "ssm":
+        def body(h, xs):
+            p, c = xs
+            p = schema.constrain_layer_params(cfg, p)
+            h2, c2 = ssm_block(cfg, p, h, mode=mode, cache=c)
+            return shd.constrain(h2, boundary), c2
+        body = _maybe_remat(body, remat)
+        x, cs = jax.lax.scan(body, x, (params["layers"], lc))
+        return x, ({"layers": cs} if serve else None)
+
+    if cfg.family == "hybrid":
+        pat = cfg.hybrid.pattern
+        win = cfg.hybrid.window
+
+        def body(h, xs):
+            p, c = xs
+            p = schema.constrain_layer_params(cfg, p, key="groups")
+            outc = {}
+            for i, kind in enumerate(pat):
+                key = f"{i}_{kind}"
+                if kind == "rglru":
+                    h, c2 = rglru_layer_block(cfg, p[key], h, mode=mode,
+                                              cache=None if c is None else c[key])
+                else:
+                    h, c2 = attn_block(cfg, p[key], h, pos=pos, mode=mode,
+                                       cache=None if c is None else c[key],
+                                       window=win, block_skip=block_skip)
+                outc[key] = c2
+            return h, outc
+        body = _maybe_remat(body, remat)
+        gcaches = caches["groups"] if caches is not None else None
+        x, cs = jax.lax.scan(body, x, (params["groups"], gcaches))
+        out = {"groups": cs} if serve else None
+        n_groups = cfg.n_layers // len(pat)
+        for j in range(cfg.n_layers - n_groups * len(pat)):
+            kind = pat[j]
+            key = f"extra_{j}"
+            c = caches[key] if caches is not None else None
+            if kind == "rglru":
+                x, c2 = rglru_layer_block(cfg, params[key], x, mode=mode, cache=c)
+            else:
+                x, c2 = attn_block(cfg, params[key], x, pos=pos, mode=mode,
+                                   cache=c, window=win, block_skip=block_skip)
+            if serve:
+                out[key] = c2
+        return x, out
+
+    raise ValueError(cfg.family)
+
+
+def _run_decoder_encdec(cfg, params, x, *, pos, mode, caches, enc_out,
+                        remat="none"):
+    lc = caches["layers"] if (caches is not None and "layers" in caches) else None
+
+    def body(h, xs):
+        p, c = xs
+        p = schema.constrain_layer_params(cfg, p, key="dec_layers")
+        h2, c2 = dec_block(cfg, p, h, pos=pos, mode=mode, cache=c,
+                           enc_out=enc_out)
+        return shd.constrain(h2, ("batch", "seq_act", None)), c2
+    body = _maybe_remat(body, remat)
+    x, cs = jax.lax.scan(body, x, (params["dec_layers"], lc))
+    return x, ({"layers": cs} if mode in ("prefill", "decode") else None)
+
+
+def _run_encoder(cfg, params, frames, remat="none"):
+    dt = jnp.dtype(cfg.compute_dtype)
+    x = frames.astype(dt) + _sinusoid(frames.shape[1], cfg.d_model).astype(dt)
+    x = shd.constrain(x, ("batch", "seq", None))
+
+    def body(h, p):
+        p = schema.constrain_layer_params(cfg, p, key="enc_layers")
+        return shd.constrain(enc_block(cfg, p, h),
+                             ("batch", "seq_act", None)), None
+    body = _maybe_remat(body, remat)
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return rmsnorm(params["enc_final_norm"], x, cfg.norm_eps)
+
+
+# --------------------------------------------------------------------------
+# public entry points
+# --------------------------------------------------------------------------
+
+def forward(cfg: ModelConfig, params, batch, *, mode="train", caches=None,
+            pos_offset=0, remat="none", block_skip=False):
+    """Returns (logits, new_caches)."""
+    dt = jnp.dtype(cfg.compute_dtype)
+    if cfg.family == "encdec":
+        enc_out = _run_encoder(cfg, params, batch["frames"], remat=remat)
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = params["embed"][tokens].astype(dt)
+        x = x + _sinusoid(S, cfg.d_model, offset=pos_offset).astype(dt)
+        pos = _positions(cfg, batch, B, S, offset=pos_offset)
+        x, cs = _run_decoder_encdec(cfg, params, x, pos=pos, mode=mode,
+                                    caches=caches, enc_out=enc_out, remat=remat)
+    else:
+        x = _embed(cfg, params, batch)
+        B, S = x.shape[0], x.shape[1]
+        pos = _positions(cfg, batch, B, S, offset=pos_offset)
+        x, cs = _run_layers(cfg, params, x, pos=pos, mode=mode, caches=caches,
+                            remat=remat, block_skip=block_skip)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return lm_logits(cfg, params, x), cs
+
+
+def loss_fn(cfg: ModelConfig, params, batch, *, remat="none",
+            block_skip=False) -> jax.Array:
+    logits, _ = forward(cfg, params, batch, mode="train", remat=remat,
+                        block_skip=block_skip)
+    labels = batch.get("labels", batch.get("tokens"))
+    return xent_loss(logits[:, :-1], labels[:, 1:])
+
+
+def prefill(cfg: ModelConfig, params, batch, *, remat="none",
+            max_len: Optional[int] = None):
+    B = _batch_dim(cfg, batch)
+    if cfg.family == "encdec":
+        S = batch["tokens"].shape[1]
+        enc_len = batch["frames"].shape[1]
+    else:
+        S = _seq_dim(cfg, batch)
+        enc_len = 0
+    caches = init_caches(cfg, B, max_len or S, enc_len)
+    return forward(cfg, params, batch, mode="prefill", caches=caches,
+                   remat=remat)
+
+
+def decode_step(cfg: ModelConfig, params, token_batch, caches, pos: jax.Array):
+    """token_batch: {"tokens": (B,1)} (+ embeds for stub frontends);
+    pos: scalar int32 absolute position.  Returns (logits, caches)."""
+    return forward(cfg, params, token_batch, mode="decode", caches=caches,
+                   pos_offset=pos)
+
+
+def _batch_dim(cfg, batch):
+    key = "frames" if cfg.family == "encdec" else (
+        "embeds" if cfg.embeds_input else "tokens")
+    return batch[key].shape[0]
+
+
+def _seq_dim(cfg, batch):
+    key = "frames" if cfg.family == "encdec" else (
+        "embeds" if cfg.embeds_input else "tokens")
+    return batch[key].shape[1]
+
+
+# --------------------------------------------------------------------------
+# caches: concrete init, abstract specs and shardings
+# --------------------------------------------------------------------------
+
+def _full_cache_spec(cfg, B, T):
+    K, hd = cfg.n_kv, cfg.hd
+    dt = jnp.dtype(cfg.compute_dtype)
+    return {"k": ((B, T, K, hd), dt, ("batch", "cache_seq", None, None)),
+            "v": ((B, T, K, hd), dt, ("batch", "cache_seq", None, None)),
+            "len": ((), jnp.int32, ())}
+
+
+def _local_cache_spec(cfg, B, W):
+    K, hd = cfg.n_kv, cfg.hd
+    dt = jnp.dtype(cfg.compute_dtype)
+    return {"k": ((B, W, K, hd), dt, ("batch", "cache_seq", None, None)),
+            "v": ((B, W, K, hd), dt, ("batch", "cache_seq", None, None)),
+            "pos": ((W,), jnp.int32, (None,)),
+            "len": ((), jnp.int32, ())}
+
+
+def _ssm_cache_spec(cfg, B):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    H = d_in // s.head_dim
+    conv_dim = d_in + 2 * s.n_groups * s.d_state
+    dt = jnp.dtype(cfg.compute_dtype)
+    return {"state": ((B, H, s.head_dim, s.d_state), F32,
+                      ("batch", None, None, None)),
+            "conv": ((B, s.d_conv - 1, conv_dim), dt, ("batch", None, "tp"))}
+
+
+def _rglru_cache_spec(cfg, B):
+    h = cfg.hybrid
+    lw = h.lru_width or cfg.d_model
+    dt = jnp.dtype(cfg.compute_dtype)
+    return {"h": ((B, lw), F32, ("batch", "tp")),
+            "conv": ((B, h.conv_width - 1, lw), dt, ("batch", None, "tp"))}
+
+
+def _stack_spec(spec, n):
+    return jax.tree.map(
+        lambda t: ((n,) + t[0], t[1], (None,) + tuple(t[2])),
+        spec, is_leaf=lambda v: isinstance(v, tuple) and len(v) == 3
+        and isinstance(v[0], tuple))
+
+
+def cache_spec(cfg: ModelConfig, B: int, max_len: int, enc_len: int = 0):
+    """Pytree of (shape, dtype, logical) describing the serving cache."""
+    if cfg.family in ("dense", "moe", "vlm"):
+        return {"layers": _stack_spec(_full_cache_spec(cfg, B, max_len),
+                                      cfg.n_layers)}
+    if cfg.family == "ssm":
+        return {"layers": _stack_spec(_ssm_cache_spec(cfg, B), cfg.n_layers)}
+    if cfg.family == "hybrid":
+        pat = cfg.hybrid.pattern
+        W = min(cfg.hybrid.window, max_len)
+        group = {}
+        for i, kind in enumerate(pat):
+            group[f"{i}_{kind}"] = (_rglru_cache_spec(cfg, B) if kind == "rglru"
+                                    else _local_cache_spec(cfg, B, W))
+        n_groups, rem = divmod(cfg.n_layers, len(pat))
+        out = {"groups": _stack_spec(group, n_groups)}
+        for j in range(rem):
+            out[f"extra_{j}"] = (_rglru_cache_spec(cfg, B)
+                                 if pat[j] == "rglru"
+                                 else _local_cache_spec(cfg, B, W))
+        return out
+    if cfg.family == "encdec":
+        K, hd = cfg.n_kv, cfg.hd
+        dt = jnp.dtype(cfg.compute_dtype)
+        per = {"self": _full_cache_spec(cfg, B, max_len),
+               "cross": {"k": ((B, enc_len, K, hd), dt,
+                               ("batch", "cache_seq", None, None)),
+                         "v": ((B, enc_len, K, hd), dt,
+                               ("batch", "cache_seq", None, None))}}
+        return {"layers": _stack_spec(per, cfg.n_layers)}
+    raise ValueError(cfg.family)
+
+
+def _is_spec3(v):
+    return (isinstance(v, tuple) and len(v) == 3 and isinstance(v[0], tuple))
+
+
+def init_caches(cfg, B, max_len, enc_len: int = 0, like=None):
+    spec = cache_spec(cfg, B, max_len, enc_len)
+
+    def mk(t):
+        shape, dt, _ = t
+        if dt == jnp.int32:
+            init = jnp.zeros(shape, dt) - (1 if len(shape) else 0)
+            return init if len(shape) else jnp.int32(0)
+        return jnp.zeros(shape, dt)
+
+    caches = jax.tree.map(mk, spec, is_leaf=_is_spec3)
+    # scan consumes {"layers"/"groups"} stacked; prefill rebuilds caches from
+    # scratch, so cross caches start empty (filled by mode="cross").
+    return caches
+
+
+def abstract_caches(cfg, B, max_len, enc_len: int = 0):
+    spec = cache_spec(cfg, B, max_len, enc_len)
+    return jax.tree.map(lambda t: jax.ShapeDtypeStruct(t[0], t[1]), spec,
+                        is_leaf=_is_spec3)
+
+
+def cache_shardings(cfg, B, max_len, enc_len: int = 0):
+    spec = cache_spec(cfg, B, max_len, enc_len)
+    return jax.tree.map(lambda t: shd.sharding_for(t[2], t[0]), spec,
+                        is_leaf=_is_spec3)

@@ -1,0 +1,79 @@
+"""SPD preconditioners for the preconditioned p(l)-CG of Sec. 2.3.
+
+The paper's parallel experiments use block Jacobi with local ILU (Fig. 5).
+ILU's sequential triangular solves map poorly onto the TPU VPU, so the
+block-local approximate inverse here is a symmetric SSOR sweep (SPD-
+preserving, communication-free, expressible as stencil sweeps) -- see
+DESIGN.md 'hardware adaptation'.  Jacobi (diagonal) is also provided.
+
+Both preconditioners are *block-local by construction*: they never touch
+data outside one worker's partition, so their application overlaps with the
+global reduction exactly like the SPMV (paper Remark 13).
+"""
+from __future__ import annotations
+
+import numpy as np
+from scipy.linalg import solve_triangular
+
+from ..core.linop import LinearOperator, Preconditioner
+
+
+def jacobi(A: LinearOperator) -> Preconditioner:
+    """Diagonal (Jacobi) preconditioner M = diag(A)."""
+    if A.diag is None:
+        raise ValueError("operator exposes no diagonal")
+    inv = 1.0 / np.asarray(A.diag)
+    return Preconditioner(apply=lambda v: v * inv, name="jacobi")
+
+
+def block_jacobi_ssor(
+    A_dense_block_fn,
+    nblocks: int,
+    n: int,
+    omega: float = 1.0,
+    sweeps: int = 1,
+) -> Preconditioner:
+    """Block-Jacobi preconditioner; each contiguous block is approximately
+    inverted with ``sweeps`` symmetric SOR sweeps of the local block matrix.
+
+    ``A_dense_block_fn(b) -> (nb, nb) ndarray`` returns the dense diagonal
+    block for block index b.  The SSOR application
+        M^{-1} = omega (2-omega) (D/omega + U)^{-1} D (D/omega + L)^{-1}
+    is SPD for SPD blocks and 0 < omega < 2.
+    """
+    bounds = np.linspace(0, n, nblocks + 1).astype(int)
+    facs = []
+    for b in range(nblocks):
+        Ab = np.asarray(A_dense_block_fn(b), dtype=float)
+        d = np.diag(Ab).copy()
+        lower = np.tril(Ab, -1) + np.diag(d / omega)   # D/omega + L
+        upper = np.triu(Ab, 1) + np.diag(d / omega)    # D/omega + U
+        facs.append((d, lower, upper))
+    scale = omega * (2.0 - omega)
+
+    def apply(v):
+        vv = np.asarray(v, dtype=float)
+        out = np.empty_like(vv)
+        for b in range(nblocks):
+            s, e = bounds[b], bounds[b + 1]
+            d, lower, upper = facs[b]
+            t = solve_triangular(lower, vv[s:e], lower=True)
+            t = d * t
+            t = solve_triangular(upper, t, lower=False)
+            out[s:e] = scale * t
+        return out
+
+    return Preconditioner(apply=apply, name=f"bj-ssor-{nblocks}x")
+
+
+def block_jacobi_for(A: LinearOperator, dense: np.ndarray, nblocks: int,
+                     omega: float = 1.0) -> Preconditioner:
+    """Convenience: block-Jacobi SSOR from an explicit dense matrix."""
+    n = A.n
+    bounds = np.linspace(0, n, nblocks + 1).astype(int)
+
+    def block(b):
+        s, e = bounds[b], bounds[b + 1]
+        return dense[s:e, s:e]
+
+    return block_jacobi_ssor(block, nblocks, n, omega=omega)

@@ -1,0 +1,57 @@
+"""Synthetic SPD test matrices (Matrix-Market-style suite, paper Table 2).
+
+The container has no network access, so the paper's Matrix Market selection
+is replaced by a reproducible generator sweeping the properties that matter
+for the attainable-accuracy study: condition number, spectrum shape, and
+bandwidth/sparsity.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from ..core.linop import LinearOperator, dense_operator
+
+
+def spd_with_spectrum(eigs: np.ndarray, seed: int = 0) -> np.ndarray:
+    """Dense SPD matrix with the prescribed spectrum (random orthogonal Q)."""
+    n = len(eigs)
+    rng = np.random.default_rng(seed)
+    Q, _ = np.linalg.qr(rng.standard_normal((n, n)))
+    return (Q * eigs) @ Q.T
+
+
+def random_spd_dense(
+    n: int,
+    cond: float = 1e4,
+    spectrum: str = "geometric",
+    seed: int = 0,
+) -> LinearOperator:
+    """Random dense SPD operator with condition number ``cond``.
+
+    spectrum:
+      'geometric' -- log-uniform eigenvalues in [1/cond, 1] (hard for CG);
+      'uniform'   -- uniform eigenvalues (easy);
+      'clustered' -- one small outlier + cluster at 1 (classic CG showcase).
+    """
+    if spectrum == "geometric":
+        eigs = np.geomspace(1.0 / cond, 1.0, n)
+    elif spectrum == "uniform":
+        eigs = np.linspace(1.0 / cond, 1.0, n)
+    elif spectrum == "clustered":
+        eigs = np.concatenate([[1.0 / cond], np.linspace(0.9, 1.1, n - 1)])
+    else:
+        raise ValueError(f"unknown spectrum {spectrum!r}")
+    A = spd_with_spectrum(eigs, seed=seed)
+    op = dense_operator(A, name=f"spd-{spectrum}-n{n}-k{cond:.0e}")
+    return op
+
+
+#: the Table-2-style accuracy suite: (name, n, cond, spectrum, seed)
+TABLE2_SUITE = [
+    ("spd-uni-1e2", 240, 1e2, "uniform", 1),
+    ("spd-uni-1e4", 240, 1e4, "uniform", 2),
+    ("spd-geo-1e4", 240, 1e4, "geometric", 3),
+    ("spd-geo-1e6", 240, 1e6, "geometric", 4),
+    ("spd-geo-1e8", 240, 1e8, "geometric", 5),
+    ("spd-clu-1e6", 240, 1e6, "clustered", 6),
+]

@@ -1,0 +1,14 @@
+from .optim import (AdamWConfig, adamw_init, adamw_update,
+                    abstract_adamw_state, compress_grads, decompress_grads,
+                    compress_init)
+from .checkpoint import CheckpointManager
+from .data import Prefetcher, synth_batch
+from .monitor import StragglerMonitor
+from .newton_pcg import NewtonPCGConfig, newton_pcg_step
+
+__all__ = [
+    "AdamWConfig", "adamw_init", "adamw_update", "abstract_adamw_state",
+    "compress_grads", "decompress_grads", "compress_init",
+    "CheckpointManager", "Prefetcher", "synth_batch", "StragglerMonitor",
+    "NewtonPCGConfig", "newton_pcg_step",
+]

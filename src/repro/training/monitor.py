@@ -1,0 +1,50 @@
+"""Straggler / health monitoring hooks for large-fleet operation.
+
+Per-step wall times feed an online mean/variance estimate; steps slower
+than ``mean + k * std`` are flagged (the production hook would trigger
+hot-spare rescheduling / ICI route avoidance -- here we log and count,
+which is what the train loop consumes to decide on checkpoint-and-restart).
+A heartbeat file lets an external supervisor detect a hung process.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+import time
+from typing import Optional
+
+
+@dataclasses.dataclass
+class StragglerMonitor:
+    k_sigma: float = 3.0
+    warmup: int = 5
+    heartbeat_path: Optional[str] = None
+    _n: int = 0
+    _mean: float = 0.0
+    _m2: float = 0.0
+    flagged: int = 0
+    history: list = dataclasses.field(default_factory=list)
+
+    def record(self, step: int, seconds: float) -> bool:
+        """Returns True when the step is a straggler."""
+        self.history.append(seconds)
+        slow = False
+        if self._n >= self.warmup:
+            std = (self._m2 / max(self._n - 1, 1)) ** 0.5
+            slow = seconds > self._mean + self.k_sigma * max(std, 1e-9)
+        self._n += 1
+        delta = seconds - self._mean
+        self._mean += delta / self._n
+        self._m2 += delta * (seconds - self._mean)
+        if slow:
+            self.flagged += 1
+        if self.heartbeat_path:
+            pathlib.Path(self.heartbeat_path).write_text(json.dumps(
+                {"step": step, "t": time.time(), "step_s": seconds,
+                 "stragglers": self.flagged}))
+        return slow
+
+    @property
+    def mean_step_s(self) -> float:
+        return self._mean

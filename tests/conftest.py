@@ -1,0 +1,13 @@
+import os
+
+# smoke tests and benches must see ONE device (the dry-run sets its own
+# device count in a separate process)
+os.environ.setdefault("XLA_FLAGS", "")
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

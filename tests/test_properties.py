@@ -1,0 +1,95 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cg import classic_cg
+from repro.core.plcg import plcg
+from repro.operators.spd import spd_with_spectrum
+
+SPECTRA = st.sampled_from(["uniform", "geometric", "clustered"])
+
+
+def _make_spd(n, cond, kind, seed):
+    if kind == "uniform":
+        eigs = np.linspace(1.0 / cond, 1.0, n)
+    elif kind == "geometric":
+        eigs = np.geomspace(1.0 / cond, 1.0, n)
+    else:
+        eigs = np.concatenate([[1.0 / cond], np.linspace(0.9, 1.1, n - 1)])
+    from repro.core.linop import dense_operator
+    return dense_operator(spd_with_spectrum(eigs, seed=seed)), eigs
+
+
+@settings(max_examples=12, deadline=None)
+@given(n=st.integers(24, 64), cond=st.sampled_from([1e2, 1e3]),
+       kind=SPECTRA, l=st.integers(1, 3), seed=st.integers(0, 5))
+def test_plcg_converges_on_random_spd(n, cond, kind, l, seed):
+    """For any well-conditioned SPD system, p(l)-CG reaches the tolerance
+    (possibly via restarts) and the solution solves the system."""
+    A, eigs = _make_spd(n, cond, kind, seed)
+    x_true = np.linspace(-1, 1, n)
+    b = A @ x_true
+    r = plcg(A, b, l=l, tol=1e-7, maxiter=20 * n, max_restarts=10,
+             spectrum=(float(eigs.min()) * 0.9, float(eigs.max()) * 1.1))
+    assert r.converged
+    assert np.linalg.norm(b - A @ r.x) <= 1e-5 * max(np.linalg.norm(b), 1)
+
+
+@settings(max_examples=8, deadline=None)
+@given(n=st.integers(24, 48), l=st.integers(1, 3), seed=st.integers(0, 3))
+def test_plcg_monotone_krylov_property(n, l, seed):
+    """The p(l)-CG iterates match classic CG while both are far from
+    stagnation (exact-arithmetic identity, Remark 7)."""
+    A, eigs = _make_spd(n, 1e3, "uniform", seed)
+    b = A @ np.ones(n)
+    ref = classic_cg(A, b, tol=1e-10, maxiter=3 * n)
+    r = plcg(A, b, l=l, tol=1e-10, maxiter=3 * n, max_restarts=0,
+             spectrum=(float(eigs.min()) * 0.9, float(eigs.max()) * 1.1))
+    m = min(len(ref.resnorms), len(r.resnorms))
+    m = min(m, ref.iters // 2)
+    assert np.allclose(r.resnorms[:m], ref.resnorms[:m], rtol=1e-3)
+
+
+@settings(max_examples=6, deadline=None)
+@given(l=st.integers(1, 3), seed=st.integers(0, 4))
+def test_G_band_structure(l, seed):
+    """Lemma 5: G has bandwidth 2l+1 for symmetric A."""
+    A, eigs = _make_spd(40, 1e2, "uniform", seed)
+    b = A @ np.ones(40)
+    r = plcg(A, b, l=l, tol=0.0, maxiter=20, record_G=True, max_restarts=0,
+             spectrum=(float(eigs.min()) * 0.9, float(eigs.max()) * 1.1))
+    G = r.info["traces"][0].G
+    k = 18
+    for i in range(k):
+        assert np.max(np.abs(G[: max(0, i - 2 * l), i]), initial=0.0) < 1e-8
+
+
+@settings(max_examples=6, deadline=None)
+@given(step=st.integers(0, 50), batch=st.sampled_from([2, 4]),
+       seq=st.sampled_from([16, 32]))
+def test_data_pipeline_deterministic(step, batch, seq):
+    """Exact-restart property: (step, shape) fully determines the batch."""
+    from repro.configs import get_reduced
+    from repro.training.data import synth_batch
+    cfg = get_reduced("qwen3-14b")
+    b1 = synth_batch(cfg, step, batch, seq, seed=1)
+    b2 = synth_batch(cfg, step, batch, seq, seed=1)
+    for k in b1:
+        np.testing.assert_array_equal(b1[k], b2[k])
+    b3 = synth_batch(cfg, step + 1, batch, seq, seed=1)
+    assert any(not np.array_equal(b1[k], b3[k]) for k in b1)
+
+
+@settings(max_examples=10, deadline=None)
+@given(shape=st.sampled_from([(8, 256), (3, 512), (16, 64), (5, 1000)]),
+       seed=st.integers(0, 5))
+def test_q8_roundtrip_bounded_error(shape, seed):
+    """Block int8 quantization: |x - dq(q(x))| <= scale/2 per block."""
+    import jax.numpy as jnp
+    from repro.training.optim import _dq8, _q8
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(shape) * 10, jnp.float32)
+    q, s = _q8(x)
+    back = _dq8(q, s, shape)
+    err = np.max(np.abs(np.asarray(back) - np.asarray(x)))
+    assert err <= float(np.max(np.asarray(s))) * 0.51 + 1e-6

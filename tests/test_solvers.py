@@ -1,0 +1,204 @@
+"""Solver correctness: the paper's exact-arithmetic claims, numerically.
+
+All in numpy fp64 (the reference implementations are array-library
+agnostic); p(l)-CG must reproduce classic CG / D-Lanczos iterates, the
+implicit residual must equal the true residual to rounding, preconditioning
+must preserve all of it in the M-norm, and p(l)-GMRES must exhibit the
+structure (tridiagonal H, banded G) the derivation exploits.
+"""
+import numpy as np
+import pytest
+
+from repro.core.cg import classic_cg
+from repro.core.dlanczos import d_lanczos
+from repro.core.pcg import ghysels_pcg
+from repro.core.plcg import plcg
+from repro.core.plgmres import plgmres
+from repro.core.shifts import chebyshev_shifts, monomial_shifts
+from repro.operators import (poisson2d, poisson2d_dense, poisson3d,
+                             random_spd_dense)
+from repro.operators.precond import block_jacobi_for, jacobi
+
+
+@pytest.fixture(scope="module")
+def poisson():
+    A = poisson2d(24, 24)
+    b = A @ np.ones(A.n)
+    return A, b
+
+
+def test_cg_dlanczos_equivalent(poisson):
+    A, b = poisson
+    r1 = classic_cg(A, b, tol=1e-11, maxiter=500)
+    r2 = d_lanczos(A, b, tol=1e-11, maxiter=500)
+    assert r1.converged and r2.converged
+    assert np.allclose(r1.x, r2.x, atol=1e-8)
+    m = min(len(r1.resnorms), len(r2.resnorms))
+    assert np.allclose(r1.resnorms[:m], r2.resnorms[:m], rtol=1e-6)
+
+
+def test_ghysels_pcg_matches_cg(poisson):
+    A, b = poisson
+    r1 = classic_cg(A, b, tol=1e-11, maxiter=500)
+    r2 = ghysels_pcg(A, b, tol=1e-11, maxiter=500)
+    assert r2.converged and abs(r1.iters - r2.iters) <= 1
+    assert np.allclose(r1.x, r2.x, atol=1e-7)
+
+
+@pytest.mark.parametrize("l", [1, 2, 3, 5])
+def test_plcg_matches_cg_iterates(poisson, l):
+    """Paper Sec. 2.2 / Fig. 1: identical convergence in exact arithmetic."""
+    A, b = poisson
+    ref = classic_cg(A, b, tol=1e-11, maxiter=500)
+    r = plcg(A, b, l=l, tol=1e-11, maxiter=500, spectrum=(0, 8))
+    assert r.converged
+    # rounding amplification grows with l (Sec. 4); compare the pre-
+    # stagnation segment with a depth-dependent tolerance
+    m = min(len(ref.resnorms), len(r.resnorms), int(ref.iters * 0.7))
+    assert np.allclose(r.resnorms[:m], ref.resnorms[:m], rtol=1e-4 * l * l)
+    assert np.linalg.norm(b - A @ r.x) <= 20 * np.linalg.norm(b - A @ ref.x)
+
+
+@pytest.mark.parametrize("l", [1, 3])
+def test_plcg_implicit_residual_is_true_residual(poisson, l):
+    """Theorem 9: |zeta_k| == ||b - A x_k|| up to rounding."""
+    A, b = poisson
+    r = plcg(A, b, l=l, tol=1e-8, maxiter=300, spectrum=(0, 8),
+             trace_gaps=True)
+    imp = np.array(r.info["traces"][0].implicit_resnorms)
+    true = np.array(r.info["traces"][0].true_resnorms)
+    m = min(len(imp), len(true))
+    mask = true[:m] > 1e-10        # before stagnation rounding dominates
+    assert np.allclose(imp[:m][mask], true[:m][mask], rtol=1e-4)
+
+
+def test_plcg_symmetry_exploit_consistent(poisson):
+    A, b = poisson
+    r1 = plcg(A, b, l=3, tol=1e-10, maxiter=200, spectrum=(0, 8),
+              exploit_symmetry=True)
+    r2 = plcg(A, b, l=3, tol=1e-10, maxiter=200, spectrum=(0, 8),
+              exploit_symmetry=False)
+    m = min(len(r1.resnorms), len(r2.resnorms)) - 2
+    assert np.allclose(r1.resnorms[:m], r2.resnorms[:m], rtol=1e-6)
+
+
+def test_plcg_preconditioned(poisson):
+    A, b = poisson
+    dense = poisson2d_dense(24, 24)
+    M = block_jacobi_for(A, dense, nblocks=4)
+    ref = classic_cg(A, b, tol=1e-10, maxiter=500, M=M)
+    for l in (1, 2):
+        r = plcg(A, b, l=l, tol=1e-10, maxiter=500, M=M, spectrum=(0, 2))
+        assert r.converged
+        assert np.linalg.norm(b - A @ r.x) < 1e-7
+    assert ref.converged
+
+
+def test_plcg_breakdown_restart():
+    """Ill-conditioned + deliberately bad (monomial) shifts must break down
+    and restart (paper Remark 8 / Fig. 1 right)."""
+    A = random_spd_dense(120, cond=1e8, spectrum="geometric", seed=3)
+    b = A @ np.ones(120)
+    r = plcg(A, b, l=3, tol=1e-9, maxiter=600, sigma=monomial_shifts(3),
+             max_restarts=3)
+    assert r.breakdowns >= 1          # monomial basis must collapse
+
+
+def test_plcg_accuracy_degrades_with_depth():
+    """Paper Sec. 4 / Table 2: attainable accuracy decreases with l."""
+    A = poisson2d(40, 40)
+    b = A @ (np.ones(A.n) / 40.0)
+    accs = {}
+    for l in (1, 3):
+        r = plcg(A, b, l=l, tol=0.0, maxiter=250, spectrum=(0, 8),
+                 trace_gaps=True, max_restarts=0)
+        tr = r.true_resnorms
+        accs[l] = min(tr) if tr else np.inf
+    assert accs[3] >= accs[1] * 0.5   # deeper pipeline never (much) better
+
+
+def test_poisson3d_solve():
+    A = poisson3d(8, 8, 8)
+    b = A @ np.ones(A.n)
+    r = plcg(A, b, l=2, tol=1e-10, maxiter=200, spectrum=(0, 12))
+    assert r.converged
+
+
+def test_jacobi_preconditioner(poisson):
+    A, b = poisson
+    M = jacobi(A)
+    r = classic_cg(A, b, tol=1e-10, maxiter=500, M=M)
+    assert r.converged
+
+
+# ----------------------------- p(l)-GMRES ---------------------------------
+
+@pytest.mark.parametrize("l", [1, 2, 3])
+def test_plgmres_structure(l):
+    A = poisson2d(12, 12)
+    b = A @ np.ones(A.n)
+    r = plgmres(A, b, l=l, m=12, spectrum=(0, 8))
+    H, V = r.info["H"], r.info["V"]
+    k = H.shape[1]
+    # symmetric A => tridiagonal Hessenberg (Corollary 4)
+    assert np.max(np.abs(np.triu(H[:-1], 2))) < 1e-8
+    # orthonormal Krylov basis
+    Vk = V[: k + 1]
+    assert np.max(np.abs(Vk @ Vk.T - np.eye(k + 1))) < 1e-5
+    # Arnoldi relation A V_k = V_{k+1} H
+    AV = np.stack([A @ V[j] for j in range(k)])
+    assert np.max(np.abs(AV - H[: k + 1, :k].T @ Vk)) < 1e-8
+    # banded G (Lemma 5): zero below the 2l+1 band
+    G = r.info["G"]
+    for i in range(G.shape[1]):
+        assert np.max(np.abs(G[: max(0, i - 2 * l), i]), initial=0.0) < 1e-8
+
+
+def test_plgmres_fom_equals_cg():
+    """Remark 6: p(l)-FOM == CG iterates for SPD systems."""
+    A = poisson2d(12, 12)
+    b = A @ np.ones(A.n)
+    rf = plgmres(A, b, l=2, m=12, spectrum=(0, 8), mode="fom")
+    rc = classic_cg(A, b, tol=0.0, maxiter=12)
+    assert np.linalg.norm(rf.x - rc.x) < 1e-8
+
+
+def test_chebyshev_shifts_minimize_poly_norm():
+    """Chebyshev shifts beat monomial shifts on ||P_l(A)|| (Lemma 15)."""
+    A = poisson2d_dense(12, 12)
+    for l in (2, 3):
+        cheb = chebyshev_shifts(0, 8, l)
+        Pc = np.eye(A.shape[0])
+        Pm = np.eye(A.shape[0])
+        for i in range(l):
+            Pc = (A - cheb[i] * np.eye(A.shape[0])) @ Pc
+            Pm = A @ Pm
+        assert np.linalg.norm(Pc, 2) < np.linalg.norm(Pm, 2)
+
+
+def test_plminres_indefinite():
+    """Remark 6: pipelined MINRES solves symmetric indefinite systems."""
+    from repro.core.linop import dense_operator
+    from repro.core.plminres import plminres
+    rng = np.random.default_rng(1)
+    n = 80
+    Q, _ = np.linalg.qr(rng.standard_normal((n, n)))
+    eigs = np.concatenate([-np.linspace(0.5, 1.0, n // 4),
+                           np.linspace(0.2, 1.0, n - n // 4)])
+    A = dense_operator((Q * eigs) @ Q.T)
+    b = A @ np.ones(n)
+    r = plminres(A, b, l=2, m=n, spectrum=(float(eigs.min()),
+                                           float(eigs.max())))
+    assert np.linalg.norm(b - A @ r.x) < 1e-6 * np.linalg.norm(b)
+
+
+def test_plminres_residual_optimality():
+    """MINRES residual never exceeds the CG residual on SPD systems."""
+    from repro.core.plminres import plminres
+    A = poisson2d(12, 12)
+    b = A @ np.ones(A.n)
+    for m in (5, 10, 15):
+        rm = plminres(A, b, l=1, m=m, spectrum=(0, 8))
+        rc = classic_cg(A, b, tol=0.0, maxiter=m)
+        assert (np.linalg.norm(b - A @ rm.x)
+                <= np.linalg.norm(b - A @ rc.x) * (1 + 1e-8))
