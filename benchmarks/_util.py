@@ -1,0 +1,22 @@
+"""Shared benchmark helpers."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def timeit_us(fn, reps: int = 3) -> float:
+    """Mean wall time of ``fn()`` in microseconds.
+
+    One untimed warmup call absorbs jit compilation; the last timed
+    result is blocked on so async jax dispatch is included in the
+    measurement (non-jax results pass through untouched).
+    """
+    jax.block_until_ready(fn())
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(reps):
+        out = fn()
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6

@@ -1,0 +1,69 @@
+"""Unified-front-end benchmarks: per-method dispatch cost through
+``repro.core.solve`` and the batched multi-RHS vmap(scan) engine vs a loop
+of single-RHS solves.  Rows follow the ``name,us_per_call,derived``
+contract of ``benchmarks.run``."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks._util import timeit_us as _timeit
+
+
+def engine_dispatch():
+    """One solve() per registered method on the small Poisson problem."""
+    from repro.core import methods, solve
+    from repro.operators import poisson2d
+    A = poisson2d(32, 32)
+    b = A @ np.ones(A.n)
+    rows = []
+    for m in methods():
+        r = solve(A, b, method=m, l=2, tol=1e-4, maxiter=300,
+                  spectrum=(0.0, 8.0))
+        us = _timeit(lambda m=m: solve(A, b, method=m, l=2, tol=1e-4,
+                                       maxiter=300, spectrum=(0.0, 8.0)),
+                     reps=1)
+        rows.append((f"engine/{m}", us,
+                     f"iters={r.iters};conv={r.converged}"))
+    return rows
+
+
+def engine_batched():
+    """Batched (8, n) multi-RHS vmap(scan) vs 8 single-RHS scan solves."""
+    from repro.core import solve
+    from repro.operators import poisson2d
+    A = poisson2d(32, 32)
+    rng = np.random.default_rng(0)
+    B = np.stack([np.asarray(A @ rng.standard_normal(A.n))
+                  for _ in range(8)])
+    kw = dict(l=2, tol=1e-4, maxiter=200, spectrum=(0.0, 8.0))
+    rows = []
+    t_batch = _timeit(lambda: solve(A, B, method="plcg_scan", **kw), reps=1)
+    t_loop = _timeit(
+        lambda: [solve(A, B[j], method="plcg_scan", **kw)
+                 for j in range(B.shape[0])], reps=1)
+    r = solve(A, B, method="plcg_scan", **kw)
+    conv = int(np.asarray(r.info["per_rhs_converged"]).sum())
+    rows.append(("engine/batched_8rhs", t_batch,
+                 f"loop_us={t_loop:.0f};speedup={t_loop / t_batch:.2f}x;"
+                 f"converged={conv}/8"))
+    return rows
+
+
+def engine_backends():
+    """Scan engine with the fused-kernel backends on one problem."""
+    from repro.core import solve
+    from repro.operators import poisson2d
+    A = poisson2d(32, 32)
+    b = A @ np.ones(A.n)
+    rows = []
+    for backend in (None, "ref"):
+        tag = backend or "inline"
+        us = _timeit(lambda be=backend: solve(
+            A, b, method="plcg_scan", l=2, tol=1e-4, maxiter=200,
+            spectrum=(0.0, 8.0), backend=be), reps=1)
+        rows.append((f"engine/scan_backend_{tag}", us, "kernels=K4,K5"))
+    return rows
+
+
+ALL = [engine_dispatch, engine_batched, engine_backends]
+SMOKE = [engine_dispatch, engine_batched]

@@ -2,21 +2,15 @@
 for the TPU kernels) + derived HBM-traffic model for the fused kernels."""
 from __future__ import annotations
 
-import time
-
 import jax
 import jax.numpy as jnp
 
+from benchmarks._util import timeit_us
 from repro.kernels import ref
 
 
 def _timeit(fn, reps=10):
-    fn()[0].block_until_ready() if isinstance(fn(), tuple) else jax.block_until_ready(fn())
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        out = fn()
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / reps * 1e6
+    return timeit_us(fn, reps=reps)
 
 
 def kernel_times():

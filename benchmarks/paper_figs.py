@@ -17,10 +17,9 @@ printed by benchmarks.run.  The mapping to the paper:
 """
 from __future__ import annotations
 
-import time
-
 import numpy as np
 
+from benchmarks._util import timeit_us
 from repro.core.cg import classic_cg
 from repro.core.pcg import ghysels_pcg
 from repro.core.plcg import plcg
@@ -30,11 +29,7 @@ from repro.operators.spd import TABLE2_SUITE, spd_with_spectrum
 
 
 def _timeit(fn, reps=3):
-    fn()
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        fn()
-    return (time.perf_counter() - t0) / reps * 1e6
+    return timeit_us(fn, reps=reps)
 
 
 def fig1_convergence():

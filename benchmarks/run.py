@@ -1,15 +1,37 @@
 """Benchmark harness: one function per paper table/figure + kernel timings
-+ the dry-run roofline aggregation.  Prints ``name,us_per_call,derived``
-CSV rows (the contract consumed by EXPERIMENTS.md)."""
++ the unified-front-end groups + the dry-run roofline aggregation.  Prints
+``name,us_per_call,derived`` CSV rows (the contract consumed by
+EXPERIMENTS.md).
+
+``--smoke`` runs a fast subset (front-end dispatch, batched engine, kernel
+micro-times, the structural Table-1 rows) for the CI benchmark-smoke job:
+the rows must *print*, no timing is asserted.
+"""
 from __future__ import annotations
 
+import argparse
+import pathlib
 import sys
 import time
 
+# make `python benchmarks/run.py` work from anywhere (not only
+# `python -m benchmarks.run` from the repo root)
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
 
-def main() -> None:
-    from benchmarks import kernels_bench, paper_figs, roofline
-    groups = list(paper_figs.ALL) + list(kernels_bench.ALL) + list(roofline.ALL)
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI subset; asserts nothing about timings")
+    args = ap.parse_args(argv)
+
+    from benchmarks import engine_bench, kernels_bench, paper_figs, roofline
+    if args.smoke:
+        groups = (list(engine_bench.SMOKE) + list(kernels_bench.ALL)
+                  + [paper_figs.table1_cost_model])
+    else:
+        groups = (list(paper_figs.ALL) + list(kernels_bench.ALL)
+                  + list(engine_bench.ALL) + list(roofline.ALL))
     print("name,us_per_call,derived")
     failures = 0
     for fn in groups:
@@ -27,6 +49,7 @@ def main() -> None:
                          f"{time.time()-t0:.1f}s]\n")
     if failures:
         sys.stderr.write(f"{failures} benchmark group(s) failed\n")
+        sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -1,14 +1,13 @@
 """Reproduce the paper's attainable-accuracy experiments (Figs. 1/6/9).
 
-Runs classic CG, Ghysels p-CG and p(l)-CG for l = 1,2,3 on the 200x200
-Poisson problem and reports where each variant's true residual stagnates,
-plus the rounding-error diagnostics of Sec. 4 (basis/residual gaps).
+Runs classic CG, Ghysels p-CG and p(l)-CG for l = 1,2,3 -- all through the
+unified ``repro.core.solve`` front-end -- on the 200x200 Poisson problem
+and reports where each variant's true residual stagnates, plus the
+rounding-error diagnostics of Sec. 4 (basis/residual gaps).
 """
 import numpy as np
 
-from repro.core.cg import classic_cg
-from repro.core.pcg import ghysels_pcg
-from repro.core.plcg import plcg
+from repro.core import solve
 from repro.operators import poisson2d
 
 n = 200
@@ -17,13 +16,15 @@ b = A @ (np.ones(A.n) / np.sqrt(A.n))
 iters = 400
 
 rows = []
-r = classic_cg(A, b, tol=0.0, maxiter=iters, trace_true_residual=True)
+r = solve(A, b, method="cg", tol=0.0, maxiter=iters,
+          trace_true_residual=True)
 rows.append(("CG", min(r.true_resnorms)))
-r = ghysels_pcg(A, b, tol=0.0, maxiter=iters, trace_true_residual=True)
+r = solve(A, b, method="pcg", tol=0.0, maxiter=iters,
+          trace_true_residual=True)
 rows.append(("p-CG (Ghysels)", min(r.true_resnorms)))
 for l in (1, 2, 3):
-    r = plcg(A, b, l=l, tol=0.0, maxiter=iters, spectrum=(0.0, 8.0),
-             trace_gaps=True, max_restarts=0)
+    r = solve(A, b, method="plcg", l=l, tol=0.0, maxiter=iters,
+              spectrum=(0.0, 8.0), trace_gaps=True, max_restarts=0)
     tr = r.true_resnorms or [float("nan")]
     gaps = r.info["traces"][0].residual_gap_norms if r.info.get("traces") else []
     rows.append((f"p({l})-CG", min(tr)))

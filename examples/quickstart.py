@@ -1,11 +1,14 @@
-"""Quickstart: solve a 2D Poisson system with deep-pipelined CG (p(l)-CG).
+"""Quickstart: solve a 2D Poisson system through the unified front-end.
+
+Every Krylov method in the library dispatches through one call:
+
+    repro.core.solve(A, b, method=..., l=..., M=...)
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro.core.cg import classic_cg
-from repro.core.plcg import plcg
+from repro.core import describe_methods, solve
 from repro.operators import poisson2d
 
 # the paper's model problem: unscaled 5-point stencil, spectrum in (0, 8)
@@ -13,16 +16,32 @@ A = poisson2d(100, 100)
 x_true = np.ones(A.n)
 b = A @ x_true
 
-print("method      iters  converged   |b - A x|")
-ref = classic_cg(A, b, tol=1e-8, maxiter=1000)
-print(f"CG         {ref.iters:6d}  {ref.converged!s:9}  "
-      f"{np.linalg.norm(b - A @ ref.x):.3e}")
+print("method        l   iters  converged   |b - A x|")
+# the numpy reference methods run in fp64; the jitted scan engine runs in
+# jax's default fp32, so it gets an fp32-appropriate tolerance
+for method, l, tol in [("cg", 1, 1e-8), ("pcg", 1, 1e-8),
+                       ("dlanczos", 1, 1e-8), ("plcg", 1, 1e-8),
+                       ("plcg", 2, 1e-8), ("plcg", 3, 1e-8),
+                       ("plcg_scan", 2, 1e-5)]:
+    r = solve(A, b, method=method, l=l, tol=tol, maxiter=1000,
+              spectrum=(0.0, 8.0))
+    res = np.linalg.norm(b - A @ np.asarray(r.x))
+    print(f"{method:12s} {l:2d}  {r.iters:6d}  {r.converged!s:9}  "
+          f"{res:.3e}   (breakdowns: {r.breakdowns})")
 
-for l in (1, 2, 3):
-    r = plcg(A, b, l=l, tol=1e-8, maxiter=1000, spectrum=(0.0, 8.0))
-    print(f"p({l})-CG    {r.iters:6d}  {r.converged!s:9}  "
-          f"{np.linalg.norm(b - A @ r.x):.3e}   "
-          f"(breakdowns: {r.breakdowns})")
+# batched multi-RHS: one jitted vmap(lax.scan) over all right-hand sides;
+# converged lanes freeze (per-lane select) while the others keep iterating
+rng = np.random.default_rng(0)
+B = np.stack([np.asarray(A @ rng.standard_normal(A.n)) for _ in range(4)])
+rb = solve(A, B, method="plcg_scan", l=2, tol=1e-5, maxiter=1000,
+           spectrum=(0.0, 8.0))
+print(f"\nbatched p(2)-CG over {B.shape[0]} right-hand sides: "
+      f"per-RHS iters = {[int(k) for k in rb.info['per_rhs_iters']]}, "
+      f"per-RHS converged = {[bool(c) for c in rb.info['per_rhs_converged']]}")
+
+print("\nRegistered methods:")
+for name, desc in describe_methods().items():
+    print(f"  {name:10s} {desc}")
 
 print("\nIn exact arithmetic all rows produce identical iterates; the "
       "pipelined variants\nhide the global reduction of iteration i behind "

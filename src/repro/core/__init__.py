@@ -1,3 +1,28 @@
-# The paper's primary contribution — implement the SYSTEM here
-# (scheduler, optimizer, data path, serving loop, etc.) in the
-# host framework. Add sibling subpackages for substrates.
+"""Core solver library: the paper's Krylov methods behind one front-end.
+
+``repro.core.solve(A, b, method=..., l=..., M=...)`` dispatches every
+registered solver (``cg``, ``pcg``, ``plcg``, ``plcg_scan``, ``dlanczos``,
+``plminres``) through a single signature and a common ``SolveResult``
+contract, including the batched multi-RHS ``vmap(scan)`` path.  Individual
+algorithm modules (``cg.py``, ``plcg.py``, ``plcg_scan.py``, ...) stay
+importable directly for research use.
+"""
+from .engine import (as_operator, describe_methods, get_method, methods,
+                     register, solve)
+from .linop import (LinearOperator, Preconditioner, dense_operator,
+                    identity_preconditioner)
+from .results import SolveResult
+
+__all__ = [
+    "LinearOperator",
+    "Preconditioner",
+    "SolveResult",
+    "as_operator",
+    "dense_operator",
+    "describe_methods",
+    "get_method",
+    "identity_preconditioner",
+    "methods",
+    "register",
+    "solve",
+]

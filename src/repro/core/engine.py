@@ -1,0 +1,375 @@
+"""Unified solver engine: one front-end for every Krylov method in the repo.
+
+``solve(A, b, method=..., l=..., M=...)`` dispatches through a method
+registry that every solver registers into with a common
+:class:`~repro.core.results.SolveResult` contract:
+
+  =============  ========================================================
+  ``cg``         classic Hestenes-Stiefel CG (paper Alg. 4)
+  ``pcg``        Ghysels-Vanroose pipelined CG, depth 1 (paper Alg. 5)
+  ``plcg``       deep-pipelined p(l)-CG, python reference (paper Alg. 2)
+  ``plcg_scan``  jitted ``lax.scan`` p(l)-CG production engine (Alg. 3)
+  ``dlanczos``   direct Lanczos (exact-arithmetic oracle, Remark 7)
+  ``plminres``   deep-pipelined MINRES (paper Remark 6; indefinite OK)
+  =============  ========================================================
+
+Batched multi-RHS: a 2-D right-hand side ``B`` of shape ``(nrhs, n)``
+solves all systems at once.  For the scan-engine methods (``plcg``,
+``plcg_scan``) the batch runs as **one jitted ``vmap`` of the
+``lax.scan`` engine** -- a single XLA compilation, a single fused program
+in which every per-iteration reduction covers all right-hand sides.
+Per-RHS convergence is masked inside the scan: a converged column's
+state is frozen through the ``jnp.where``/``lax.select`` commit gate of
+the engine body (under ``vmap`` that gate batches into a per-lane
+``select``), mirroring how the paper's pipeline keeps all lanes busy
+while individual systems finish at different iterations.  Methods
+without a batched engine fall back to a loop of single-RHS solves.
+
+The ``backend`` switch ("pallas" | "ref" | "auto" | None) selects the
+fused kernels used inside the scan engine's hot path (see
+``plcg_scan``); it is threaded through both the single-RHS and the
+batched paths.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .cg import classic_cg
+from .dlanczos import d_lanczos
+from .linop import LinearOperator, dense_operator
+from .pcg import ghysels_pcg
+from .plcg import plcg
+from .plcg_scan import plcg_solve
+from .plcg_scan import plcg_scan as _plcg_scan_engine
+from .plminres import plminres
+from .results import SolveResult
+from .shifts import chebyshev_shifts
+
+Array = Any
+
+_REGISTRY: dict[str, "MethodSpec"] = {}
+
+#: Trace-time log of the batched vmap(scan) engine: one entry is appended
+#: each time XLA *traces* (= compiles) the batched engine, so tests can
+#: assert that a batched ``solve(A, B)`` compiles exactly once.
+BATCH_TRACE_EVENTS: list[tuple] = []
+
+
+@dataclasses.dataclass(frozen=True)
+class MethodSpec:
+    """Registry entry for one solver method.
+
+    ``fn(A, b, x0, *, tol, maxiter, M, l, sigma, spectrum, backend, **opts)``
+    must return a :class:`SolveResult`.  ``batched`` is ``"vmap"`` when the
+    method is backed by the jittable scan engine (batch solves run as one
+    ``jit(vmap(scan))``) and ``"loop"`` otherwise.
+    """
+
+    name: str
+    fn: Callable[..., SolveResult]
+    batched: str = "loop"
+    description: str = ""
+
+
+def register(name: str, *, batched: str = "loop", description: str = ""):
+    """Decorator registering a solver adapter under ``name``."""
+    if batched not in ("loop", "vmap"):
+        raise ValueError(f"batched must be 'loop' or 'vmap', got {batched!r}")
+
+    def deco(fn):
+        _REGISTRY[name] = MethodSpec(name=name, fn=fn, batched=batched,
+                                     description=description)
+        return fn
+
+    return deco
+
+
+def methods() -> tuple[str, ...]:
+    """Registered method names, sorted."""
+    return tuple(sorted(_REGISTRY))
+
+
+def describe_methods() -> dict[str, str]:
+    """name -> one-line description for every registered method."""
+    return {k: _REGISTRY[k].description for k in methods()}
+
+
+def get_method(name: str) -> MethodSpec:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown method {name!r}; registered methods: "
+            f"{', '.join(methods())}") from None
+
+
+def as_operator(A, b=None) -> LinearOperator:
+    """Coerce ``A`` (LinearOperator | dense square array | matvec callable)
+    into a :class:`LinearOperator`."""
+    if isinstance(A, LinearOperator):
+        return A
+    if hasattr(A, "ndim") and getattr(A, "ndim") == 2:
+        if A.shape[0] != A.shape[1]:
+            raise ValueError(f"dense operator must be square, got {A.shape}")
+        return dense_operator(A)
+    if callable(A):
+        if b is None:
+            raise ValueError("a matvec callable needs b to infer the "
+                             "problem dimension")
+        n = b.shape[-1]
+        return LinearOperator(matvec=A, n=n, name="matvec")
+    raise TypeError(f"cannot interpret {type(A).__name__} as a linear "
+                    "operator")
+
+
+def _resolve_sigma(sigma, spectrum, l: int) -> list[float]:
+    if sigma is not None:
+        sig = [float(s) for s in sigma]
+        if len(sig) != l:
+            raise ValueError(f"need exactly l={l} shifts, got {len(sig)}")
+        return sig
+    lmin, lmax = spectrum if spectrum is not None else (0.0, 8.0)
+    return chebyshev_shifts(lmin, lmax, l)
+
+
+# --------------------------------------------------------------------------
+# the front-end
+# --------------------------------------------------------------------------
+
+def solve(
+    A,
+    b,
+    method: str = "plcg",
+    *,
+    x0=None,
+    tol: float = 1e-8,
+    maxiter: int = 1000,
+    M: Optional[Callable] = None,
+    l: int = 1,
+    sigma: Optional[Sequence[float]] = None,
+    spectrum: Optional[tuple] = None,
+    backend: Optional[str] = None,
+    **options,
+) -> SolveResult:
+    """Solve ``A x = b`` (or a stacked batch ``A X[j] = B[j]``).
+
+    Args:
+      A: :class:`LinearOperator`, dense square array, or matvec callable.
+      b: right-hand side ``(n,)``, or ``(nrhs, n)`` for a batched solve.
+      method: one of :func:`methods` (default the paper's p(l)-CG).
+      x0: initial guess, same shape as ``b`` (default zeros).
+      tol: relative residual tolerance (``0`` disables early stopping).
+      maxiter: solution-update budget.
+      M: SPD preconditioner callable applying ``M^{-1} v``.
+      l: pipeline depth (pipelined methods only).
+      sigma: l auxiliary-basis shifts; default Chebyshev roots on
+        ``spectrum`` (itself defaulting to the Poisson interval (0, 8)).
+      backend: fused-kernel backend for the scan engine
+        ("pallas" | "ref" | "auto" | None), ignored by reference methods.
+      **options: method-specific extras (``trace_gaps``, ``record_G``,
+        ``max_restarts``, ``exploit_symmetry``, ...).
+
+    Returns:
+      :class:`SolveResult`; for batched input, ``x`` has shape
+      ``(nrhs, n)``, ``resnorms`` is a per-RHS list of traces, and
+      ``info["per_rhs_converged"]`` / ``info["per_rhs_iters"]`` hold the
+      per-system outcomes.
+    """
+    spec = get_method(method)
+    op = as_operator(A, b)
+    if getattr(b, "ndim", 1) == 2:
+        return _solve_batched(spec, op, b, x0=x0, tol=tol, maxiter=maxiter,
+                              M=M, l=l, sigma=sigma, spectrum=spectrum,
+                              backend=backend, **options)
+    return spec.fn(op, b, x0, tol=tol, maxiter=maxiter, M=M, l=l,
+                   sigma=sigma, spectrum=spectrum, backend=backend,
+                   **options)
+
+
+# --------------------------------------------------------------------------
+# batched multi-RHS paths
+# --------------------------------------------------------------------------
+
+def _solve_batched(spec: MethodSpec, A: LinearOperator, B, *, x0, tol,
+                   maxiter, M, l, sigma, spectrum, backend,
+                   **options) -> SolveResult:
+    nrhs = B.shape[0]
+    if spec.batched == "vmap":
+        return _solve_batched_vmap(spec, A, B, x0=x0, tol=tol,
+                                   maxiter=maxiter, M=M, l=l, sigma=sigma,
+                                   spectrum=spectrum, backend=backend,
+                                   **options)
+    outs = [
+        spec.fn(A, B[j], None if x0 is None else x0[j], tol=tol,
+                maxiter=maxiter, M=M, l=l, sigma=sigma, spectrum=spectrum,
+                backend=backend, **options)
+        for j in range(nrhs)
+    ]
+    return SolveResult(
+        x=np.stack([np.asarray(r.x) for r in outs]),
+        resnorms=[r.resnorms for r in outs],
+        iters=max(r.iters for r in outs),
+        converged=all(r.converged for r in outs),
+        breakdowns=sum(r.breakdowns for r in outs),
+        restarts=sum(r.restarts for r in outs),
+        info={"method": spec.name, "batched": "loop", "nrhs": nrhs,
+              "per_rhs_converged": [r.converged for r in outs],
+              "per_rhs_iters": [r.iters for r in outs]},
+    )
+
+
+@functools.lru_cache(maxsize=16)
+def _batched_engine(method_name: str, matvec, l: int, iters: int, sigma,
+                    tol: float, prec, exploit_symmetry: bool, unroll: int,
+                    backend):
+    """Jitted vmap(scan) engine, cached per configuration so repeated
+    batched solves with the same operator/settings compile only once.
+
+    Keyed on ``matvec``/``prec`` object identity: pass a long-lived
+    ``LinearOperator`` (rather than a fresh dense array each call, which
+    ``as_operator`` wraps in a new closure) to benefit from the cache.
+    The cache retains references to its operators; the small maxsize
+    bounds that retention."""
+    engine = functools.partial(
+        _plcg_scan_engine, matvec, l=l, iters=iters, sigma=sigma, tol=tol,
+        prec=prec, exploit_symmetry=exploit_symmetry, unroll=unroll,
+        backend=backend)
+
+    def _batched(Bb, Xb):
+        # trace-time side effect: fires once per XLA compilation, so the
+        # test suite can assert the batch compiles exactly once
+        if len(BATCH_TRACE_EVENTS) < 4096:      # bounded in long processes
+            BATCH_TRACE_EVENTS.append((method_name, tuple(Bb.shape), l))
+        return jax.vmap(engine)(Bb, Xb)
+
+    return jax.jit(_batched)
+
+
+def _solve_batched_vmap(spec: MethodSpec, A: LinearOperator, B, *, x0, tol,
+                        maxiter, M, l, sigma, spectrum, backend,
+                        exploit_symmetry: bool = True, unroll: int = 1,
+                        **options) -> SolveResult:
+    """One jitted ``vmap`` of the scan engine over the stacked RHS.
+
+    A single XLA compilation covers all ``nrhs`` systems; converged lanes
+    freeze via the engine's per-lane commit select while the remaining
+    lanes keep iterating.  Runs one sweep (no data-dependent restarts --
+    restart-on-breakdown needs per-lane host control flow; use the loop
+    path of the reference ``plcg`` when that matters).
+    """
+    if options:
+        # don't silently drop flags the single-RHS call would honor
+        # (trace_gaps, record_G, max_restarts, ...)
+        raise ValueError(
+            f"options {sorted(options)} are not supported by the batched "
+            "vmap(scan) engine; solve each RHS individually (1-D b) or "
+            "use a loop-batched method (cg, pcg, dlanczos, plminres)")
+    sig = tuple(_resolve_sigma(sigma, spectrum, l))
+    Bj = jnp.asarray(B)
+    if tol and tol < 100 * jnp.finfo(Bj.dtype).eps:
+        import warnings
+        warnings.warn(
+            f"tol={tol:g} is below ~100*eps of the batched engine dtype "
+            f"{Bj.dtype}; lanes will hit maxiter instead of converging -- "
+            "enable jax_enable_x64 or relax tol", stacklevel=4)
+    X0 = jnp.zeros_like(Bj) if x0 is None else jnp.asarray(x0)
+    fn = _batched_engine(spec.name, A.matvec, l, maxiter + l + 1, sig, tol,
+                         M, exploit_symmetry, unroll, backend)
+    out = fn(Bj, X0)
+    resn = np.asarray(out.resnorms)                     # (nrhs, iters)
+    conv = np.asarray(out.converged)
+    brk = np.asarray(out.breakdown)
+    k_done = np.asarray(out.k_done)
+    return SolveResult(
+        x=out.x,
+        # lane j commits |zeta_k| for k = 0..k_done[j] at trace indices
+        # l..l+k_done[j]; slicing by count (not value-filtering) keeps a
+        # legitimate exact-zero residual in the trace
+        resnorms=[[float(r) for r in row[l: l + int(k) + 1]]
+                  for row, k in zip(resn, k_done)],
+        iters=int(k_done.max()) + 1,
+        converged=bool(conv.all()),
+        breakdowns=int(brk.sum()),
+        info={"method": f"p({l})-CG[scan,vmap]", "l": l,
+              "sigma": list(sig), "backend": backend, "batched": "vmap",
+              "nrhs": int(Bj.shape[0]),
+              "per_rhs_converged": conv,
+              "per_rhs_iters": k_done + 1,
+              "per_rhs_breakdown": brk},
+    )
+
+
+# --------------------------------------------------------------------------
+# registered method adapters
+# --------------------------------------------------------------------------
+
+@register("cg", description="classic Hestenes-Stiefel CG (paper Alg. 4)")
+def _method_cg(A, b, x0=None, *, tol=1e-8, maxiter=1000, M=None, l=1,
+               sigma=None, spectrum=None, backend=None, **kw):
+    return classic_cg(A, b, x0, tol=tol, maxiter=maxiter, M=M, **kw)
+
+
+@register("pcg",
+          description="Ghysels-Vanroose pipelined CG, depth 1 (Alg. 5)")
+def _method_pcg(A, b, x0=None, *, tol=1e-8, maxiter=1000, M=None, l=1,
+                sigma=None, spectrum=None, backend=None, **kw):
+    return ghysels_pcg(A, b, x0, tol=tol, maxiter=maxiter, M=M, **kw)
+
+
+@register("dlanczos",
+          description="direct Lanczos, exact-arithmetic oracle (Remark 7)")
+def _method_dlanczos(A, b, x0=None, *, tol=1e-8, maxiter=1000, M=None, l=1,
+                     sigma=None, spectrum=None, backend=None, **kw):
+    return d_lanczos(A, b, x0, tol=tol, maxiter=maxiter, M=M, **kw)
+
+
+@register("plcg", batched="vmap",
+          description="deep-pipelined p(l)-CG reference (paper Alg. 2)")
+def _method_plcg(A, b, x0=None, *, tol=1e-8, maxiter=1000, M=None, l=1,
+                 sigma=None, spectrum=None, backend=None, **kw):
+    return plcg(A, b, x0, l=l, tol=tol, maxiter=maxiter, M=M, sigma=sigma,
+                spectrum=spectrum, **kw)
+
+
+@register("plcg_scan", batched="vmap",
+          description="jitted lax.scan p(l)-CG production engine (Alg. 3)")
+def _method_plcg_scan(A, b, x0=None, *, tol=1e-8, maxiter=1000, M=None, l=1,
+                      sigma=None, spectrum=None, backend=None, **kw):
+    sig = _resolve_sigma(sigma, spectrum, l)
+    bj = jnp.asarray(b)
+    x0j = None if x0 is None else jnp.asarray(x0)
+    x, resnorms, info = plcg_solve(A.matvec, bj, x0j, l=l, sigma=sig,
+                                   tol=tol, maxiter=maxiter, prec=M,
+                                   backend=backend, **kw)
+    return SolveResult(
+        x=x, resnorms=resnorms, iters=info["iterations"],
+        converged=info["converged"], breakdowns=info["breakdowns"],
+        restarts=info["restarts"],
+        info={"method": f"p({l})-CG[scan]", "l": l, "sigma": sig,
+              "backend": backend},
+    )
+
+
+@register("plminres",
+          description="deep-pipelined MINRES (Remark 6; indefinite OK)")
+def _method_plminres(A, b, x0=None, *, tol=1e-8, maxiter=1000, M=None, l=1,
+                     sigma=None, spectrum=None, backend=None, **kw):
+    if M is not None:
+        raise ValueError("plminres does not support preconditioning")
+    r = plminres(A, b, x0, l=l, m=min(maxiter, A.n), sigma=sigma,
+                 spectrum=spectrum, **kw)
+    # plgmres runs a fixed m iterations; grade convergence on the true
+    # residual with the same convention as the other methods (relative to
+    # ||b||, and tol=0 means "never early-converged")
+    x = np.asarray(r.x)
+    bn = float(np.linalg.norm(np.asarray(b)))
+    res = float(np.linalg.norm(np.asarray(b) - np.asarray(A @ x)))
+    r.converged = bool(res <= tol * (bn if bn > 0 else 1.0))
+    r.info["true_resnorm"] = res
+    return r

@@ -73,6 +73,7 @@ def plcg_scan(
     reduce_scalars: Optional[Callable] = None,
     exploit_symmetry: bool = True,
     unroll: int = 1,
+    backend: Optional[str] = None,
 ) -> PLCGOut:
     """Run ``iters`` bodies of p(l)-CG (solution index reaches iters-l-1).
 
@@ -80,9 +81,38 @@ def plcg_scan(
     under jit / inside shard_map.  ``reduce_scalars(payload)`` performs the
     global sum of a stacked scalar payload (identity on a single device,
     ``psum`` in the distributed runtime) -- exactly one call per iteration.
+
+    ``backend`` selects the implementation of the two fused hot-path
+    kernels, the (K5) multi-dot payload and the (K4) sliding-window AXPY:
+
+      * ``None``      -- inline jnp math (bit-exact legacy path);
+      * ``"pallas"``  -- the Pallas TPU kernels (interpret mode on CPU);
+      * ``"ref"``     -- the fused jnp oracles from ``kernels.ref`` (the
+        CPU reference fallback for the Pallas kernels);
+      * ``"auto"``    -- ``"pallas"`` on TPU, ``"ref"`` elsewhere.
+
+    The kernel path is only taken on the single-device full-vector dots
+    (``dot_local is None``); the distributed shard_map runtime keeps its
+    injected local-partial dots.
     """
     if l < 1:
         raise ValueError("l must be >= 1")
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if backend not in (None, "pallas", "ref"):
+        raise ValueError(
+            f"backend must be None, 'auto', 'pallas' or 'ref', got {backend!r}")
+    use_kernels = backend is not None and dot_local is None
+    if use_kernels:
+        from ..kernels.ops import multidot_apply, window_axpy_apply
+        _pl = backend == "pallas"
+
+        def _mdot(Wm, zz):
+            return multidot_apply(Wm, zz, use_pallas=_pl).astype(zz.dtype)
+
+        def _waxpy(Vm, zz, gg, gcc):
+            return window_axpy_apply(Vm, zz, gg, gcc,
+                                     use_pallas=_pl).astype(zz.dtype)
     dot = dot_local or _default_dot
     red = reduce_scalars or (lambda p: p)
     W = 2 * l + 1
@@ -182,8 +212,12 @@ def plcg_scan(
             dlt2 = st.dlt.at[jnp.maximum(c - 1, 0)].set(dlt_c1)
             # -------- (K4) v recurrence (line 17) -------------------------
             # v_c = (z_c - sum_k col[k] v_{c-2l+k}) / gcc ; v_{c-2l+k}=Vw[2l-1-k]
-            vsum = jnp.tensordot(col[:2 * l][::-1], st.Vw[: 2 * l], axes=1)
-            vnew = (st.Zw[l - 1] - vsum) / gcc
+            if use_kernels:
+                vnew = _waxpy(st.Vw[: 2 * l], st.Zw[l - 1],
+                              col[:2 * l][::-1], gcc)
+            else:
+                vsum = jnp.tensordot(col[:2 * l][::-1], st.Vw[: 2 * l], axes=1)
+                vnew = (st.Zw[l - 1] - vsum) / gcc
             Vw2 = jnp.concatenate([vnew[None], st.Vw[:-1]])
             # -------- (K4) z recurrence (line 18) -------------------------
             dsub = jnp.where(c >= 2, st.dlt[jnp.maximum(c - 2, 0)], 0.0)
@@ -207,8 +241,16 @@ def plcg_scan(
             return (Vw2, Gb2, gam2, dlt2, znew, zhnew, brk,
                     x2, p2, eta_k, zeta_k, jnp.maximum(k, st.k_done))
 
+        # compute both phases and select on the (scalar) iteration index:
+        # an actual lax.cond here lowers to an XLA Conditional whose branch
+        # layouts clash with the matvec dot on the CPU thunk runtime when
+        # the engine runs under vmap (batched multi-RHS); warmup is two
+        # AXPYs so evaluating it alongside steady costs nothing, and the
+        # discarded branch's values (incl. div-by-zero garbage during the
+        # first l iterations) are dropped by the select
         (Vw2, Gb2, gam2, dlt2, znew, zhnew, brk, x2, p2, eta2, zeta2,
-         k2) = jax.lax.cond(i >= l, steady, warmup, operand=None)
+         k2) = jax.tree.map(
+            functools.partial(jnp.where, i >= l), steady(None), warmup(None))
 
         Zw2 = jnp.concatenate([znew[None], st.Zw[:-1]])
         Zhw2 = (jnp.concatenate([zhnew[None], st.Zhw[:-1]])
@@ -217,6 +259,8 @@ def plcg_scan(
         lhs = zhnew if prec is not None else znew
         if exploit_symmetry:
             def vdots_full(_):
+                if use_kernels:
+                    return _mdot(Vw2[: l + 1], lhs)
                 return jnp.tensordot(Vw2[: l + 1], lhs, axes=1)
 
             def vdots_one(_):
@@ -224,9 +268,14 @@ def plcg_scan(
                 return out.at[0].set(dot(Vw2[0], lhs))
 
             vd = jax.lax.cond(i < 2 * l - 1, vdots_full, vdots_one, None)
+        elif use_kernels:
+            vd = _mdot(Vw2[: l + 1], lhs)
         else:
             vd = jnp.stack([dot(Vw2[t], lhs) for t in range(l + 1)])
-        zd = jnp.stack([dot(Zw2[t], lhs) for t in range(l)])
+        if use_kernels:
+            zd = _mdot(Zw2[:l], lhs)
+        else:
+            zd = jnp.stack([dot(Zw2[t], lhs) for t in range(l)])
         # mask payload slots whose row index i+1-2l+k is negative (the v
         # window is zero-initialized except v_0, which must not leak into
         # nonexistent rows during warmup)
@@ -260,18 +309,33 @@ def plcg_scan(
 
 
 def plcg_jit(matvec, b, x0=None, *, l, iters, sigma, tol=0.0, prec=None,
-             exploit_symmetry: bool = True, unroll: int = 1) -> PLCGOut:
+             exploit_symmetry: bool = True, unroll: int = 1,
+             backend: Optional[str] = None) -> PLCGOut:
     """Convenience jitted single-device entry point."""
     fn = functools.partial(
         plcg_scan, matvec, l=l, iters=iters, sigma=tuple(sigma), tol=tol,
-        prec=prec, exploit_symmetry=exploit_symmetry, unroll=unroll)
+        prec=prec, exploit_symmetry=exploit_symmetry, unroll=unroll,
+        backend=backend)
     return jax.jit(lambda bb, xx: fn(bb, xx))(b, x0 if x0 is not None
                                               else jnp.zeros_like(b))
 
 
+@functools.lru_cache(maxsize=16)
+def _jitted_sweep(matvec, l, iters, sigma, tol, prec, exploit_symmetry,
+                  unroll, backend):
+    """Cached jitted single sweep so repeated solves with the same
+    operator/settings compile once.  Keyed on ``matvec``/``prec`` object
+    identity: reuse the same callable across calls to benefit (a fresh
+    closure per call falls back to compiling each time)."""
+    return jax.jit(functools.partial(
+        plcg_scan, matvec, l=l, iters=iters, sigma=sigma, tol=tol,
+        prec=prec, exploit_symmetry=exploit_symmetry, unroll=unroll,
+        backend=backend))
+
+
 def plcg_solve(matvec, b, x0=None, *, l, sigma, tol=1e-8, maxiter=1000,
                prec=None, exploit_symmetry: bool = True, max_restarts: int = 5,
-               unroll: int = 1):
+               unroll: int = 1, backend: Optional[str] = None):
     """Driver around the jitted engine: explicit restart on square-root
     breakdown (paper Remark 8), happy-breakdown detection, restart budget.
 
@@ -281,9 +345,8 @@ def plcg_solve(matvec, b, x0=None, *, l, sigma, tol=1e-8, maxiter=1000,
     bnorm = float(jnp.linalg.norm(b))
     if bnorm == 0:
         bnorm = 1.0
-    fn = jax.jit(functools.partial(
-        plcg_scan, matvec, l=l, iters=maxiter + l + 1, sigma=tuple(sigma),
-        tol=tol, prec=prec, exploit_symmetry=exploit_symmetry, unroll=unroll))
+    fn = _jitted_sweep(matvec, l, maxiter + l + 1, tuple(sigma), tol, prec,
+                       exploit_symmetry, unroll, backend)
     resnorms: list[float] = []
     restarts = breakdowns = 0
     total_k = 0

@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map_compat
 from repro.core.plcg_scan import plcg_scan
 from repro.kernels import ops as kops
 
@@ -101,11 +102,11 @@ def dist_plcg(op: DistPoisson, b_global: jax.Array, x0=None, *, l: int,
         return (out.x.reshape(b_blk.shape), out.resnorms, out.converged,
                 out.breakdown)
 
-    fn = jax.shard_map(
+    fn = shard_map_compat(
         local_run, mesh=mesh,
         in_specs=(op.spec(), op.spec()),
         out_specs=(op.spec(), P(), P(), P()),
-        check_vma=False,
+        check=False,
     )
     if x0 is None:
         x0 = jnp.zeros_like(b_global)
@@ -164,10 +165,10 @@ def dist_cg(op: DistPoisson, b_global: jax.Array, *, iters: int,
             jnp.arange(iters))
         return st[0].reshape(b_blk.shape), resn, st[4]
 
-    fn = jax.shard_map(
+    fn = shard_map_compat(
         local_run, mesh=mesh,
         in_specs=(op.spec(),),
         out_specs=(op.spec(), P(), P()),
-        check_vma=False,
+        check=False,
     )
     return jax.jit(fn)(b_global)

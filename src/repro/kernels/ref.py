@@ -13,9 +13,13 @@ def stencil2d_ref(x, halo_n, halo_s, halo_w, halo_e):
 
 
 def multidot_ref(W, z):
-    return (W.astype(jnp.float32) @ z.astype(jnp.float32))
+    # accumulate in at-least-f32 (f64 stays f64 so the x64 solver paths keep
+    # their full precision; bf16/f32 accumulate in f32 like the TPU kernel)
+    acc = jnp.promote_types(W.dtype, jnp.float32)
+    return W.astype(acc) @ z.astype(acc)
 
 
 def window_axpy_ref(V, z, g, gcc):
-    acc = z.astype(jnp.float32) - g.astype(jnp.float32) @ V.astype(jnp.float32)
+    acc_t = jnp.promote_types(V.dtype, jnp.float32)
+    acc = z.astype(acc_t) - g.astype(acc_t) @ V.astype(acc_t)
     return (acc / gcc).astype(V.dtype)

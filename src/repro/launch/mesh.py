@@ -2,28 +2,34 @@
 
 Defined as functions (never module-level constants) so importing this
 module does not touch jax device state.
+
+jax version compat: ``jax.sharding.AxisType`` (and the ``axis_types``
+kwarg of ``jax.make_mesh`` / the modern ``AbstractMesh`` signature) only
+exist on jax >= 0.5; on the 0.4.x line meshes take no axis types and
+``AbstractMesh`` takes a ``((name, size), ...)`` shape tuple.  The
+``make_mesh_compat`` / ``abstract_mesh_compat`` helpers below paper over
+the difference and are the only mesh constructors the rest of the repo
+(and the test suite) should use.
 """
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType
+from ..compat import (HAS_AXIS_TYPES, abstract_mesh_compat,  # noqa: F401
+                      make_mesh_compat)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh_compat(shape, axes)
 
 
 def make_mesh_for(devices: int, model_parallel: int = 1, pods: int = 1):
     """Generic mesh helper for examples/tests on arbitrary device counts."""
     data = devices // (model_parallel * pods)
     if pods > 1:
-        return jax.make_mesh((pods, data, model_parallel),
-                             ("pod", "data", "model"),
-                             axis_types=(AxisType.Auto,) * 3)
-    return jax.make_mesh((data, model_parallel), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+        return make_mesh_compat((pods, data, model_parallel),
+                                ("pod", "data", "model"))
+    return make_mesh_compat((data, model_parallel), ("data", "model"))
 
 
 def make_solver_mesh(*, multi_pod: bool = False):

@@ -1,7 +1,11 @@
-"""Solver launcher: the paper's own workload -- distributed p(l)-CG Poisson
-solves on the device mesh.
+"""Solver launcher: the paper's own workload -- p(l)-CG Poisson solves.
+
+Single device the solve goes through the unified ``repro.core.solve``
+front-end (any registered --method, incl. batched --nrhs > 1); with
+multiple devices it runs the distributed shard_map engine.
 
   PYTHONPATH=src python -m repro.launch.solve --nx 200 --l 2 --tol 1e-5
+  PYTHONPATH=src python -m repro.launch.solve --method plcg_scan --nrhs 8
   PYTHONPATH=src python -m repro.launch.solve --dryrun            # 16x16 mesh
 """
 from __future__ import annotations
@@ -19,6 +23,15 @@ def main(argv=None):
     ap.add_argument("--l", type=int, default=2)
     ap.add_argument("--iters", type=int, default=1500)
     ap.add_argument("--tol", type=float, default=1e-5)
+    ap.add_argument("--method", type=str, default="plcg_scan",
+                    help="registered repro.core.solve method for the "
+                    "single-device path (cg|pcg|plcg|plcg_scan|dlanczos|"
+                    "plminres)")
+    ap.add_argument("--nrhs", type=int, default=1,
+                    help="number of right-hand sides; > 1 runs the batched "
+                    "vmap(scan) multi-RHS engine")
+    ap.add_argument("--backend", type=str, default=None,
+                    help="scan-engine kernel backend: pallas|ref|auto")
     ap.add_argument("--dryrun", action="store_true",
                     help="lower+compile on the production 16x16 (or 2x16x16 "
                     "with --multi-pod) mesh and report roofline terms")
@@ -34,7 +47,8 @@ def main(argv=None):
     from repro.core.shifts import chebyshev_shifts
     from repro.distributed import DistPoisson, dist_plcg
     from repro.distributed.plcg_dist import dist_plcg_solve
-    from repro.launch.mesh import make_mesh_for, make_solver_mesh
+    from repro.launch.mesh import (make_mesh_compat, make_mesh_for,
+                                   make_solver_mesh)
 
     ny = args.ny or args.nx
     sigma = chebyshev_shifts(0.0, 8.0, args.l)
@@ -46,9 +60,7 @@ def main(argv=None):
         # the solver mesh is a flat 2-D processor grid; multi-pod folds the
         # pod axis into rows (32 x 16 subdomains)
         if args.multi_pod:
-            import jax as _j
-            mesh = _j.make_mesh((32, 16), ("data", "model"),
-                                axis_types=(_j.sharding.AxisType.Auto,) * 2)
+            mesh = make_mesh_compat((32, 16), ("data", "model"))
         px, py = mesh.shape["data"], mesh.shape["model"]
         nx = max(args.nx, px * 128)       # production-scale local blocks
         nyy = max(ny, py * 128)
@@ -88,24 +100,44 @@ def main(argv=None):
 
     # real solve on available devices
     ndev = len(jax.devices())
+    from repro.operators import poisson2d
+    A = poisson2d(args.nx, ny)
+    xs = np.ones((args.nx, ny))
+    b_flat = np.asarray(A @ xs.reshape(-1))
+
+    if ndev == 1:
+        # single device: the unified front-end drives any registered method
+        from repro.core import solve
+        if args.nrhs > 1:
+            rng = np.random.default_rng(0)
+            B = np.stack([b_flat] + [np.asarray(A @ rng.standard_normal(A.n))
+                                     for _ in range(args.nrhs - 1)])
+        else:
+            B = b_flat
+        t0 = time.time()
+        r = solve(A, B, method=args.method, l=args.l, tol=args.tol,
+                  maxiter=args.iters, sigma=sigma, backend=args.backend)
+        dt = time.time() - t0
+        x = np.asarray(r.x)
+        res = np.linalg.norm(b_flat - A @ (x[0] if args.nrhs > 1 else x))
+        print(f"{args.method} (l={args.l}, nrhs={args.nrhs}) on "
+              f"{args.nx}x{ny}: {r.iters} iters, {dt:.2f}s, "
+              f"|b-Ax| = {res:.3e}, converged={r.converged}")
+        return x
+
     mp = 1
     while mp * mp <= ndev and ny % mp == 0:
         mp *= 2
     mp //= 2
     mesh = make_mesh_for(ndev, model_parallel=max(mp, 1))
     op = DistPoisson(args.nx, ny, mesh)
-    A_rows = 4.0
-    xs = np.ones((args.nx, ny))
-    # b = A @ 1 (interior nodes see 4 - #neighbors)
-    from repro.operators import poisson2d
-    A = poisson2d(args.nx, ny)
-    b = jnp.asarray((A @ xs.reshape(-1)).reshape(args.nx, ny))
+    b = jnp.asarray(b_flat.reshape(args.nx, ny))
     t0 = time.time()
     x, resn, info = dist_plcg_solve(op, b, l=args.l, maxiter=args.iters,
                                     sigma=sigma, tol=args.tol)
     x = np.asarray(x)
     dt = time.time() - t0
-    res = np.linalg.norm((A @ xs.reshape(-1)) - (A @ x.reshape(-1)))
+    res = np.linalg.norm(b_flat - (A @ x.reshape(-1)))
     print(f"p({args.l})-CG on {args.nx}x{ny} over {ndev} devices: "
           f"{len(resn)} iters, {dt:.2f}s, |b-Ax| = {res:.3e}, "
           f"converged={info['converged']}, restarts={info['restarts']}")

@@ -337,6 +337,7 @@ def moe_layer(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
     """
     from . import sharding as shd
     import jax as _jax
+    from ..compat import shard_map_compat
     from jax.sharding import PartitionSpec as P
 
     mesh = shd.get_mesh()
@@ -360,12 +361,12 @@ def moe_layer(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
 
     bspec = batch_axes if len(batch_axes) > 1 else (batch_axes[0] if batch_axes else None)
     out_spec = P(bspec, "model" if scatter_ok else None, None)
-    fn = _jax.shard_map(
+    fn = shard_map_compat(
         local_fn, mesh=mesh,
         in_specs=(P(bspec, None, None), P(None, None),
                   P("model", None, None), P("model", None, None)),
         out_specs=out_spec,
-        check_vma=False,
+        check=False,
     )
     return fn(x, p["router"], p["w_in"], p["w_out"])
 

@@ -1,6 +1,11 @@
 """Multi-device tests (subprocess with 8 forced host devices): the
 distributed solver must reproduce the single-device trace, and the MoE
-shard_map path must match the local reference."""
+shard_map path must match the local reference.
+
+The subprocess env (8 host devices, src on PYTHONPATH) comes from the
+``dist_env`` conftest fixture so the suite is deterministic on
+single-device hosts and in CI; meshes are built through the
+version-portable ``repro.launch.mesh.make_mesh_compat``."""
 import json
 import os
 import subprocess
@@ -12,10 +17,7 @@ import pytest
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
-def _run(code: str) -> dict:
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    env["PYTHONPATH"] = os.path.join(REPO, "src")
+def _run(code: str, env: dict) -> dict:
     out = subprocess.run([sys.executable, "-c", code], env=env,
                          capture_output=True, text=True, timeout=560)
     assert out.returncode == 0, out.stderr[-3000:]
@@ -23,18 +25,17 @@ def _run(code: str) -> dict:
 
 
 @pytest.mark.slow
-def test_dist_plcg_matches_reference():
+def test_dist_plcg_matches_reference(dist_env):
     res = _run(textwrap.dedent("""
         import json, jax
         jax.config.update("jax_enable_x64", True)
         import jax.numpy as jnp, numpy as np
-        from jax.sharding import AxisType
+        from repro.launch.mesh import make_mesh_compat
         from repro.distributed import dist_plcg, DistPoisson
         from repro.core.shifts import chebyshev_shifts
         from repro.core.plcg import plcg
         from repro.operators import poisson2d
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(AxisType.Auto,)*2)
+        mesh = make_mesh_compat((4, 2), ("data", "model"))
         nx = ny = 32
         op = DistPoisson(nx, ny, mesh)
         A = poisson2d(nx, ny)
@@ -49,21 +50,20 @@ def test_dist_plcg_matches_reference():
         res = float(np.linalg.norm(b_np - A @ np.asarray(x).reshape(-1)))
         print(json.dumps({"trace": ok_trace, "res": res,
                           "conv": bool(conv)}))
-    """))
+    """), dist_env)
     assert res["trace"] and res["conv"] and res["res"] < 1e-7
 
 
 @pytest.mark.slow
-def test_dist_cg_converges():
+def test_dist_cg_converges(dist_env):
     res = _run(textwrap.dedent("""
         import json, jax
         jax.config.update("jax_enable_x64", True)
         import jax.numpy as jnp, numpy as np
-        from jax.sharding import AxisType
+        from repro.launch.mesh import make_mesh_compat
         from repro.distributed import dist_cg, DistPoisson
         from repro.operators import poisson2d
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(AxisType.Auto,)*2)
+        mesh = make_mesh_compat((2, 4), ("data", "model"))
         nx = ny = 32
         op = DistPoisson(nx, ny, mesh)
         A = poisson2d(nx, ny)
@@ -72,15 +72,15 @@ def test_dist_cg_converges():
                                 iters=140, tol=1e-10)
         err = float(np.linalg.norm(np.asarray(x).reshape(-1) - 1.0))
         print(json.dumps({"err": err, "conv": bool(conv)}))
-    """))
+    """), dist_env)
     assert res["conv"] and res["err"] < 1e-6
 
 
 @pytest.mark.slow
-def test_moe_shardmap_matches_local():
+def test_moe_shardmap_matches_local(dist_env):
     res = _run(textwrap.dedent("""
         import json, jax, jax.numpy as jnp, numpy as np
-        from jax.sharding import AxisType
+        from repro.launch.mesh import make_mesh_compat
         from repro.models import sharding as shd
         from repro.models.layers import moe_layer, _moe_local
         from repro.models.config import ModelConfig, MoEConfig
@@ -95,29 +95,27 @@ def test_moe_shardmap_matches_local():
              "w_out": jax.random.normal(key, (8, 16, 32), jnp.float32) * 0.2}
         x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, 32), jnp.float32)
         ref = _moe_local(cfg, p["router"], p["w_in"], p["w_out"], x, 8, 0)
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(AxisType.Auto,)*2)
+        mesh = make_mesh_compat((2, 4), ("data", "model"))
         shd.set_mesh(mesh)
         out = jax.jit(lambda pp, xx: moe_layer(cfg, pp, xx))(p, x)
         err = float(jnp.max(jnp.abs(out - ref)))
         print(json.dumps({"err": err}))
-    """))
+    """), dist_env)
     assert res["err"] < 2e-4
 
 
 @pytest.mark.slow
-def test_multidevice_train_step_runs():
+def test_multidevice_train_step_runs(dist_env):
     """End-to-end sharded train step on an 8-device mesh."""
     res = _run(textwrap.dedent("""
         import json, jax, jax.numpy as jnp
-        from jax.sharding import AxisType
+        from repro.launch.mesh import make_mesh_compat
         from repro.configs import get_reduced
         from repro.models import init_params, sharding as shd
         from repro.launch.steps import build_train_step
         from repro.training import AdamWConfig, adamw_init
         from repro.training.data import synth_batch
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(AxisType.Auto,)*2)
+        mesh = make_mesh_compat((4, 2), ("data", "model"))
         shd.set_mesh(mesh)
         cfg = get_reduced("qwen3-moe-235b-a22b")
         params = init_params(cfg, jax.random.PRNGKey(0))
@@ -130,6 +128,6 @@ def test_multidevice_train_step_runs():
             params, opt, aux = step(params, opt, batch)
             losses.append(float(aux["loss"]))
         print(json.dumps({"losses": losses}))
-    """))
+    """), dist_env)
     assert all(l == l and l < 20 for l in res["losses"])  # finite
     assert res["losses"][-1] < res["losses"][0]

@@ -1,0 +1,178 @@
+"""Unified solver front-end: registry dispatch, batched multi-RHS
+vmap(scan) engine (single compilation, per-RHS convergence masking),
+kernel-backend switch, and operator coercion."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import as_operator, methods, solve
+from repro.core import engine
+from repro.operators import poisson2d, poisson2d_dense
+from repro.operators.precond import jacobi
+
+
+@pytest.fixture(scope="module", autouse=True)
+def x64():
+    old = jax.config.jax_enable_x64
+    jax.config.update("jax_enable_x64", True)
+    yield
+    jax.config.update("jax_enable_x64", old)
+
+
+@pytest.fixture(scope="module")
+def poisson():
+    A = poisson2d(20, 20)
+    b = A @ np.ones(A.n)
+    return A, b
+
+
+# ------------------------------- registry ---------------------------------
+
+def test_registry_has_all_six_methods():
+    assert methods() == ("cg", "dlanczos", "pcg", "plcg", "plcg_scan",
+                         "plminres")
+
+
+def test_unknown_method_raises_with_listing():
+    A = poisson2d(8, 8)
+    b = A @ np.ones(A.n)
+    with pytest.raises(ValueError, match="plcg_scan"):
+        solve(A, b, method="nope")
+
+
+@pytest.mark.parametrize("method", ["cg", "pcg", "plcg", "plcg_scan",
+                                    "dlanczos", "plminres"])
+def test_every_method_matches_cg_through_one_signature(poisson, method):
+    """Acceptance: all six registered methods dispatch through one
+    signature and agree with classic CG on an SPD system."""
+    A, b = poisson
+    ref = solve(A, b, method="cg", tol=1e-10, maxiter=500)
+    r = solve(A, b, method=method, l=2, tol=1e-10, maxiter=400,
+              spectrum=(0.0, 8.0))
+    assert r.converged
+    assert np.linalg.norm(np.asarray(r.x) - np.asarray(ref.x)) < 1e-7
+    assert r.info["method"]          # common SolveResult contract
+
+
+def test_solve_accepts_dense_matrix_and_callable(poisson):
+    A, b = poisson
+    dense = poisson2d_dense(20, 20)
+    r1 = solve(dense, b, method="cg", tol=1e-10, maxiter=500)
+    r2 = solve(lambda v: dense @ v, b, method="cg", tol=1e-10, maxiter=500)
+    assert r1.converged and r2.converged
+    assert np.allclose(np.asarray(r1.x), np.asarray(r2.x), atol=1e-9)
+    with pytest.raises(ValueError):
+        as_operator(lambda v: v)            # callable without b: no dim
+
+
+def test_preconditioned_dispatch(poisson):
+    A, b = poisson
+    M = jacobi(A)
+    r = solve(A, b, method="cg", tol=1e-10, maxiter=500, M=M)
+    assert r.converged
+    rs = solve(A, b, method="plcg_scan", l=2, tol=1e-10, maxiter=400,
+               M=M, spectrum=(0.0, 2.0))
+    assert rs.converged
+    assert np.linalg.norm(b - A @ np.asarray(rs.x)) < 5e-8
+
+
+# ------------------------- batched multi-RHS ------------------------------
+
+def _batch(A, nrhs, seed=0):
+    rng = np.random.default_rng(seed)
+    return np.stack([np.asarray(A @ rng.standard_normal(A.n))
+                     for _ in range(nrhs)])
+
+
+def test_batched_matches_single_rhs_and_compiles_once(poisson):
+    """Acceptance: solve(A, B) with B.shape == (8, n) matches 8 single-RHS
+    solves to 1e-8 relative and runs as ONE jitted vmap(scan)."""
+    A, _ = poisson
+    B = _batch(A, 8)
+    engine.BATCH_TRACE_EVENTS.clear()
+    rb = solve(A, B, method="plcg_scan", l=2, tol=1e-10, maxiter=200,
+               spectrum=(0.0, 8.0))
+    # exactly one trace event == exactly one XLA compilation of the engine
+    assert len(engine.BATCH_TRACE_EVENTS) == 1
+    name, shape, l = engine.BATCH_TRACE_EVENTS[0]
+    assert shape == (8, A.n) and l == 2
+    assert rb.converged and np.asarray(rb.x).shape == (8, A.n)
+    for j in range(8):
+        rj = solve(A, B[j], method="plcg_scan", l=2, tol=1e-10, maxiter=200,
+                   spectrum=(0.0, 8.0))
+        d = np.linalg.norm(np.asarray(rb.x)[j] - np.asarray(rj.x))
+        assert d <= 1e-8 * np.linalg.norm(np.asarray(rj.x))
+
+
+def test_batched_default_method_uses_vmap_engine(poisson):
+    """The default method ('plcg') routes batched input through the same
+    jitted vmap(scan) production engine."""
+    A, _ = poisson
+    B = _batch(A, 3, seed=1)
+    engine.BATCH_TRACE_EVENTS.clear()
+    rb = solve(A, B, l=2, tol=1e-10, maxiter=200, spectrum=(0.0, 8.0))
+    assert len(engine.BATCH_TRACE_EVENTS) == 1
+    assert rb.info["batched"] == "vmap"
+    assert rb.converged
+
+
+def test_batched_per_rhs_convergence_masking(poisson):
+    """Converged lanes freeze (per-lane select) while others iterate: the
+    smooth A@1 RHS converges well before a rough random RHS, and the
+    frozen lane's residual trace stops growing."""
+    A, b = poisson
+    rough = np.asarray(A @ np.random.default_rng(3).standard_normal(A.n))
+    B = np.stack([np.asarray(b), rough])
+    rb = solve(A, B, method="plcg_scan", l=2, tol=1e-10, maxiter=200,
+               spectrum=(0.0, 8.0))
+    iters = np.asarray(rb.info["per_rhs_iters"])
+    conv = np.asarray(rb.info["per_rhs_converged"])
+    assert conv.all()
+    assert iters[0] < iters[1] - 10        # eigenvector lane stops early
+    # the frozen lane emits exactly iters[0] nonzero residuals, the live
+    # lane keeps writing its own trace
+    assert len(rb.resnorms[0]) < len(rb.resnorms[1])
+
+
+def test_batched_loop_fallback_for_reference_methods(poisson):
+    A, _ = poisson
+    B = _batch(A, 2, seed=2)
+    rb = solve(A, B, method="cg", tol=1e-10, maxiter=400)
+    assert rb.info["batched"] == "loop"
+    assert rb.converged
+    for j in range(2):
+        rj = solve(A, B[j], method="cg", tol=1e-10, maxiter=400)
+        assert np.allclose(np.asarray(rb.x)[j], np.asarray(rj.x))
+
+
+# --------------------------- kernel backends ------------------------------
+
+def test_backend_ref_matches_inline(poisson):
+    """The fused jnp oracle backend is numerically identical to the inline
+    scan math in fp64 (same promote_types accumulation)."""
+    A, b = poisson
+    r0 = solve(A, b, method="plcg_scan", l=2, tol=1e-10, maxiter=200,
+               spectrum=(0.0, 8.0), backend=None)
+    r1 = solve(A, b, method="plcg_scan", l=2, tol=1e-10, maxiter=200,
+               spectrum=(0.0, 8.0), backend="ref")
+    assert r0.converged and r1.converged
+    assert np.allclose(np.asarray(r0.x), np.asarray(r1.x), atol=1e-12)
+
+
+def test_backend_pallas_converges_at_f32_accuracy():
+    """The Pallas kernels (interpret mode on CPU) drive the scan engine to
+    fp32-level accuracy: the TPU hot path is numerically exercised."""
+    A = poisson2d(12, 12)
+    b = A @ np.ones(A.n)
+    r = solve(A, b, method="plcg_scan", l=2, tol=1e-4, maxiter=150,
+              spectrum=(0.0, 8.0), backend="pallas")
+    assert r.converged
+    assert np.linalg.norm(b - A @ np.asarray(r.x)) < 1e-2
+
+
+def test_backend_rejects_unknown():
+    A = poisson2d(8, 8)
+    b = A @ np.ones(A.n)
+    with pytest.raises(ValueError, match="backend"):
+        solve(A, b, method="plcg_scan", l=1, maxiter=20, backend="cuda")

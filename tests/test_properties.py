@@ -1,10 +1,19 @@
-"""Property-based tests (hypothesis) on the system's invariants."""
-import numpy as np
-from hypothesis import given, settings, strategies as st
+"""Property-based tests (hypothesis) on the system's invariants.
 
-from repro.core.cg import classic_cg
-from repro.core.plcg import plcg
-from repro.operators.spd import spd_with_spectrum
+hypothesis ships via the ``test`` extra (``pip install -e ".[test]"``);
+without it this module skips cleanly instead of breaking collection."""
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need the 'test' extra "
+    '(pip install -e ".[test]")')
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import solve  # noqa: E402
+from repro.core.cg import classic_cg  # noqa: E402
+from repro.core.plcg import plcg  # noqa: E402
+from repro.operators.spd import spd_with_spectrum  # noqa: E402
 
 SPECTRA = st.sampled_from(["uniform", "geometric", "clustered"])
 
@@ -78,6 +87,56 @@ def test_data_pipeline_deterministic(step, batch, seq):
         np.testing.assert_array_equal(b1[k], b2[k])
     b3 = synth_batch(cfg, step + 1, batch, seq, seed=1)
     assert any(not np.array_equal(b1[k], b3[k]) for k in b1)
+
+
+# --------------------- unified solve() registry ---------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(method=st.sampled_from(["cg", "pcg", "plcg", "dlanczos", "plminres"]),
+       n=st.integers(24, 48), seed=st.integers(0, 3))
+def test_registry_methods_agree_with_cg(method, n, seed):
+    """Every registered method on a random well-conditioned SPD system
+    converges to the CG answer within tolerance (exact-arithmetic
+    equivalence of the whole family, paper Remarks 6/7)."""
+    from repro.core.linop import dense_operator
+    eigs = np.linspace(1e-2, 1.0, n)
+    A = dense_operator(spd_with_spectrum(eigs, seed=seed))
+    b = A @ np.linspace(-1, 1, n)
+    ref = solve(A, b, method="cg", tol=1e-10, maxiter=10 * n)
+    # 1e-6: attainable by every member of the family, incl. the rounding-
+    # limited depth-2 pipelined MINRES basis (paper Sec. 4)
+    r = solve(A, b, method=method, l=2, tol=1e-6, maxiter=10 * n,
+              spectrum=(float(eigs.min()) * 0.9, float(eigs.max()) * 1.1))
+    assert r.converged
+    assert np.linalg.norm(np.asarray(r.x) - np.asarray(ref.x)) <= 1e-3
+
+
+@settings(max_examples=6, deadline=None)
+@given(nrhs=st.sampled_from([2, 4]), n=st.integers(24, 40),
+       l=st.integers(1, 2), seed=st.integers(0, 3))
+def test_batched_solve_matches_single_rhs_loop(nrhs, n, l, seed):
+    """Batched multi-RHS solve (one jitted vmap(scan)) equals a loop of
+    single-RHS solves on every right-hand side."""
+    import jax
+    from repro.core.linop import dense_operator
+    old = jax.config.jax_enable_x64
+    jax.config.update("jax_enable_x64", True)
+    try:
+        eigs = np.linspace(1e-2, 1.0, n)
+        A = dense_operator(spd_with_spectrum(eigs, seed=seed))
+        rng = np.random.default_rng(seed)
+        B = np.stack([np.asarray(A @ rng.standard_normal(n))
+                      for _ in range(nrhs)])
+        spect = (float(eigs.min()) * 0.9, float(eigs.max()) * 1.1)
+        rb = solve(A, B, method="plcg_scan", l=l, tol=1e-10, maxiter=6 * n,
+                   spectrum=spect)
+        for j in range(nrhs):
+            rj = solve(A, B[j], method="plcg_scan", l=l, tol=1e-10,
+                       maxiter=6 * n, spectrum=spect)
+            num = np.linalg.norm(np.asarray(rb.x)[j] - np.asarray(rj.x))
+            assert num <= 1e-8 * max(np.linalg.norm(np.asarray(rj.x)), 1.0)
+    finally:
+        jax.config.update("jax_enable_x64", old)
 
 
 @settings(max_examples=10, deadline=None)

@@ -54,16 +54,13 @@ def test_hlo_analyzer_counts_loop_trips():
 
 def test_mesh_construction():
     """make_production_mesh shape contract (uses abstract mesh on 1 CPU)."""
-    from jax.sharding import AxisType
+    from repro.launch.mesh import abstract_mesh_compat
     devs = jax.devices()
     if len(devs) < 512:
         # AbstractMesh validates the same shape/axes contract
-        from jax.sharding import AbstractMesh
-        m = AbstractMesh((2, 16, 16), ("pod", "data", "model"),
-                         axis_types=(AxisType.Auto,) * 3)
+        m = abstract_mesh_compat((2, 16, 16), ("pod", "data", "model"))
         assert m.shape == {"pod": 2, "data": 16, "model": 16}
-        m1 = AbstractMesh((16, 16), ("data", "model"),
-                          axis_types=(AxisType.Auto,) * 2)
+        m1 = abstract_mesh_compat((16, 16), ("data", "model"))
         assert m1.size == 256
 
 
