@@ -50,18 +50,24 @@ def engine_batched():
 
 
 def engine_backends():
-    """Scan engine with the fused-kernel backends on one problem."""
+    """Scan engine across the kernel-backend ladder on one problem.
+
+    ``fused`` runs the single-launch megakernel (interpret mode on CPU, so
+    its wall time here is NOT indicative of TPU -- the structural
+    launch-count columns of ``kern/fused_body_*`` are the probative
+    metric)."""
     from repro.core import solve
     from repro.operators import poisson2d
     A = poisson2d(32, 32)
     b = A @ np.ones(A.n)
     rows = []
-    for backend in (None, "ref"):
+    for backend, kernels in ((None, "inline"), ("ref", "K4,K5"),
+                             ("fused", "K1+K4+K5,1-launch")):
         tag = backend or "inline"
         us = _timeit(lambda be=backend: solve(
             A, b, method="plcg_scan", l=2, tol=1e-4, maxiter=200,
             spectrum=(0.0, 8.0), backend=be), reps=1)
-        rows.append((f"engine/scan_backend_{tag}", us, "kernels=K4,K5"))
+        rows.append((f"engine/scan_backend_{tag}", us, f"kernels={kernels}"))
     return rows
 
 

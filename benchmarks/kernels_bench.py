@@ -1,5 +1,8 @@
 """Kernel micro-benchmarks: wall time of the oracle math (the CPU stand-in
-for the TPU kernels) + derived HBM-traffic model for the fused kernels."""
+for the TPU kernels) + derived HBM-traffic model for the fused kernels +
+the structural launch-count comparison of the fused-iteration megakernel
+vs the per-kernel Pallas tier (jaxpr equation counts -- CPU wall time is
+not probative of TPU launch overhead)."""
 from __future__ import annotations
 
 import jax
@@ -25,7 +28,7 @@ def kernel_times():
                  f"bytes={(H*W*2+2*W+2*H)*4};flops={5*H*W}"))
     for l in (1, 3, 5):
         m, n = 2 * l + 1, 1 << 18
-        Wm = jax.random.normal(key, (m, n), jnp.float32)
+        Wm = jax.random.normal(key, (n, m), jnp.float32)   # lane-major
         z = jax.random.normal(key, (n,), jnp.float32)
         md = jax.jit(lambda Wm=Wm, z=z: ref.multidot_ref(Wm, z))
         naive_bytes = 2 * m * n * 4
@@ -33,7 +36,7 @@ def kernel_times():
         rows.append((f"kern/multidot_l{l}", _timeit(md),
                      f"fused_traffic={fused_bytes};naive={naive_bytes};"
                      f"saving={naive_bytes/fused_bytes:.2f}x"))
-        g = jax.random.normal(key, (m,), jnp.float32)
+        g = jax.random.normal(jax.random.PRNGKey(3), (m,), jnp.float32)
         wa = jax.jit(lambda Wm=Wm, z=z, g=g: ref.window_axpy_ref(Wm, z, g, 1.1))
         rows.append((f"kern/window_axpy_l{l}", _timeit(wa),
                      f"fused_traffic={(m+2)*n*4};"
@@ -41,4 +44,51 @@ def kernel_times():
     return rows
 
 
-ALL = [kernel_times]
+def fused_body_times():
+    """The fused-iteration megakernel: oracle wall time + HBM-traffic
+    model + per-iteration Pallas launch counts of the ``fused`` vs the
+    ``pallas`` backend tier of the scan engine (counted in the traced
+    jaxpr via ``repro.kernels.introspect``)."""
+    from repro.core.plcg_scan import plcg_scan
+    from repro.core.shifts import chebyshev_shifts
+    from repro.kernels.introspect import count_pallas_calls
+    key = jax.random.PRNGKey(0)
+    rows = []
+    for l in (1, 2):
+        m, n = 2 * l + 1, 1 << 16
+        Vw = jax.random.normal(key, (n, m), jnp.float32)
+        Zw = jax.random.normal(jax.random.PRNGKey(1), (n, l + 1), jnp.float32)
+        t = jax.random.normal(jax.random.PRNGKey(2), (n,), jnp.float32)
+        g = jax.random.normal(jax.random.PRNGKey(3), (2 * l,), jnp.float32)
+        one = jnp.float32(1.0)
+        fb = jax.jit(lambda Vw=Vw, Zw=Zw, t=t, g=g: ref.fused_body_ref(
+            Vw, Zw, None, t, None, l=l, steady=jnp.bool_(True), s_warm=one,
+            gam=one, dlt=one, dsub=one, gcc=one, g=g))
+        # one fused launch reads Vw+Zw+t once and writes Vw2+Zw2:
+        fused_words = (6 * l + 7) * n
+        # pallas tier: waxpy (2l+2) + 2 multidots (l+2 + l+1) + z-AXPY
+        # stream (4) + SPMV touch (2), each its own launch + round-trip:
+        tier_words = (10 * l + 9) * n
+        h = w = 1 << 5
+        nn = h * w
+        from repro.operators import poisson2d
+        A = poisson2d(h, w)
+        b = jnp.asarray(A @ jnp.ones(nn, jnp.float32))
+        sig = tuple(chebyshev_shifts(0, 8, l))
+        launches = {
+            be: count_pallas_calls(
+                lambda bb, be=be: plcg_scan(
+                    A.matvec, bb, l=l, iters=4, sigma=sig, backend=be,
+                    stencil_hw=(h, w)), b)
+            for be in ("pallas", "fused")
+        }
+        rows.append((
+            f"kern/fused_body_l{l}", _timeit(fb),
+            f"fused_traffic={fused_words*4};pallas_tier={tier_words*4};"
+            f"saving={tier_words/fused_words:.2f}x;"
+            f"launches_fused={launches['fused']};"
+            f"launches_pallas={launches['pallas']}"))
+    return rows
+
+
+ALL = [kernel_times, fused_body_times]

@@ -6,10 +6,16 @@ EXPERIMENTS.md).
 ``--smoke`` runs a fast subset (front-end dispatch, batched engine, kernel
 micro-times, the structural Table-1 rows) for the CI benchmark-smoke job:
 the rows must *print*, no timing is asserted.
+
+``--json PATH`` additionally writes the machine-readable trajectory file
+``{name: us_per_call}`` (plus a ``derived`` map) consumed by the perf
+gate: commit one ``BENCH_<rev>.json`` per landed revision so regressions
+are diffable across the PR sequence.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import pathlib
 import sys
 import time
@@ -23,6 +29,9 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="fast CI subset; asserts nothing about timings")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write {name: us_per_call} (+derived) JSON, "
+                         "e.g. BENCH_<rev>.json")
     args = ap.parse_args(argv)
 
     from benchmarks import engine_bench, kernels_bench, paper_figs, roofline
@@ -34,6 +43,7 @@ def main(argv=None) -> None:
                   + list(engine_bench.ALL) + list(roofline.ALL))
     print("name,us_per_call,derived")
     failures = 0
+    all_rows: list[tuple] = []
     for fn in groups:
         t0 = time.time()
         try:
@@ -45,8 +55,17 @@ def main(argv=None) -> None:
             continue
         for name, us, derived in rows:
             print(f"{name},{us:.1f},{derived}")
+        all_rows.extend(rows)
         sys.stderr.write(f"[{getattr(fn, '__name__', 'roofline')}: "
                          f"{time.time()-t0:.1f}s]\n")
+    if args.json:
+        payload = {
+            "us_per_call": {name: round(us, 1) for name, us, _ in all_rows},
+            "derived": {name: derived for name, us, derived in all_rows},
+        }
+        pathlib.Path(args.json).write_text(json.dumps(payload, indent=1,
+                                                      sort_keys=True))
+        sys.stderr.write(f"[wrote {len(all_rows)} rows to {args.json}]\n")
     if failures:
         sys.stderr.write(f"{failures} benchmark group(s) failed\n")
         sys.exit(1)

@@ -12,12 +12,14 @@ from .engine import (as_operator, describe_methods, get_method, methods,
 from .linop import (LinearOperator, Preconditioner, dense_operator,
                     identity_preconditioner)
 from .results import SolveResult
+from .solver_cache import clear_solver_cache
 
 __all__ = [
     "LinearOperator",
     "Preconditioner",
     "SolveResult",
     "as_operator",
+    "clear_solver_cache",
     "dense_operator",
     "describe_methods",
     "get_method",

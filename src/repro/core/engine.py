@@ -25,10 +25,14 @@ the engine body (under ``vmap`` that gate batches into a per-lane
 while individual systems finish at different iterations.  Methods
 without a batched engine fall back to a loop of single-RHS solves.
 
-The ``backend`` switch ("pallas" | "ref" | "auto" | None) selects the
-fused kernels used inside the scan engine's hot path (see
+The ``backend`` switch ("fused" | "pallas" | "ref" | "auto" | None)
+selects the kernel tier used inside the scan engine's hot path (see
 ``plcg_scan``); it is threaded through both the single-RHS and the
-batched paths.
+batched paths, together with the operator's ``stencil2d`` structural
+hint that lets ``backend="fused"`` fold the SPMV into its single
+per-iteration Pallas launch.  Under the batched path the lane-major
+``(n, window)`` state means every kernel batches to ONE
+``(B, n, window)`` launch rather than B replays.
 """
 from __future__ import annotations
 
@@ -40,6 +44,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import solver_cache
 from .cg import classic_cg
 from .dlanczos import d_lanczos
 from .linop import LinearOperator, dense_operator
@@ -170,8 +175,9 @@ def solve(
       l: pipeline depth (pipelined methods only).
       sigma: l auxiliary-basis shifts; default Chebyshev roots on
         ``spectrum`` (itself defaulting to the Poisson interval (0, 8)).
-      backend: fused-kernel backend for the scan engine
-        ("pallas" | "ref" | "auto" | None), ignored by reference methods.
+      backend: kernel tier for the scan engine
+        ("fused" | "pallas" | "ref" | "auto" | None), ignored by
+        reference methods and by the distributed injected-dot path.
       **options: method-specific extras (``trace_gaps``, ``record_G``,
         ``max_restarts``, ``exploit_symmetry``, ...).
 
@@ -224,31 +230,45 @@ def _solve_batched(spec: MethodSpec, A: LinearOperator, B, *, x0, tol,
     )
 
 
-@functools.lru_cache(maxsize=16)
+#: Jitted vmap(scan) engines, keyed weakly on the operator/preconditioner
+#: callables (see solver_cache; cleared by ``clear_solver_cache``).
+_BATCH_CACHE = solver_cache.WeakCallableCache(maxsize=16)
+
+
 def _batched_engine(method_name: str, matvec, l: int, iters: int, sigma,
                     tol: float, prec, exploit_symmetry: bool, unroll: int,
-                    backend):
+                    backend, stencil_hw):
     """Jitted vmap(scan) engine, cached per configuration so repeated
     batched solves with the same operator/settings compile only once.
 
-    Keyed on ``matvec``/``prec`` object identity: pass a long-lived
-    ``LinearOperator`` (rather than a fresh dense array each call, which
-    ``as_operator`` wraps in a new closure) to benefit from the cache.
-    The cache retains references to its operators; the small maxsize
-    bounds that retention."""
-    engine = functools.partial(
-        _plcg_scan_engine, matvec, l=l, iters=iters, sigma=sigma, tol=tol,
-        prec=prec, exploit_symmetry=exploit_symmetry, unroll=unroll,
-        backend=backend)
+    Keyed on ``matvec``/``prec`` object identity through weak references:
+    pass a long-lived ``LinearOperator`` (rather than a fresh dense array
+    each call, which ``as_operator`` wraps in a new closure) to benefit
+    from the cache.  Entries of dead closures are evicted eagerly, so the
+    cache no longer pins operators the caller has dropped."""
 
-    def _batched(Bb, Xb):
-        # trace-time side effect: fires once per XLA compilation, so the
-        # test suite can assert the batch compiles exactly once
-        if len(BATCH_TRACE_EVENTS) < 4096:      # bounded in long processes
-            BATCH_TRACE_EVENTS.append((method_name, tuple(Bb.shape), l))
-        return jax.vmap(engine)(Bb, Xb)
+    def build():
+        engine = functools.partial(
+            _plcg_scan_engine, solver_cache.weakly_callable(matvec), l=l,
+            iters=iters, sigma=sigma, tol=tol,
+            prec=solver_cache.weakly_callable(prec),
+            exploit_symmetry=exploit_symmetry, unroll=unroll,
+            backend=backend, stencil_hw=stencil_hw)
 
-    return jax.jit(_batched)
+        def _batched(Bb, Xb):
+            # trace-time side effect: fires once per XLA compilation, so
+            # the test suite can assert the batch compiles exactly once
+            if len(BATCH_TRACE_EVENTS) < 4096:  # bounded in long processes
+                BATCH_TRACE_EVENTS.append((method_name, tuple(Bb.shape), l))
+            return jax.vmap(engine)(Bb, Xb)
+
+        return jax.jit(_batched)
+
+    return _BATCH_CACHE.get_or_build(
+        (matvec, prec),
+        (method_name, l, iters, sigma, tol, exploit_symmetry, unroll,
+         backend, stencil_hw),
+        build)
 
 
 def _solve_batched_vmap(spec: MethodSpec, A: LinearOperator, B, *, x0, tol,
@@ -280,7 +300,8 @@ def _solve_batched_vmap(spec: MethodSpec, A: LinearOperator, B, *, x0, tol,
             "enable jax_enable_x64 or relax tol", stacklevel=4)
     X0 = jnp.zeros_like(Bj) if x0 is None else jnp.asarray(x0)
     fn = _batched_engine(spec.name, A.matvec, l, maxiter + l + 1, sig, tol,
-                         M, exploit_symmetry, unroll, backend)
+                         M, exploit_symmetry, unroll, backend,
+                         getattr(A, "stencil2d", None))
     out = fn(Bj, X0)
     resn = np.asarray(out.resnorms)                     # (nrhs, iters)
     conv = np.asarray(out.converged)
@@ -346,7 +367,9 @@ def _method_plcg_scan(A, b, x0=None, *, tol=1e-8, maxiter=1000, M=None, l=1,
     x0j = None if x0 is None else jnp.asarray(x0)
     x, resnorms, info = plcg_solve(A.matvec, bj, x0j, l=l, sigma=sig,
                                    tol=tol, maxiter=maxiter, prec=M,
-                                   backend=backend, **kw)
+                                   backend=backend,
+                                   stencil_hw=getattr(A, "stencil2d", None),
+                                   **kw)
     return SolveResult(
         x=x, resnorms=resnorms, iters=info["iterations"],
         converged=info["converged"], breakdowns=info["breakdowns"],

@@ -22,12 +22,17 @@ class LinearOperator:
       n: problem dimension (vectors have shape ``(n,)``).
       diag: optional diagonal of A (used by Jacobi-type preconditioners).
       name: human-readable tag used in benchmark tables.
+      stencil2d: optional (H, W) grid shape when the operator IS the
+        unscaled 5-point Dirichlet Poisson stencil on that grid -- the
+        structural hint that lets the ``backend="fused"`` scan engine fold
+        the SPMV into its per-iteration Pallas megakernel.
     """
 
     matvec: Callable[[Array], Array]
     n: int
     diag: Optional[Array] = None
     name: str = "A"
+    stencil2d: Optional[tuple] = None
 
     def __matmul__(self, v: Array) -> Array:
         return self.matvec(v)

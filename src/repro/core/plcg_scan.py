@@ -2,9 +2,14 @@
 
 This is the TPU-native realization of paper Alg. 2 + Alg. 3:
 
-* vectors live in fixed-size **sliding windows** (Appendix B): ``Zw`` holds
-  the last l+1 auxiliary vectors, ``Vw`` the last 2l+1 basis vectors, so the
-  memory footprint is exactly the paper's 3l+2 vectors (3l+5 preconditioned);
+* vectors live in fixed-size **sliding windows** (Appendix B), stored
+  **lane-major**: ``Zw (n, l+1)`` holds the last l+1 auxiliary vectors,
+  ``Vw (n, 2l+1)`` the last 2l+1 basis vectors (slot 0 newest), so the
+  memory footprint is exactly the paper's 3l+2 vectors (3l+5
+  preconditioned) and the 2l+1-entry band of one grid point is contiguous
+  -- the layout the fused Pallas kernels stream block-by-block, and the
+  layout under which a batched multi-RHS ``vmap`` lowers every kernel to
+  ONE ``(B, n, window)`` launch instead of B replays;
 * G is stored **banded by column** (Lemma 5): row c of ``Gb`` holds the
   2l+1-entry band of G's column c;
 * the 2l+1 dot products of iteration i form one fused payload (the paper's
@@ -28,11 +33,16 @@ from typing import Callable, NamedTuple, Optional, Sequence
 import jax
 import jax.numpy as jnp
 
+from .solver_cache import WeakCallableCache, weakly_callable
+from .solver_cache import clear_solver_cache  # noqa: F401  (re-export)
+
+BACKENDS = (None, "pallas", "ref", "fused")
+
 
 class PLCGState(NamedTuple):
-    Zw: jax.Array          # (l+1, n)  z_{i}   .. z_{i-l}     (slot 0 newest)
-    Vw: jax.Array          # (2l+1, n) v_{i-l} .. v_{i-3l}    (slot 0 newest)
-    Zhw: jax.Array         # (3, n) zhat window (preconditioned) or (1,1) dummy
+    Zw: jax.Array          # (n, l+1)  z_{i}   .. z_{i-l}     (slot 0 newest)
+    Vw: jax.Array          # (n, 2l+1) v_{i-l} .. v_{i-3l}    (slot 0 newest)
+    Zhw: jax.Array         # (n, 3) zhat window (preconditioned) or (1,1) dummy
     Gb: jax.Array          # (ncols, 2l+1) banded G, row c = band of column c
     gam: jax.Array         # (ncols,)
     dlt: jax.Array         # (ncols,)
@@ -74,6 +84,7 @@ def plcg_scan(
     exploit_symmetry: bool = True,
     unroll: int = 1,
     backend: Optional[str] = None,
+    stencil_hw: Optional[tuple] = None,
 ) -> PLCGOut:
     """Run ``iters`` bodies of p(l)-CG (solution index reaches iters-l-1).
 
@@ -82,27 +93,35 @@ def plcg_scan(
     global sum of a stacked scalar payload (identity on a single device,
     ``psum`` in the distributed runtime) -- exactly one call per iteration.
 
-    ``backend`` selects the implementation of the two fused hot-path
-    kernels, the (K5) multi-dot payload and the (K4) sliding-window AXPY:
+    ``backend`` selects the implementation of the iteration hot path:
 
       * ``None``      -- inline jnp math (bit-exact legacy path);
-      * ``"pallas"``  -- the Pallas TPU kernels (interpret mode on CPU);
-      * ``"ref"``     -- the fused jnp oracles from ``kernels.ref`` (the
-        CPU reference fallback for the Pallas kernels);
+      * ``"ref"``     -- the fused jnp oracles from ``kernels.ref`` for the
+        (K4) window AXPY and (K5) multi-dot (CPU reference fallback);
+      * ``"pallas"``  -- the per-kernel Pallas tier: one launch each for
+        the (K4) AXPY and the two (K5) multi-dots (interpret mode on CPU);
+      * ``"fused"``   -- the single-launch Pallas megakernel fusing the
+        whole steady-state body: (K4) v/z/zhat recurrences + (K5) payload,
+        and additionally the (K1) SPMV when ``stencil_hw`` marks the
+        operator as the 2-D Poisson stencil and no preconditioner is set.
+        Each basis vector is read from HBM exactly once per iteration;
       * ``"auto"``    -- ``"pallas"`` on TPU, ``"ref"`` elsewhere.
 
     The kernel path is only taken on the single-device full-vector dots
     (``dot_local is None``); the distributed shard_map runtime keeps its
-    injected local-partial dots.
+    injected local-partial dots and single psum, bypassing every kernel
+    tier including ``"fused"``.
     """
     if l < 1:
         raise ValueError("l must be >= 1")
     if backend == "auto":
         backend = "pallas" if jax.default_backend() == "tpu" else "ref"
-    if backend not in (None, "pallas", "ref"):
+    if backend not in BACKENDS:
         raise ValueError(
-            f"backend must be None, 'auto', 'pallas' or 'ref', got {backend!r}")
-    use_kernels = backend is not None and dot_local is None
+            "backend must be None, 'auto', 'pallas', 'ref' or 'fused', "
+            f"got {backend!r}")
+    use_fused = backend == "fused" and dot_local is None
+    use_kernels = backend in ("pallas", "ref") and dot_local is None
     if use_kernels:
         from ..kernels.ops import multidot_apply, window_axpy_apply
         _pl = backend == "pallas"
@@ -113,12 +132,18 @@ def plcg_scan(
         def _waxpy(Vm, zz, gg, gcc):
             return window_axpy_apply(Vm, zz, gg, gcc,
                                      use_pallas=_pl).astype(zz.dtype)
+    if use_fused:
+        from ..kernels import ops as kops
     dot = dot_local or _default_dot
     red = reduce_scalars or (lambda p: p)
     W = 2 * l + 1
     x0 = jnp.zeros_like(b) if x0 is None else x0
     sig = jnp.asarray(list(sigma), dtype=b.dtype)
     ncols = iters + 2 * l + 2
+    n = b.shape[0]
+    fuse_stencil = (use_fused and stencil_hw is not None and prec is None)
+    if fuse_stencil and stencil_hw[0] * stencil_hw[1] != n:
+        raise ValueError(f"stencil_hw {stencil_hw} inconsistent with n={n}")
 
     # ---- initialization (Alg. 2 lines 1-3) -------------------------------
     rhat0 = b - matvec(x0)
@@ -130,10 +155,9 @@ def plcg_scan(
     bnorm = jnp.where(bnorm == 0, 1.0, bnorm)
     v0 = r0 / beta0
 
-    n = b.shape[0]
-    Zw = jnp.zeros((l + 1, n), b.dtype).at[0].set(v0)
-    Vw = jnp.zeros((W, n), b.dtype).at[0].set(v0)
-    Zhw = (jnp.zeros((3, n), b.dtype).at[0].set(rhat0 / beta0)
+    Zw = jnp.zeros((n, l + 1), b.dtype).at[:, 0].set(v0)
+    Vw = jnp.zeros((n, W), b.dtype).at[:, 0].set(v0)
+    Zhw = (jnp.zeros((n, 3), b.dtype).at[:, 0].set(rhat0 / beta0)
            if prec is not None else jnp.zeros((1, 1), b.dtype))
     Gb = jnp.zeros((ncols, W), b.dtype).at[0, 2 * l].set(1.0)
     state = PLCGState(
@@ -151,140 +175,79 @@ def plcg_scan(
         row = jax.lax.dynamic_slice_in_dim(Gb, jnp.maximum(r, 0), 1, 0)[0]
         return jnp.where(r >= 0, row, jnp.zeros_like(row))
 
-    def body(st: PLCGState, i):
-        # ---------------- (K1) SPMV --------------------------------------
-        t_hat = matvec(st.Zw[0])
-        t = prec(t_hat) if prec is not None else t_hat
-
-        c = i - l + 1                       # column being finalized
-
-        def warmup(_):
-            s = sig[jnp.minimum(i, l - 1)]
-            znew = t - s * st.Zw[0]
-            zhnew = (t_hat - s * st.Zhw[0]) if prec is not None else None
-            return (st.Vw, st.Gb, st.gam, st.dlt, znew, zhnew,
-                    jnp.asarray(False), st.x, st.p, st.eta, st.zeta, st.k_done)
-
-        def steady(_):
-            # -------- arrived payload = raw band of column c --------------
-            col = st.inflight[0]
-            # symmetric fill (eq. 14): rows c-2l+k, k<l, from earlier columns
-            if exploit_symmetry:
-                filled = []
-                for k in range(l):
-                    r = c - 2 * l + k
-                    src = gb_row(st.Gb, c - l + k)[2 * l - k]
-                    use_fill = (i >= 3 * l - 1) & (r >= 0)
-                    filled.append(jnp.where(use_fill, src, col[k]))
-                col = jnp.concatenate([jnp.stack(filled), col[l:]])
-            # -------- (K2) Gram-Schmidt correction (lines 7-8) ------------
-            rows = [gb_row(st.Gb, c - 2 * l + k) for k in range(l + 1, 2 * l)]
-            col_list = [col[k] for k in range(W)]
-            for k in range(l + 1, 2 * l):          # z-rows r = c-2l+k
-                r = c - 2 * l + k
-                grow = rows[k - (l + 1)]
-                s = sum(grow[k2 - k + 2 * l] * col_list[k2] for k2 in range(k))
-                denom = jnp.where(r >= 0, grow[2 * l], 1.0)
-                corrected = (col_list[k] - s) / denom
-                col_list[k] = jnp.where(r >= 0, corrected, col_list[k])
-            arg = col_list[2 * l] - sum(col_list[k2] ** 2 for k2 in range(2 * l))
-            brk = arg <= 0.0
-            gcc = jnp.sqrt(jnp.maximum(arg, jnp.finfo(b.dtype).tiny))
-            col_list[2 * l] = gcc
-            col = jnp.stack(col_list)
-            Gb2 = jax.lax.dynamic_update_slice_in_dim(st.Gb, col[None], c, 0)
-            # -------- (K3) gamma_{c-1}, delta_{c-1} (lines 10-16) ---------
-            rowm1 = gb_row(Gb2, c - 1)
-            gd = rowm1[2 * l]                       # g_{c-1,c-1}
-            g_cm1_c = col[2 * l - 1]                # g_{c-1,c}
-            sub = jnp.where(c >= 2, rowm1[2 * l - 1]
-                            * st.dlt[jnp.maximum(c - 2, 0)], 0.0)
-            sig_c = sig[jnp.clip(c - 1, 0, l - 1)]
-            gam_lo = (g_cm1_c + sig_c * gd - sub) / gd
-            dlt_lo = gcc / gd
-            idx = jnp.maximum(c - 1 - l, 0)
-            gam_hi = (gd * st.gam[idx] + g_cm1_c * st.dlt[idx] - sub) / gd
-            dlt_hi = gcc * st.dlt[idx] / gd
-            early = i < 2 * l
-            gam_c1 = jnp.where(early, gam_lo, gam_hi)
-            dlt_c1 = jnp.where(early, dlt_lo, dlt_hi)
-            gam2 = st.gam.at[jnp.maximum(c - 1, 0)].set(gam_c1)
-            dlt2 = st.dlt.at[jnp.maximum(c - 1, 0)].set(dlt_c1)
-            # -------- (K4) v recurrence (line 17) -------------------------
-            # v_c = (z_c - sum_k col[k] v_{c-2l+k}) / gcc ; v_{c-2l+k}=Vw[2l-1-k]
-            if use_kernels:
-                vnew = _waxpy(st.Vw[: 2 * l], st.Zw[l - 1],
-                              col[:2 * l][::-1], gcc)
-            else:
-                vsum = jnp.tensordot(col[:2 * l][::-1], st.Vw[: 2 * l], axes=1)
-                vnew = (st.Zw[l - 1] - vsum) / gcc
-            Vw2 = jnp.concatenate([vnew[None], st.Vw[:-1]])
-            # -------- (K4) z recurrence (line 18) -------------------------
-            dsub = jnp.where(c >= 2, st.dlt[jnp.maximum(c - 2, 0)], 0.0)
-            znew = (t - gam_c1 * st.Zw[0] - dsub * st.Zw[1]) / dlt_c1
-            zhnew = ((t_hat - gam_c1 * st.Zhw[0] - dsub * st.Zhw[1]) / dlt_c1
-                     if prec is not None else None)
-            # -------- (K6) solution update (lines 22-31) ------------------
-            k = i - l
-            at_first = i == l
-            eta0 = gam2[0]
-            lam = jnp.where(at_first, 0.0, st.dlt[jnp.maximum(k - 1, 0)]
-                            / jnp.where(st.eta == 0, 1.0, st.eta))
-            dkm1 = st.dlt[jnp.maximum(k - 1, 0)]
-            eta_k = jnp.where(at_first, eta0, gam2[jnp.maximum(k, 0)] - lam * dkm1)
-            zeta_k = jnp.where(at_first, beta0, -lam * st.zeta)
-            x2 = jnp.where(at_first, st.x, st.x + st.zeta * st.p)
-            v_k = Vw2[1]                            # v_{i-l}
-            eta_safe = jnp.where(eta_k == 0, 1.0, eta_k)
-            p2 = jnp.where(at_first, v_k / eta_safe,
-                           (v_k - dkm1 * st.p) / eta_safe)
-            return (Vw2, Gb2, gam2, dlt2, znew, zhnew, brk,
-                    x2, p2, eta_k, zeta_k, jnp.maximum(k, st.k_done))
-
-        # compute both phases and select on the (scalar) iteration index:
-        # an actual lax.cond here lowers to an XLA Conditional whose branch
-        # layouts clash with the matvec dot on the CPU thunk runtime when
-        # the engine runs under vmap (batched multi-RHS); warmup is two
-        # AXPYs so evaluating it alongside steady costs nothing, and the
-        # discarded branch's values (incl. div-by-zero garbage during the
-        # first l iterations) are dropped by the select
-        (Vw2, Gb2, gam2, dlt2, znew, zhnew, brk, x2, p2, eta2, zeta2,
-         k2) = jax.tree.map(
-            functools.partial(jnp.where, i >= l), steady(None), warmup(None))
-
-        Zw2 = jnp.concatenate([znew[None], st.Zw[:-1]])
-        Zhw2 = (jnp.concatenate([zhnew[None], st.Zhw[:-1]])
-                if prec is not None else st.Zhw)
-        # ---------------- (K5) dot-product payload for column i+1 --------
-        lhs = zhnew if prec is not None else znew
+    def scalar_block(st: PLCGState, i, c):
+        """(K2)+(K3): finalize column c of G from the arrived payload and
+        update the gamma/delta recurrences.  O(l^2) scalar work; values are
+        garbage during warmup (i < l) and discarded by the caller's select,
+        exactly like the legacy evaluate-both-phases body."""
+        # -------- arrived payload = raw band of column c ------------------
+        col = st.inflight[0]
+        # symmetric fill (eq. 14): rows c-2l+k, k<l, from earlier columns
         if exploit_symmetry:
-            def vdots_full(_):
-                if use_kernels:
-                    return _mdot(Vw2[: l + 1], lhs)
-                return jnp.tensordot(Vw2[: l + 1], lhs, axes=1)
+            filled = []
+            for k in range(l):
+                r = c - 2 * l + k
+                src = gb_row(st.Gb, c - l + k)[2 * l - k]
+                use_fill = (i >= 3 * l - 1) & (r >= 0)
+                filled.append(jnp.where(use_fill, src, col[k]))
+            col = jnp.concatenate([jnp.stack(filled), col[l:]])
+        # -------- (K2) Gram-Schmidt correction (lines 7-8) ----------------
+        rows = [gb_row(st.Gb, c - 2 * l + k) for k in range(l + 1, 2 * l)]
+        col_list = [col[k] for k in range(W)]
+        for k in range(l + 1, 2 * l):          # z-rows r = c-2l+k
+            r = c - 2 * l + k
+            grow = rows[k - (l + 1)]
+            s = sum(grow[k2 - k + 2 * l] * col_list[k2] for k2 in range(k))
+            denom = jnp.where(r >= 0, grow[2 * l], 1.0)
+            corrected = (col_list[k] - s) / denom
+            col_list[k] = jnp.where(r >= 0, corrected, col_list[k])
+        arg = col_list[2 * l] - sum(col_list[k2] ** 2 for k2 in range(2 * l))
+        brk = arg <= 0.0
+        gcc = jnp.sqrt(jnp.maximum(arg, jnp.finfo(b.dtype).tiny))
+        col_list[2 * l] = gcc
+        col = jnp.stack(col_list)
+        Gb2 = jax.lax.dynamic_update_slice_in_dim(st.Gb, col[None], c, 0)
+        # -------- (K3) gamma_{c-1}, delta_{c-1} (lines 10-16) -------------
+        rowm1 = gb_row(Gb2, c - 1)
+        gd = rowm1[2 * l]                       # g_{c-1,c-1}
+        g_cm1_c = col[2 * l - 1]                # g_{c-1,c}
+        sub = jnp.where(c >= 2, rowm1[2 * l - 1]
+                        * st.dlt[jnp.maximum(c - 2, 0)], 0.0)
+        sig_c = sig[jnp.clip(c - 1, 0, l - 1)]
+        gam_lo = (g_cm1_c + sig_c * gd - sub) / gd
+        dlt_lo = gcc / gd
+        idx = jnp.maximum(c - 1 - l, 0)
+        gam_hi = (gd * st.gam[idx] + g_cm1_c * st.dlt[idx] - sub) / gd
+        dlt_hi = gcc * st.dlt[idx] / gd
+        early = i < 2 * l
+        gam_c1 = jnp.where(early, gam_lo, gam_hi)
+        dlt_c1 = jnp.where(early, dlt_lo, dlt_hi)
+        gam2 = st.gam.at[jnp.maximum(c - 1, 0)].set(gam_c1)
+        dlt2 = st.dlt.at[jnp.maximum(c - 1, 0)].set(dlt_c1)
+        dsub = jnp.where(c >= 2, st.dlt[jnp.maximum(c - 2, 0)], 0.0)
+        return col, gcc, brk, Gb2, gam2, dlt2, gam_c1, dlt_c1, dsub
 
-            def vdots_one(_):
-                out = jnp.zeros(l + 1, b.dtype)
-                return out.at[0].set(dot(Vw2[0], lhs))
+    def solution_update(st: PLCGState, i, gam2, v_k):
+        """(K6) solution update (lines 22-31)."""
+        k = i - l
+        at_first = i == l
+        eta0 = gam2[0]
+        lam = jnp.where(at_first, 0.0, st.dlt[jnp.maximum(k - 1, 0)]
+                        / jnp.where(st.eta == 0, 1.0, st.eta))
+        dkm1 = st.dlt[jnp.maximum(k - 1, 0)]
+        eta_k = jnp.where(at_first, eta0, gam2[jnp.maximum(k, 0)] - lam * dkm1)
+        zeta_k = jnp.where(at_first, beta0, -lam * st.zeta)
+        x2 = jnp.where(at_first, st.x, st.x + st.zeta * st.p)
+        eta_safe = jnp.where(eta_k == 0, 1.0, eta_k)
+        p2 = jnp.where(at_first, v_k / eta_safe,
+                       (v_k - dkm1 * st.p) / eta_safe)
+        return x2, p2, eta_k, zeta_k, jnp.maximum(k, st.k_done)
 
-            vd = jax.lax.cond(i < 2 * l - 1, vdots_full, vdots_one, None)
-        elif use_kernels:
-            vd = _mdot(Vw2[: l + 1], lhs)
-        else:
-            vd = jnp.stack([dot(Vw2[t], lhs) for t in range(l + 1)])
-        if use_kernels:
-            zd = _mdot(Zw2[:l], lhs)
-        else:
-            zd = jnp.stack([dot(Zw2[t], lhs) for t in range(l)])
-        # mask payload slots whose row index i+1-2l+k is negative (the v
-        # window is zero-initialized except v_0, which must not leak into
-        # nonexistent rows during warmup)
-        vmask = jnp.arange(l + 1) + (i + 1 - 2 * l) >= 0
-        payload = jnp.concatenate([vd[::-1] * vmask, zd[::-1]])  # band layout
+    def finalize(st: PLCGState, i, payload, brk, x2, p2, eta2, zeta2, k2,
+                 Vw2, Zw2, Zhw2, Gb2, gam2, dlt2):
+        """Queue push + convergence/freeze commit, shared by both bodies."""
         payload = red(payload)
         inflight2 = jnp.concatenate([st.inflight[1:], payload[None]], axis=0)
-
-        # ---------------- convergence / freeze ---------------------------
         conv_now = ((i >= l) & jnp.logical_not(st.done) & jnp.logical_not(brk)
                     & (jnp.abs(zeta2) <= tol * bnorm))
         commit = jnp.logical_not(st.done | brk)
@@ -302,40 +265,182 @@ def plcg_scan(
         res = jnp.where(commit & (i >= l), jnp.abs(zeta2), 0.0)
         return out_state, res
 
-    final, resnorms = jax.lax.scan(body, state, jnp.arange(iters),
-                                   unroll=unroll)
+    def body(st: PLCGState, i):
+        # ---------------- (K1) SPMV --------------------------------------
+        t_hat = matvec(st.Zw[:, 0])
+        t = prec(t_hat) if prec is not None else t_hat
+
+        c = i - l + 1                       # column being finalized
+
+        def warmup(_):
+            s = sig[jnp.minimum(i, l - 1)]
+            znew = t - s * st.Zw[:, 0]
+            zhnew = (t_hat - s * st.Zhw[:, 0]) if prec is not None else None
+            return (st.Vw, st.Gb, st.gam, st.dlt, znew, zhnew,
+                    jnp.asarray(False), st.x, st.p, st.eta, st.zeta,
+                    st.k_done)
+
+        def steady(_):
+            (col, gcc, brk, Gb2, gam2, dlt2, gam_c1, dlt_c1,
+             dsub) = scalar_block(st, i, c)
+            # -------- (K4) v recurrence (line 17) -------------------------
+            # v_c = (z_c - sum_k col[k] v_{c-2l+k}) / gcc ;
+            # v_{c-2l+k} = Vw[:, 2l-1-k]
+            if use_kernels:
+                vnew = _waxpy(st.Vw[:, :2 * l], st.Zw[:, l - 1],
+                              col[:2 * l][::-1], gcc)
+            else:
+                vsum = st.Vw[:, :2 * l] @ col[:2 * l][::-1]
+                vnew = (st.Zw[:, l - 1] - vsum) / gcc
+            Vw2 = jnp.concatenate([vnew[:, None], st.Vw[:, :-1]], axis=1)
+            # -------- (K4) z recurrence (line 18) -------------------------
+            znew = (t - gam_c1 * st.Zw[:, 0] - dsub * st.Zw[:, 1]) / dlt_c1
+            zhnew = ((t_hat - gam_c1 * st.Zhw[:, 0] - dsub * st.Zhw[:, 1])
+                     / dlt_c1 if prec is not None else None)
+            # -------- (K6) solution update (lines 22-31) ------------------
+            x2, p2, eta_k, zeta_k, k2 = solution_update(st, i, gam2,
+                                                        Vw2[:, 1])
+            return (Vw2, Gb2, gam2, dlt2, znew, zhnew, brk,
+                    x2, p2, eta_k, zeta_k, k2)
+
+        # compute both phases and select on the (scalar) iteration index:
+        # an actual lax.cond here lowers to an XLA Conditional whose branch
+        # layouts clash with the matvec dot on the CPU thunk runtime when
+        # the engine runs under vmap (batched multi-RHS); warmup is two
+        # AXPYs so evaluating it alongside steady costs nothing, and the
+        # discarded branch's values (incl. div-by-zero garbage during the
+        # first l iterations) are dropped by the select
+        (Vw2, Gb2, gam2, dlt2, znew, zhnew, brk, x2, p2, eta2, zeta2,
+         k2) = jax.tree.map(
+            functools.partial(jnp.where, i >= l), steady(None), warmup(None))
+
+        Zw2 = jnp.concatenate([znew[:, None], st.Zw[:, :-1]], axis=1)
+        Zhw2 = (jnp.concatenate([zhnew[:, None], st.Zhw[:, :-1]], axis=1)
+                if prec is not None else st.Zhw)
+        # ---------------- (K5) dot-product payload for column i+1 --------
+        lhs = zhnew if prec is not None else znew
+        if exploit_symmetry:
+            def vdots_full(_):
+                if use_kernels:
+                    return _mdot(Vw2[:, :l + 1], lhs)
+                return lhs @ Vw2[:, :l + 1]
+
+            def vdots_one(_):
+                out = jnp.zeros(l + 1, b.dtype)
+                return out.at[0].set(dot(Vw2[:, 0], lhs))
+
+            vd = jax.lax.cond(i < 2 * l - 1, vdots_full, vdots_one, None)
+        elif use_kernels:
+            vd = _mdot(Vw2[:, :l + 1], lhs)
+        else:
+            vd = jnp.stack([dot(Vw2[:, j], lhs) for j in range(l + 1)])
+        if use_kernels:
+            zd = _mdot(Zw2[:, :l], lhs)
+        else:
+            zd = jnp.stack([dot(Zw2[:, j], lhs) for j in range(l)])
+        # mask payload slots whose row index i+1-2l+k is negative (the v
+        # window is zero-initialized except v_0, which must not leak into
+        # nonexistent rows during warmup)
+        vmask = jnp.arange(l + 1) + (i + 1 - 2 * l) >= 0
+        payload = jnp.concatenate([vd[::-1] * vmask, zd[::-1]])  # band layout
+        return finalize(st, i, payload, brk, x2, p2, eta2, zeta2, k2,
+                        Vw2, Zw2, Zhw2, Gb2, gam2, dlt2)
+
+    def body_fused(st: PLCGState, i):
+        """One launch per iteration: the fused_body megakernel computes
+        (K1 when the stencil is fused) + (K4) + (K5); only the O(l^2)
+        scalar recurrences (K2/K3/K6) stay in jnp."""
+        c = i - l + 1
+        (col, gcc, brk, Gb2, gam2, dlt2, gam_c1, dlt_c1,
+         dsub) = scalar_block(st, i, c)
+        if fuse_stencil:
+            t = t_hat = None
+        else:
+            t_hat = matvec(st.Zw[:, 0])
+            t = prec(t_hat) if prec is not None else t_hat
+        Vw2, Zw2, Zhw2k, dots = kops.fused_body_apply(
+            st.Vw, st.Zw, st.Zhw if prec is not None else None,
+            t, t_hat if prec is not None else None,
+            l=l, steady=i >= l, s_warm=sig[jnp.minimum(i, l - 1)],
+            gam=gam_c1, dlt=dlt_c1, dsub=dsub, gcc=gcc,
+            g=col[:2 * l][::-1],
+            stencil_hw=stencil_hw if fuse_stencil else None,
+            use_pallas=True)
+        Zhw2 = Zhw2k if prec is not None else st.Zhw
+        dots = dots.astype(b.dtype)
+        vd_full, zd = dots[:l + 1], dots[l + 1:]
+        x2, p2, eta_k, zeta_k, k2 = solution_update(st, i, gam2, Vw2[:, 1])
+        # warmup select for the scalar state only -- the vector windows
+        # were already phase-selected inside the kernel
+        (Gb2, gam2, dlt2, brk, x2, p2, eta2, zeta2, k2) = jax.tree.map(
+            functools.partial(jnp.where, i >= l),
+            (Gb2, gam2, dlt2, brk, x2, p2, eta_k, zeta_k, k2),
+            (st.Gb, st.gam, st.dlt, jnp.asarray(False), st.x, st.p,
+             st.eta, st.zeta, st.k_done))
+        if exploit_symmetry:
+            # mirror the legacy single-dot branch: beyond the startup
+            # phase only <v_{i+1-2l}, z> is new, the rest comes from the
+            # symmetric fill of (K2)
+            vd = jnp.where(i < 2 * l - 1, vd_full,
+                           jnp.zeros_like(vd_full).at[0].set(vd_full[0]))
+        else:
+            vd = vd_full
+        vmask = jnp.arange(l + 1) + (i + 1 - 2 * l) >= 0
+        payload = jnp.concatenate([vd[::-1] * vmask, zd[::-1]])
+        return finalize(st, i, payload, brk, x2, p2, eta2, zeta2, k2,
+                        Vw2, Zw2, Zhw2, Gb2, gam2, dlt2)
+
+    final, resnorms = jax.lax.scan(body_fused if use_fused else body, state,
+                                   jnp.arange(iters), unroll=unroll)
     return PLCGOut(x=final.x, resnorms=resnorms, k_done=final.k_done,
                    converged=final.converged, breakdown=final.breakdown)
 
 
 def plcg_jit(matvec, b, x0=None, *, l, iters, sigma, tol=0.0, prec=None,
              exploit_symmetry: bool = True, unroll: int = 1,
-             backend: Optional[str] = None) -> PLCGOut:
+             backend: Optional[str] = None,
+             stencil_hw: Optional[tuple] = None) -> PLCGOut:
     """Convenience jitted single-device entry point."""
     fn = functools.partial(
         plcg_scan, matvec, l=l, iters=iters, sigma=tuple(sigma), tol=tol,
         prec=prec, exploit_symmetry=exploit_symmetry, unroll=unroll,
-        backend=backend)
+        backend=backend, stencil_hw=stencil_hw)
     return jax.jit(lambda bb, xx: fn(bb, xx))(b, x0 if x0 is not None
                                               else jnp.zeros_like(b))
 
 
-@functools.lru_cache(maxsize=16)
+#: Jitted single-RHS sweeps, keyed weakly on the operator/preconditioner
+#: callables (see solver_cache): dropping the operator releases the
+#: compiled sweep instead of pinning it until 16 other configs evict it.
+_SWEEP_CACHE = WeakCallableCache(maxsize=16)
+
+
 def _jitted_sweep(matvec, l, iters, sigma, tol, prec, exploit_symmetry,
-                  unroll, backend):
+                  unroll, backend, stencil_hw):
     """Cached jitted single sweep so repeated solves with the same
     operator/settings compile once.  Keyed on ``matvec``/``prec`` object
-    identity: reuse the same callable across calls to benefit (a fresh
-    closure per call falls back to compiling each time)."""
-    return jax.jit(functools.partial(
-        plcg_scan, matvec, l=l, iters=iters, sigma=sigma, tol=tol,
-        prec=prec, exploit_symmetry=exploit_symmetry, unroll=unroll,
-        backend=backend))
+    identity through weak references: reuse the same callable across calls
+    to benefit (a fresh closure per call compiles, is cached until its
+    closure dies, then is evicted -- no unbounded retention)."""
+
+    def build():
+        return jax.jit(functools.partial(
+            plcg_scan, weakly_callable(matvec), l=l, iters=iters,
+            sigma=sigma, tol=tol, prec=weakly_callable(prec),
+            exploit_symmetry=exploit_symmetry, unroll=unroll,
+            backend=backend, stencil_hw=stencil_hw))
+
+    return _SWEEP_CACHE.get_or_build(
+        (matvec, prec),
+        (l, iters, sigma, tol, exploit_symmetry, unroll, backend,
+         stencil_hw),
+        build)
 
 
 def plcg_solve(matvec, b, x0=None, *, l, sigma, tol=1e-8, maxiter=1000,
                prec=None, exploit_symmetry: bool = True, max_restarts: int = 5,
-               unroll: int = 1, backend: Optional[str] = None):
+               unroll: int = 1, backend: Optional[str] = None,
+               stencil_hw: Optional[tuple] = None):
     """Driver around the jitted engine: explicit restart on square-root
     breakdown (paper Remark 8), happy-breakdown detection, restart budget.
 
@@ -346,7 +451,7 @@ def plcg_solve(matvec, b, x0=None, *, l, sigma, tol=1e-8, maxiter=1000,
     if bnorm == 0:
         bnorm = 1.0
     fn = _jitted_sweep(matvec, l, maxiter + l + 1, tuple(sigma), tol, prec,
-                       exploit_symmetry, unroll, backend)
+                       exploit_symmetry, unroll, backend, stencil_hw)
     resnorms: list[float] = []
     restarts = breakdowns = 0
     total_k = 0

@@ -1,0 +1,114 @@
+"""Bounded weak-key caches for jitted solver sweeps.
+
+PR 1 cached the jitted single-RHS sweep and the batched vmap(scan) engine
+with ``functools.lru_cache`` keyed on the ``matvec``/``prec`` callables.
+That had two failure modes:
+
+* **retention**: the cache held strong references to the operator closures
+  (and every array they captured) until 16 *other* configurations evicted
+  them -- effectively forever in a long-lived solver process;
+* **churn**: a fresh closure per call (``lambda v: A @ v`` built inline)
+  missed the cache every time while still pinning the previous 16 closures.
+
+:class:`WeakCallableCache` fixes both.  Keys hold the callables through
+``weakref.ref`` (dead referents evict their entries eagerly via the ref
+callback), and -- crucially -- the cached jitted functions are built over
+:func:`weakly_callable` proxies, so the cache value does not keep the
+operator alive either.  Dropping the operator therefore releases the
+compiled sweep; the LRU bound caps worst-case retention for callables that
+cannot be weak-referenced.
+
+Every cache instance self-registers so :func:`clear_solver_cache` can drop
+all compiled sweeps (single-RHS and batched) in one call -- the public
+escape hatch for memory-sensitive serving loops.
+"""
+from __future__ import annotations
+
+import weakref
+from collections import OrderedDict
+from typing import Any, Callable, Optional
+
+_REGISTRY: list["WeakCallableCache"] = []
+
+
+def clear_solver_cache() -> None:
+    """Drop every cached jitted solver sweep (single-RHS and batched)."""
+    for cache in _REGISTRY:
+        cache.clear()
+
+
+def weakly_callable(fn: Optional[Callable]) -> Optional[Callable]:
+    """A proxy that calls ``fn`` through a weak reference.
+
+    Closing a jitted partial over the proxy (rather than ``fn`` itself)
+    keeps the cache from pinning the operator: once the caller drops
+    ``fn``, the cache entry is evicted and retracing the stale jitted
+    object raises ``ReferenceError`` instead of resurrecting it.  ``None``
+    passes through (preserves ``prec is None`` dispatch) and callables
+    that cannot be weak-referenced are returned as-is.
+    """
+    if fn is None:
+        return None
+    try:
+        ref = weakref.ref(fn)
+    except TypeError:
+        return fn
+
+    def call(*args, **kwargs):
+        target = ref()
+        if target is None:
+            raise ReferenceError(
+                "solver operator callable was garbage-collected; rebuild "
+                "the sweep (see repro.core.clear_solver_cache)")
+        return target(*args, **kwargs)
+
+    return call
+
+
+class WeakCallableCache:
+    """LRU cache keyed on (callable identities, hashable config).
+
+    Callables are held via ``weakref.ref`` when possible; when a referent
+    dies, its entries are purged immediately through the ref callback.
+    Unweakrefable callables fall back to strong keys (retention then
+    bounded by ``maxsize``).
+    """
+
+    def __init__(self, maxsize: int = 16):
+        self._maxsize = maxsize
+        self._data: OrderedDict[tuple, Any] = OrderedDict()
+        _REGISTRY.append(self)
+
+    def __len__(self) -> int:
+        return len(self._data)
+
+    def clear(self) -> None:
+        self._data.clear()
+
+    def _on_death(self, dead_ref) -> None:
+        for key in [k for k in self._data if dead_ref in k[0]]:
+            self._data.pop(key, None)
+
+    def _key(self, callables, config) -> tuple:
+        refs = []
+        for c in callables:
+            if c is None:
+                refs.append(None)
+                continue
+            try:
+                refs.append(weakref.ref(c, self._on_death))
+            except TypeError:
+                refs.append(c)
+        return (tuple(refs), config)
+
+    def get_or_build(self, callables: tuple, config: tuple,
+                     build: Callable[[], Any]) -> Any:
+        key = self._key(callables, config)
+        if key in self._data:
+            self._data.move_to_end(key)
+            return self._data[key]
+        value = build()
+        self._data[key] = value
+        while len(self._data) > self._maxsize:
+            self._data.popitem(last=False)
+        return value

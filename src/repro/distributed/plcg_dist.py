@@ -85,7 +85,14 @@ def dist_plcg(op: DistPoisson, b_global: jax.Array, x0=None, *, l: int,
     """Run the pipelined solver on the full mesh.
 
     b_global: (nx, ny) right-hand side (sharded or shardable).
-    Returns (x (nx, ny) sharded, resnorms (iters,), converged, breakdown).
+    Returns (x (nx, ny) sharded, resnorms (iters,), converged, breakdown,
+    k_done).
+
+    The engine runs with injected local-partial dots and a single fused
+    psum per iteration, which bypasses every kernel ``backend`` tier
+    (including ``"fused"``) by construction -- the distributed hot path is
+    the halo-exchange stencil kernel plus the collective schedule, not the
+    single-device megakernel.
     """
     mesh = op.mesh
     axes = (op.row_axis, op.col_axis)
@@ -100,12 +107,12 @@ def dist_plcg(op: DistPoisson, b_global: jax.Array, x0=None, *, l: int,
             exploit_symmetry=exploit_symmetry,
         )
         return (out.x.reshape(b_blk.shape), out.resnorms, out.converged,
-                out.breakdown)
+                out.breakdown, out.k_done)
 
     fn = shard_map_compat(
         local_run, mesh=mesh,
         in_specs=(op.spec(), op.spec()),
-        out_specs=(op.spec(), P(), P(), P()),
+        out_specs=(op.spec(), P(), P(), P(), P()),
         check=False,
     )
     if x0 is None:
@@ -116,19 +123,42 @@ def dist_plcg(op: DistPoisson, b_global: jax.Array, x0=None, *, l: int,
 def dist_plcg_solve(op: DistPoisson, b_global: jax.Array, *, l: int,
                     sigma: Sequence[float], tol: float = 1e-8,
                     maxiter: int = 2000, max_restarts: int = 5):
-    """Driver with explicit restart on square-root breakdown (Remark 8)."""
+    """Driver with explicit restart on square-root breakdown (Remark 8).
+
+    The iteration budget is global: every restart sweep runs with the
+    *remaining* budget (``maxiter`` minus iterations already spent), so a
+    breakdown-looping system performs at most ``maxiter`` solution updates
+    in total rather than ``max_restarts * maxiter``.  Mirrors the
+    single-device ``plcg_solve`` contract, including ``iterations`` /
+    ``breakdowns`` in the info dict.
+    """
     import numpy as np
     x = jnp.zeros_like(b_global)
     all_res: list = []
-    restarts = 0
-    while True:
-        x, resn, conv, brk = dist_plcg(op, b_global, x, l=l, iters=maxiter,
-                                       sigma=sigma, tol=tol)
+    restarts = breakdowns = 0
+    total_k = 0
+    converged = False
+    while total_k < maxiter:
+        remaining = maxiter - total_k
+        # iters bodies perform exactly iters - l solution updates, so the
+        # sweep can never overrun the remaining budget
+        x, resn, conv, brk, k_done = dist_plcg(
+            op, b_global, x, l=l, iters=remaining + l, sigma=sigma,
+            tol=tol)
         all_res.extend([float(r) for r in np.asarray(resn) if r > 0])
-        if bool(conv) or not bool(brk) or restarts >= max_restarts:
+        total_k += max(int(k_done) + 1, 1)
+        if bool(conv):
+            converged = True
             break
-        restarts += 1
-    return x, all_res, {"converged": bool(conv), "restarts": restarts}
+        if bool(brk):
+            breakdowns += 1
+            if restarts >= max_restarts:
+                break
+            restarts += 1
+            continue
+        break                             # iteration budget exhausted
+    return x, all_res, {"converged": converged, "restarts": restarts,
+                        "breakdowns": breakdowns, "iterations": total_k}
 
 
 def dist_cg(op: DistPoisson, b_global: jax.Array, *, iters: int,

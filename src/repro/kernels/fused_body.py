@@ -1,0 +1,229 @@
+"""Pallas TPU megakernel: the fused p(l)-CG iteration body.
+
+One launch per iteration computes everything in the scan body that touches
+an n-vector (paper arXiv:1801.04728 Alg. 3):
+
+* **(K1)** the 5-point stencil SPMV ``t = A z_i`` -- fused in-kernel when
+  the operator is the paper's 2-D Poisson stencil (``stencil_hw`` given,
+  no preconditioner); otherwise ``t`` (and ``t_hat``) stream in as inputs;
+* **(K4)** the sliding-window AXPY recurrences: the new basis vector
+  ``v_c = (z_{c-l} - sum_k g_k v_{c-2l+k}) / g_cc``, the new auxiliary
+  vector ``z_{i+1} = (t - gamma z_i - delta z_{i-1}) / delta'`` (and the
+  ``zhat`` recurrence when preconditioned), including the warmup-phase
+  variant ``z_{i+1} = t - sigma_i z_i`` selected in-kernel on the
+  ``steady`` flag;
+* **(K5)** the 2l+1 dot products of the next reduction payload, computed
+  against the *updated* windows while they are still resident in VMEM.
+
+Windows are **lane-major** ``(n, window)``: the 2l+1-entry band of one
+grid point is contiguous, each basis vector is read from HBM exactly once
+per iteration, and under ``vmap`` (the batched multi-RHS engine) the
+batching rule appends a grid dimension so a ``(B, n, window)`` batch is
+still ONE launch.  Per iteration the kernel replaces one launch each for
+the SPMV, the v-AXPY, and two multi-dots (plus their intermediate HBM
+round-trips) with a single pass: traffic drops from ~(10l+9)n to (6l+7)n
+words and launch count from 4+ to 1.
+
+Scalar recurrences (K2/K3/K6) stay in jnp: they are O(l^2) latency-bound
+work that would only force the kernel shape dynamic.
+
+All math runs in ``promote_types(dtype, float32)`` -- f64 solver paths
+(x64, interpret mode) keep full precision so ``backend="fused"`` is
+bit-comparable to the inline jnp body.
+
+Grid: 1-D over row-blocks of n (over grid rows of the (H, W) domain when
+the stencil is fused, so vertical stencil neighbors come from the
+prev/next block trick of ``stencil2d``).  The dot payload accumulates
+across grid steps into a revisited output block -- the canonical Pallas
+reduction pattern.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: scal layout: [steady, s_warm, gam, dlt, dsub, gcc, g_0 .. g_{2l-1}]
+N_FIXED_SCALARS = 6
+
+
+def _make_kernel(l: int, has_zh: bool, has_stencil: bool, nblocks: int,
+                 acc):
+    m = 2 * l + 1
+
+    def kernel(*refs):
+        it = iter(refs)
+        scal_ref = next(it)
+        v_ref = next(it)
+        z_ref = next(it)
+        zh_ref = next(it) if has_zh else None
+        if has_stencil:
+            zp_ref, zc_ref, zn_ref = next(it), next(it), next(it)
+        else:
+            t_ref = next(it)
+            th_ref = next(it) if has_zh else None
+        vo_ref = next(it)
+        zo_ref = next(it)
+        zho_ref = next(it) if has_zh else None
+        d_ref = next(it)
+
+        i = pl.program_id(0)
+        scal = scal_ref[...].astype(acc)            # (1, 6 + 2l)
+        steady = scal[0, 0] > 0.5
+        s_warm, gam, dlt = scal[0, 1], scal[0, 2], scal[0, 3]
+        dsub, gcc = scal[0, 4], scal[0, 5]
+        g = scal[:, N_FIXED_SCALARS:]               # (1, 2l)
+
+        V = v_ref[...].astype(acc)                  # (bs, 2l+1)
+        Z = z_ref[...].astype(acc)                  # (bs, l+1)
+
+        # ---- (K1) SPMV: in-kernel 5-point stencil or streamed t --------
+        if has_stencil:
+            xc = zc_ref[...].astype(acc)            # (bh, W2d)
+            top = jnp.where(i == 0, jnp.zeros_like(xc[-1:, :]),
+                            zp_ref[-1:, :].astype(acc))
+            bot = jnp.where(i == nblocks - 1, jnp.zeros_like(xc[:1, :]),
+                            zn_ref[:1, :].astype(acc))
+            up = jnp.concatenate([top, xc[:-1]], axis=0)
+            down = jnp.concatenate([xc[1:], bot], axis=0)
+            zc_col = jnp.zeros_like(xc[:, :1])      # Dirichlet halos
+            left = jnp.concatenate([zc_col, xc[:, :-1]], axis=1)
+            right = jnp.concatenate([xc[:, 1:], zc_col], axis=1)
+            t = (4.0 * xc - up - down - left - right).reshape(-1, 1)
+            th = t
+        else:
+            t = t_ref[...].astype(acc)              # (bs, 1)
+            th = th_ref[...].astype(acc) if has_zh else t
+
+        # ---- (K4) v recurrence (steady only; warmup keeps the window) --
+        vnew = (Z[:, l - 1:l]
+                - (V[:, :2 * l] * g).sum(axis=1, keepdims=True)) / gcc
+        V2 = jnp.where(steady, jnp.concatenate([vnew, V[:, :-1]], axis=1),
+                       V)
+        # ---- (K4) z recurrence with in-kernel warmup select ------------
+        znew = jnp.where(steady,
+                         (t - gam * Z[:, :1] - dsub * Z[:, 1:2]) / dlt,
+                         t - s_warm * Z[:, :1])
+        Z2 = jnp.concatenate([znew, Z[:, :-1]], axis=1)
+        lhs = znew
+        if has_zh:
+            Zh = zh_ref[...].astype(acc)            # (bs, 3)
+            zhnew = jnp.where(
+                steady, (th - gam * Zh[:, :1] - dsub * Zh[:, 1:2]) / dlt,
+                th - s_warm * Zh[:, :1])
+            zho_ref[...] = jnp.concatenate(
+                [zhnew, Zh[:, :-1]], axis=1).astype(zho_ref.dtype)
+            lhs = zhnew
+        vo_ref[...] = V2.astype(vo_ref.dtype)
+        zo_ref[...] = Z2.astype(zo_ref.dtype)
+
+        # ---- (K5) payload dots against the updated windows -------------
+        vd = (V2[:, :l + 1] * lhs).sum(axis=0)      # (l+1,)
+        zd = (Z2[:, :l] * lhs).sum(axis=0)          # (l,)
+
+        @pl.when(i == 0)
+        def _init():
+            d_ref[...] = jnp.zeros_like(d_ref)
+
+        d_ref[...] += jnp.concatenate([vd, zd]).reshape(1, m)
+
+    return kernel
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("l", "stencil_hw", "bn", "interpret"))
+def fused_body(Vw, Zw, scal, Zhw=None, t=None, t_hat=None, *, l: int,
+               stencil_hw=None, bn: int = 2048,
+               interpret: bool | None = None):
+    """One fused p(l)-CG body step on lane-major windows.
+
+    Args:
+      Vw: (n, 2l+1) basis window, slot 0 newest.
+      Zw: (n, l+1) auxiliary window, slot 0 newest.
+      scal: (1, 6+2l) packed scalars
+        ``[steady, s_warm, gam, dlt, dsub, gcc, g...]``.
+      Zhw: (n, 3) zhat window (preconditioned runs) or None.
+      t: (n,) preconditioned SPMV result; None fuses the 5-point stencil
+        in-kernel (requires ``stencil_hw`` and no ``Zhw``).
+      t_hat: (n,) unpreconditioned SPMV result (required with ``Zhw``).
+      stencil_hw: (H, W) 2-D grid shape of the Poisson domain.
+      bn: row-block size (rounded down to divide n; with the stencil
+        fused, blocks are whole grid rows, ``bn // W`` of them).
+
+    Returns:
+      (Vw2, Zw2, Zhw2 | None, dots) with ``dots`` the (2l+1,) payload
+      ``[vd_0..vd_l, zd_0..zd_{l-1}]`` in the accumulation dtype.
+    """
+    n, m = Vw.shape
+    if m != 2 * l + 1:
+        raise ValueError(f"Vw must be (n, 2l+1), got {Vw.shape} for l={l}")
+    has_zh = Zhw is not None
+    has_stencil = t is None
+    if has_stencil:
+        if stencil_hw is None or has_zh:
+            raise ValueError("in-kernel SPMV needs stencil_hw and no Zhw")
+        H, W2d = stencil_hw
+        if H * W2d != n:
+            raise ValueError(f"stencil_hw {stencil_hw} != n={n}")
+        bh = max(min(bn // W2d, H), 1)
+        while H % bh:
+            bh -= 1
+        nblocks, bs = H // bh, bh * W2d
+    else:
+        bs = min(bn, n)
+        while n % bs:
+            bs //= 2
+        nblocks = n // bs
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    acc = jnp.promote_types(Vw.dtype, jnp.float32)
+    ns = scal.shape[-1]
+
+    row = lambda i: (i, 0)          # noqa: E731
+    fix = lambda i: (0, 0)          # noqa: E731
+    in_specs = [pl.BlockSpec((1, ns), fix),
+                pl.BlockSpec((bs, m), row),
+                pl.BlockSpec((bs, l + 1), row)]
+    operands = [scal, Vw, Zw]
+    if has_zh:
+        in_specs.append(pl.BlockSpec((bs, 3), row))
+        operands.append(Zhw)
+    if has_stencil:
+        z2d = Zw[:, 0].reshape(H, W2d)
+        in_specs += [
+            pl.BlockSpec((bh, W2d), lambda i: (jnp.maximum(i - 1, 0), 0)),
+            pl.BlockSpec((bh, W2d), row),
+            pl.BlockSpec((bh, W2d),
+                         lambda i: (jnp.minimum(i + 1, nblocks - 1), 0)),
+        ]
+        operands += [z2d, z2d, z2d]
+    else:
+        in_specs.append(pl.BlockSpec((bs, 1), row))
+        operands.append(t.reshape(n, 1))
+        if has_zh:
+            in_specs.append(pl.BlockSpec((bs, 1), row))
+            operands.append(t_hat.reshape(n, 1))
+
+    out_specs = [pl.BlockSpec((bs, m), row),
+                 pl.BlockSpec((bs, l + 1), row)]
+    out_shape = [jax.ShapeDtypeStruct((n, m), Vw.dtype),
+                 jax.ShapeDtypeStruct((n, l + 1), Zw.dtype)]
+    if has_zh:
+        out_specs.append(pl.BlockSpec((bs, 3), row))
+        out_shape.append(jax.ShapeDtypeStruct((n, 3), Zhw.dtype))
+    out_specs.append(pl.BlockSpec((1, m), fix))
+    out_shape.append(jax.ShapeDtypeStruct((1, m), acc))
+
+    outs = pl.pallas_call(
+        _make_kernel(l, has_zh, has_stencil, nblocks, acc),
+        grid=(nblocks,),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(*operands)
+    Vw2, Zw2 = outs[0], outs[1]
+    Zhw2 = outs[2] if has_zh else None
+    return Vw2, Zw2, Zhw2, outs[-1][0]

@@ -1,0 +1,46 @@
+"""Jaxpr introspection: count Pallas kernel launches in a traced function.
+
+The fused-iteration acceptance gate is structural, not wall-clock (CPU
+interpret-mode timings are not probative of TPU launch overhead): the
+``backend="fused"`` scan body must contain exactly ONE ``pallas_call``
+equation where the ``backend="pallas"`` tier has one per hot-path kernel.
+Counting equations in the traced jaxpr verifies that without running
+anything.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def count_pallas_calls(fn, *args, **kwargs) -> int:
+    """Number of ``pallas_call`` equations anywhere in ``fn``'s jaxpr
+    (recursing into scan/cond/jit sub-jaxprs; cond counts every branch)."""
+    closed = jax.make_jaxpr(fn)(*args, **kwargs)
+    return _count(closed.jaxpr, set())
+
+
+def _count(jaxpr, seen: set) -> int:
+    if id(jaxpr) in seen:       # guard against shared sub-jaxprs
+        return 0
+    seen.add(id(jaxpr))
+    total = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            total += 1
+        for sub in _sub_jaxprs(eqn.params):
+            total += _count(sub, seen)
+    return total
+
+
+def _sub_jaxprs(obj):
+    """Yield every Jaxpr reachable from an eqn params value."""
+    if isinstance(obj, jax.core.Jaxpr):
+        yield obj
+    elif isinstance(obj, jax.core.ClosedJaxpr):
+        yield obj.jaxpr
+    elif isinstance(obj, dict):
+        for v in obj.values():
+            yield from _sub_jaxprs(v)
+    elif isinstance(obj, (list, tuple)):
+        for v in obj:
+            yield from _sub_jaxprs(v)

@@ -5,12 +5,17 @@ kernel bodies execute exactly, validating the TPU code path; on TPU they
 compile to Mosaic.  ``use_pallas=False`` falls back to the jnp oracles
 (used by default inside the distributed solver on CPU where interpret-mode
 dispatch overhead would dominate).
+
+Window arguments are lane-major ``(n, window)`` throughout (see
+``fused_body`` for the layout rationale).
 """
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
 from . import ref
+from .fused_body import N_FIXED_SCALARS, fused_body
 from .multidot import multidot
 from .stencil2d import stencil2d
 from .window_axpy import window_axpy
@@ -38,3 +43,28 @@ def window_axpy_apply(V, z, g, gcc, *, use_pallas=None):
     if use_pallas:
         return window_axpy(V, z, g, gcc)
     return ref.window_axpy_ref(V, z, g, gcc)
+
+
+def fused_body_apply(Vw, Zw, Zhw, t, t_hat, *, l, steady, s_warm, gam, dlt,
+                     dsub, gcc, g, stencil_hw=None, use_pallas=None):
+    """Dispatch one fused p(l)-CG body step (see ``fused_body``).
+
+    Scalars (``steady`` .. ``gcc`` plus the 2l band coefficients ``g``)
+    are packed into one (1, 6+2l) operand so the kernel signature stays
+    static across iterations.
+    """
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if not use_pallas:
+        return ref.fused_body_ref(Vw, Zw, Zhw, t, t_hat, l=l, steady=steady,
+                                  s_warm=s_warm, gam=gam, dlt=dlt, dsub=dsub,
+                                  gcc=gcc, g=g, stencil_hw=stencil_hw)
+    acc = jnp.promote_types(Vw.dtype, jnp.float32)
+    scal = jnp.concatenate([
+        jnp.stack([jnp.where(steady, 1.0, 0.0).astype(acc),
+                   s_warm.astype(acc), gam.astype(acc), dlt.astype(acc),
+                   dsub.astype(acc), gcc.astype(acc)]),
+        g.astype(acc),
+    ]).reshape(1, N_FIXED_SCALARS + 2 * l)
+    return fused_body(Vw, Zw, scal, Zhw, t, t_hat, l=l,
+                      stencil_hw=stencil_hw)

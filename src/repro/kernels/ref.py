@@ -1,4 +1,10 @@
-"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth).
+
+Window arguments are **lane-major** ``(n, window)`` to match the kernel
+layout (the band of one grid point is contiguous); accumulation is
+``promote_types(dtype, float32)`` exactly like the kernels (bf16/f32
+accumulate in f32, f64 stays f64 on the x64 solver paths).
+"""
 from __future__ import annotations
 
 import jax.numpy as jnp
@@ -13,13 +19,58 @@ def stencil2d_ref(x, halo_n, halo_s, halo_w, halo_e):
 
 
 def multidot_ref(W, z):
-    # accumulate in at-least-f32 (f64 stays f64 so the x64 solver paths keep
-    # their full precision; bf16/f32 accumulate in f32 like the TPU kernel)
+    """out (m,) = W.T @ z for lane-major W (n, m)."""
     acc = jnp.promote_types(W.dtype, jnp.float32)
-    return W.astype(acc) @ z.astype(acc)
+    return (W.astype(acc) * z.astype(acc)[:, None]).sum(axis=0)
 
 
 def window_axpy_ref(V, z, g, gcc):
+    """v_new (n,) = (z - V @ g) / gcc for lane-major V (n, m)."""
     acc_t = jnp.promote_types(V.dtype, jnp.float32)
-    acc = z.astype(acc_t) - g.astype(acc_t) @ V.astype(acc_t)
-    return (acc / gcc).astype(V.dtype)
+    out = z.astype(acc_t) - (V.astype(acc_t)
+                             * g.astype(acc_t)[None, :]).sum(axis=1)
+    return (out / gcc).astype(V.dtype)
+
+
+def fused_body_ref(Vw, Zw, Zhw, t, t_hat, *, l, steady, s_warm, gam, dlt,
+                   dsub, gcc, g, stencil_hw=None):
+    """jnp oracle of the fused p(l)-CG body megakernel.
+
+    Same contract as ``fused_body`` (lane-major windows, in-body warmup
+    select, payload dots against the updated windows); ``t=None`` applies
+    the 5-point Dirichlet stencil to ``Zw[:, 0]`` reshaped to
+    ``stencil_hw``.  Returns (Vw2, Zw2, Zhw2 | None, dots).
+    """
+    acc = jnp.promote_types(Vw.dtype, jnp.float32)
+    V = Vw.astype(acc)
+    Z = Zw.astype(acc)
+    if t is None:
+        H, W2d = stencil_hw
+        x = Z[:, 0].reshape(H, W2d)
+        zr = jnp.zeros_like
+        t = stencil2d_ref(x, zr(x[0]), zr(x[0]), zr(x[:, 0]),
+                          zr(x[:, 0])).reshape(-1)
+        t_hat = t
+    t = t.astype(acc)[:, None]
+    vnew = (Z[:, l - 1:l]
+            - (V[:, :2 * l] * g.astype(acc)[None, :]).sum(
+                axis=1, keepdims=True)) / gcc
+    V2 = jnp.where(steady, jnp.concatenate([vnew, V[:, :-1]], axis=1), V)
+    znew = jnp.where(steady, (t - gam * Z[:, :1] - dsub * Z[:, 1:2]) / dlt,
+                     t - s_warm * Z[:, :1])
+    Z2 = jnp.concatenate([znew, Z[:, :-1]], axis=1)
+    lhs = znew
+    Zh2 = None
+    if Zhw is not None:
+        Zh = Zhw.astype(acc)
+        th = t_hat.astype(acc)[:, None]
+        zhnew = jnp.where(
+            steady, (th - gam * Zh[:, :1] - dsub * Zh[:, 1:2]) / dlt,
+            th - s_warm * Zh[:, :1])
+        Zh2 = jnp.concatenate([zhnew, Zh[:, :-1]],
+                              axis=1).astype(Zhw.dtype)
+        lhs = zhnew
+    vd = (V2[:, :l + 1] * lhs).sum(axis=0)
+    zd = (Z2[:, :l] * lhs).sum(axis=0)
+    return (V2.astype(Vw.dtype), Z2.astype(Zw.dtype), Zh2,
+            jnp.concatenate([vd, zd]))

@@ -31,7 +31,7 @@ def main(argv=None):
                     help="number of right-hand sides; > 1 runs the batched "
                     "vmap(scan) multi-RHS engine")
     ap.add_argument("--backend", type=str, default=None,
-                    help="scan-engine kernel backend: pallas|ref|auto")
+                    help="scan-engine kernel backend: fused|pallas|ref|auto")
     ap.add_argument("--dryrun", action="store_true",
                     help="lower+compile on the production 16x16 (or 2x16x16 "
                     "with --multi-pod) mesh and report roofline terms")

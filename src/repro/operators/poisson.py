@@ -71,7 +71,7 @@ def poisson2d(nx: int, ny: int | None = None) -> LinearOperator:
 
     import numpy as np
     return LinearOperator(matvec=matvec, n=n, diag=np.full(n, 4.0),
-                          name=f"poisson2d-{nx}x{ny}")
+                          name=f"poisson2d-{nx}x{ny}", stencil2d=(nx, ny))
 
 
 def poisson3d(nx: int, ny: int | None = None, nz: int | None = None) -> LinearOperator:

@@ -40,9 +40,9 @@ def test_dist_plcg_matches_reference(dist_env):
         op = DistPoisson(nx, ny, mesh)
         A = poisson2d(nx, ny)
         b_np = A @ np.ones(nx*ny)
-        x, resn, conv, brk = dist_plcg(op, jnp.asarray(b_np.reshape(nx, ny)),
-                                       l=2, iters=140,
-                                       sigma=chebyshev_shifts(0,8,2), tol=1e-10)
+        x, resn, conv, brk, k_done = dist_plcg(
+            op, jnp.asarray(b_np.reshape(nx, ny)), l=2, iters=140,
+            sigma=chebyshev_shifts(0,8,2), tol=1e-10)
         ref = plcg(A, b_np, l=2, tol=1e-10, maxiter=140, spectrum=(0,8))
         rr = np.array([r for r in np.asarray(resn) if r > 0])
         m = min(len(rr), len(ref.resnorms)) - 1
@@ -52,6 +52,47 @@ def test_dist_plcg_matches_reference(dist_env):
                           "conv": bool(conv)}))
     """), dist_env)
     assert res["trace"] and res["conv"] and res["res"] < 1e-7
+
+
+def test_dist_solve_budget_and_info():
+    """dist_plcg_solve enforces a GLOBAL iteration budget across restart
+    sweeps (no max_restarts x maxiter blow-up) and reports iterations /
+    breakdowns like the single-device driver.  Runs in-process on a (1,1)
+    mesh (unpaired ppermute edges = Dirichlet zeros)."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core.shifts import chebyshev_shifts
+    from repro.distributed import DistPoisson, dist_plcg_solve
+    from repro.launch.mesh import make_mesh_compat
+    from repro.operators import poisson2d
+
+    old = jax.config.jax_enable_x64
+    jax.config.update("jax_enable_x64", True)
+    try:
+        mesh = make_mesh_compat((1, 1), ("data", "model"))
+        nx = ny = 16
+        op = DistPoisson(nx, ny, mesh)
+        A = poisson2d(nx, ny)
+        b = jnp.asarray((A @ np.ones(nx * ny)).reshape(nx, ny))
+        # budget-exhaustion path: far too few iterations to converge
+        x, resn, info = dist_plcg_solve(op, b, l=2,
+                                        sigma=chebyshev_shifts(0, 8, 2),
+                                        tol=1e-14, maxiter=10)
+        assert not info["converged"]
+        assert info["iterations"] <= 10
+        assert set(info) == {"converged", "restarts", "breakdowns",
+                             "iterations"}
+        # convergent path reports the true iteration count
+        x, resn, info = dist_plcg_solve(op, b, l=2,
+                                        sigma=chebyshev_shifts(0, 8, 2),
+                                        tol=1e-10, maxiter=200)
+        assert info["converged"]
+        assert 0 < info["iterations"] <= 200
+        err = np.linalg.norm(np.asarray(x).reshape(-1) - 1.0)
+        assert err < 1e-6
+    finally:
+        jax.config.update("jax_enable_x64", old)
 
 
 @pytest.mark.slow

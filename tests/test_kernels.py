@@ -1,11 +1,13 @@
 """Per-kernel allclose vs the pure-jnp oracles (interpret mode executes the
-TPU kernel bodies exactly), swept over shapes and dtypes."""
+TPU kernel bodies exactly), swept over shapes and dtypes.  Window kernels
+take lane-major (n, window) operands."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.kernels import ref
+from repro.kernels.fused_body import fused_body
 from repro.kernels.multidot import multidot
 from repro.kernels.stencil2d import stencil2d
 from repro.kernels.window_axpy import window_axpy
@@ -46,7 +48,7 @@ def test_stencil2d_matches_poisson_operator():
 @pytest.mark.parametrize("m,n", [(3, 1024), (5, 4096), (9, 2048), (7, 1536)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_multidot(m, n, dtype):
-    W = jax.random.normal(KEY, (m, n), jnp.float32).astype(dtype)
+    W = jax.random.normal(KEY, (n, m), jnp.float32).astype(dtype)
     z = jax.random.normal(jax.random.PRNGKey(9), (n,), jnp.float32).astype(dtype)
     out = multidot(W, z, bn=512, interpret=True)
     want = ref.multidot_ref(W, z)
@@ -55,10 +57,27 @@ def test_multidot(m, n, dtype):
     assert rel < (1e-5 if dtype == jnp.float32 else 3e-2)
 
 
+def test_multidot_preserves_f64():
+    """x64 accumulation stays f64 (the tight-parity requirement of the
+    backend ladder)."""
+    old = jax.config.jax_enable_x64
+    jax.config.update("jax_enable_x64", True)
+    try:
+        W = jax.random.normal(KEY, (2048, 5), jnp.float64)
+        z = jax.random.normal(jax.random.PRNGKey(9), (2048,), jnp.float64)
+        out = multidot(W, z, bn=512, interpret=True)
+        assert out.dtype == jnp.float64
+        np.testing.assert_allclose(np.asarray(out),
+                                   np.asarray(ref.multidot_ref(W, z)),
+                                   rtol=1e-14)
+    finally:
+        jax.config.update("jax_enable_x64", old)
+
+
 @pytest.mark.parametrize("m,n", [(2, 1024), (6, 4096), (10, 2048)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_window_axpy(m, n, dtype):
-    V = jax.random.normal(KEY, (m, n), jnp.float32).astype(dtype)
+    V = jax.random.normal(KEY, (n, m), jnp.float32).astype(dtype)
     z = jax.random.normal(jax.random.PRNGKey(2), (n,), jnp.float32).astype(dtype)
     g = jax.random.normal(jax.random.PRNGKey(3), (m,), jnp.float32)
     out = window_axpy(V, z, g, 1.25, bn=512, interpret=True)
@@ -66,6 +85,93 @@ def test_window_axpy(m, n, dtype):
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(want, np.float32),
                                atol=1e-4 if dtype == jnp.float32 else 1e-1)
+
+
+# ---------------------- fused iteration megakernel ------------------------
+
+def _fused_inputs(l, n, dtype, prec=False):
+    m = 2 * l + 1
+    Vw = jax.random.normal(KEY, (n, m), jnp.float32).astype(dtype)
+    Zw = jax.random.normal(jax.random.PRNGKey(1), (n, l + 1),
+                           jnp.float32).astype(dtype)
+    Zhw = (jax.random.normal(jax.random.PRNGKey(2), (n, 3),
+                             jnp.float32).astype(dtype) if prec else None)
+    t = jax.random.normal(jax.random.PRNGKey(3), (n,),
+                          jnp.float32).astype(dtype)
+    th = (jax.random.normal(jax.random.PRNGKey(4), (n,),
+                            jnp.float32).astype(dtype) if prec else None)
+    g = jax.random.normal(jax.random.PRNGKey(5), (2 * l,),
+                          jnp.float32).astype(dtype)
+    scalars = dict(s_warm=jnp.asarray(0.7, dtype), gam=jnp.asarray(1.3, dtype),
+                   dlt=jnp.asarray(0.9, dtype), dsub=jnp.asarray(0.4, dtype),
+                   gcc=jnp.asarray(1.1, dtype), g=g)
+    return Vw, Zw, Zhw, t, th, scalars
+
+
+def _pack_scal(steady, scalars, l, dtype):
+    return jnp.concatenate([
+        jnp.stack([jnp.asarray(1.0 if steady else 0.0, dtype),
+                   scalars["s_warm"], scalars["gam"], scalars["dlt"],
+                   scalars["dsub"], scalars["gcc"]]),
+        scalars["g"]]).reshape(1, 6 + 2 * l).astype(dtype)
+
+
+@pytest.mark.parametrize("l", [1, 2, 4])
+@pytest.mark.parametrize("steady", [True, False])
+@pytest.mark.parametrize("prec", [False, True])
+def test_fused_body_matches_oracle(l, steady, prec):
+    n, dtype = 2048, jnp.float32
+    Vw, Zw, Zhw, t, th, scalars = _fused_inputs(l, n, dtype, prec=prec)
+    scal = _pack_scal(steady, scalars, l, dtype)
+    got = fused_body(Vw, Zw, scal, Zhw, t, th, l=l, bn=512, interpret=True)
+    want = ref.fused_body_ref(Vw, Zw, Zhw, t, th, l=l,
+                              steady=jnp.bool_(steady), **scalars)
+    labels = ("Vw2", "Zw2", "Zhw2", "dots")
+    for lab, a, b in zip(labels, got, want):
+        if a is None and b is None:
+            continue
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=2e-4,
+                                   err_msg=lab)
+
+
+@pytest.mark.parametrize("hw", [(16, 128), (32, 128), (24, 256)])
+def test_fused_body_in_kernel_stencil(hw):
+    """t=None folds the 5-point Dirichlet SPMV into the kernel; must match
+    the oracle that applies stencil2d_ref to Zw[:, 0]."""
+    H, W = hw
+    l, n, dtype = 2, H * W, jnp.float32
+    Vw, Zw, _, _, _, scalars = _fused_inputs(l, n, dtype)
+    scal = _pack_scal(True, scalars, l, dtype)
+    got = fused_body(Vw, Zw, scal, None, None, None, l=l,
+                     stencil_hw=(H, W), bn=8 * W, interpret=True)
+    want = ref.fused_body_ref(Vw, Zw, None, None, None, l=l,
+                              steady=jnp.bool_(True), stencil_hw=(H, W),
+                              **scalars)
+    for a, b in zip(got, want):
+        if a is None and b is None:
+            continue
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=2e-4)
+
+
+def test_fused_body_batches_to_one_launch():
+    """vmap over the megakernel (the batched multi-RHS engine) must lower
+    to ONE pallas_call handling the whole (B, n, window) batch."""
+    from repro.kernels.introspect import count_pallas_calls
+    l, n, B, dtype = 2, 1024, 3, jnp.float32
+    Vw, Zw, _, t, _, scalars = _fused_inputs(l, n, dtype)
+    scal = _pack_scal(True, scalars, l, dtype)
+    stack = lambda a: jnp.stack([a] * B)  # noqa: E731
+    fn = jax.vmap(lambda V, Z, s, tt: fused_body(V, Z, s, None, tt, None,
+                                                 l=l, bn=512, interpret=True))
+    assert count_pallas_calls(fn, stack(Vw), stack(Zw), stack(scal),
+                              stack(t)) == 1
+    out = fn(stack(Vw), stack(Zw), stack(scal), stack(t))
+    want = ref.fused_body_ref(Vw, Zw, None, t, None, l=l,
+                              steady=jnp.bool_(True), **scalars)
+    np.testing.assert_allclose(np.asarray(out[0][1]), np.asarray(want[0]),
+                               atol=2e-4)
 
 
 def test_kernels_drive_a_full_solve():

@@ -89,3 +89,69 @@ def test_scan_freezes_after_convergence(problem):
     # after convergence every subsequent residual entry stays 0 (frozen)
     assert bool(out.converged)
     assert nz[-1] < 70
+
+
+# ------------------------- jitted-sweep cache -----------------------------
+
+def test_sweep_cache_reuses_and_clears(problem):
+    """Same operator object + settings -> one cache entry reused;
+    clear_solver_cache() empties it."""
+    import gc
+
+    from repro.core import clear_solver_cache
+    from repro.core.plcg_scan import _SWEEP_CACHE
+
+    A, b = problem
+    clear_solver_cache()
+    gc.collect()
+    mv = lambda v: A @ v  # noqa: E731
+    kw = dict(l=2, sigma=chebyshev_shifts(0, 8, 2), tol=1e-10, maxiter=120)
+    x1, _, _ = plcg_solve(mv, jnp.asarray(b), **kw)
+    assert len(_SWEEP_CACHE) == 1
+    x2, _, _ = plcg_solve(mv, jnp.asarray(b), **kw)
+    assert len(_SWEEP_CACHE) == 1          # hit, not a second entry
+    np.testing.assert_allclose(np.asarray(x1), np.asarray(x2))
+    clear_solver_cache()
+    assert len(_SWEEP_CACHE) == 0
+
+
+def test_sweep_cache_drops_dead_closures(problem):
+    """A fresh closure per call no longer leaks: when the caller drops the
+    operator closure, its cache entry (and compiled sweep) is evicted via
+    the weak-key callback instead of being pinned forever."""
+    import gc
+
+    from repro.core import clear_solver_cache
+    from repro.core.plcg_scan import _SWEEP_CACHE
+
+    A, b = problem
+    clear_solver_cache()
+    gc.collect()
+    mv = lambda v: A @ v  # noqa: E731
+    plcg_solve(mv, jnp.asarray(b), l=2, sigma=chebyshev_shifts(0, 8, 2),
+               tol=1e-10, maxiter=120)
+    assert len(_SWEEP_CACHE) == 1
+    del mv
+    gc.collect()
+    assert len(_SWEEP_CACHE) == 0
+
+
+def test_sweep_cache_is_bounded(problem):
+    """Even with callers that keep 20+ distinct closures alive, the cache
+    never exceeds its LRU bound."""
+    import gc
+
+    from repro.core import clear_solver_cache
+    from repro.core.plcg_scan import _SWEEP_CACHE
+
+    A, b = problem
+    clear_solver_cache()
+    gc.collect()
+    keep = []
+    for j in range(20):
+        mv = (lambda j: lambda v: A @ v)(j)
+        keep.append(mv)
+        plcg_solve(mv, jnp.asarray(b), l=1, sigma=chebyshev_shifts(0, 8, 1),
+                   tol=1e-8, maxiter=40)
+    assert 0 < len(_SWEEP_CACHE) <= 16
+    clear_solver_cache()
