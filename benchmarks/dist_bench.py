@@ -1,0 +1,93 @@
+"""Distributed (mesh execution layer) benchmarks.
+
+Runs its payload in a subprocess with a FORCED 4-device host platform
+(``--xla_force_host_platform_device_count=4``) so the shard_map mesh path
+is real even on single-device CI runners; the parent process keeps its
+single device.
+
+The probative columns are structural, not wall-clock (CPU collective
+timings say nothing about ICI): ``psums_per_iter`` counted in the traced
+scan body (1 for the pipelined engine's fused payload vs 2 for the
+classic-CG baseline) and ``ppermutes_per_iter`` (the 4 halo exchanges),
+plus lane-scaling efficiency of the batched ``shard_map(vmap(scan))``
+sweep -- all lanes' reductions ride the SAME single psum, so ``us``
+should grow far slower than lane count.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import subprocess
+import sys
+
+_PAYLOAD = r"""
+import json, time
+import jax
+jax.config.update("jax_enable_x64", True)
+import jax.numpy as jnp
+from repro.core.shifts import chebyshev_shifts
+from repro.distributed import DistPoisson, cg_mesh_sweep, plcg_mesh_sweep
+from repro.kernels.introspect import count_primitive_in_scan_bodies
+from repro.launch.mesh import make_mesh_compat
+
+mesh = make_mesh_compat((2, 2), ("data", "model"))
+nx = ny = 32
+op = DistPoisson(nx, ny, mesh)
+sig = tuple(chebyshev_shifts(0.0, 8.0, 2))
+iters = 50
+rows = []
+
+def timeit(fn, *a, reps=2):
+    jax.block_until_ready(fn(*a))          # warmup absorbs compile
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(reps):
+        out = fn(*a)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+b = jnp.ones((nx, ny))
+x0 = jnp.zeros_like(b)
+fp = plcg_mesh_sweep(op, l=2, iters=iters, sigma=sig, tol=0.0)
+psums = count_primitive_in_scan_bodies(fp, "psum", b, x0, iters)[0]
+ppers = count_primitive_in_scan_bodies(fp, "ppermute", b, x0, iters)[0]
+rows.append(["dist/plcg_sweep_2x2", timeit(fp, b, x0, iters),
+             f"psums_per_iter={psums};ppermutes_per_iter={ppers};"
+             f"iters={iters}"])
+fc = cg_mesh_sweep(op, iters=iters, tol=0.0)
+psums_c = count_primitive_in_scan_bodies(fc, "psum", b, x0)[0]
+rows.append(["dist/cg_sweep_2x2", timeit(fc, b, x0),
+             f"psums_per_iter={psums_c};iters={iters}"])
+
+fb = plcg_mesh_sweep(op, l=2, iters=iters, sigma=sig, tol=0.0, batched=True)
+base = None
+for lanes in (1, 4, 8):
+    B = jnp.ones((lanes, nx, ny)) * (1.0 + jnp.arange(lanes)[:, None, None])
+    psums_b = count_primitive_in_scan_bodies(fb, "psum", B, B * 0, iters)[0]
+    us = timeit(fb, B, B * 0, iters)
+    if base is None:
+        base = us
+    rows.append([f"dist/plcg_lanes_{lanes}", us,
+                 f"psums_per_iter={psums_b};us_per_lane={us / lanes:.0f};"
+                 f"eff_vs_1lane={base * lanes / us:.2f}x"])
+print(json.dumps(rows))
+"""
+
+
+def dist_rows():
+    """dist/ row family, produced on a host-count-forced 4-device mesh."""
+    repo = pathlib.Path(__file__).resolve().parent.parent
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = str(repo / "src")
+    out = subprocess.run([sys.executable, "-c", _PAYLOAD], env=env,
+                         capture_output=True, text=True, timeout=900)
+    if out.returncode != 0:
+        raise RuntimeError(
+            f"dist bench subprocess failed: {out.stderr[-500:]}")
+    return [tuple(r) for r in json.loads(out.stdout.strip().splitlines()[-1])]
+
+
+ALL = [dist_rows]
+SMOKE = [dist_rows]

@@ -34,13 +34,15 @@ def main(argv=None) -> None:
                          "e.g. BENCH_<rev>.json")
     args = ap.parse_args(argv)
 
-    from benchmarks import engine_bench, kernels_bench, paper_figs, roofline
+    from benchmarks import (dist_bench, engine_bench, kernels_bench,
+                            paper_figs, roofline)
     if args.smoke:
         groups = (list(engine_bench.SMOKE) + list(kernels_bench.ALL)
-                  + [paper_figs.table1_cost_model])
+                  + [paper_figs.table1_cost_model] + list(dist_bench.SMOKE))
     else:
         groups = (list(paper_figs.ALL) + list(kernels_bench.ALL)
-                  + list(engine_bench.ALL) + list(roofline.ALL))
+                  + list(engine_bench.ALL) + list(dist_bench.ALL)
+                  + list(roofline.ALL))
     print("name,us_per_call,derived")
     failures = 0
     all_rows: list[tuple] = []

@@ -7,8 +7,8 @@ contract, including the batched multi-RHS ``vmap(scan)`` path.  Individual
 algorithm modules (``cg.py``, ``plcg.py``, ``plcg_scan.py``, ...) stay
 importable directly for research use.
 """
-from .engine import (as_operator, describe_methods, get_method, methods,
-                     register, solve)
+from .engine import (as_operator, clear_batch_trace, describe_methods,
+                     get_method, methods, register, solve)
 from .linop import (LinearOperator, Preconditioner, dense_operator,
                     identity_preconditioner)
 from .results import SolveResult
@@ -19,6 +19,7 @@ __all__ = [
     "Preconditioner",
     "SolveResult",
     "as_operator",
+    "clear_batch_trace",
     "clear_solver_cache",
     "dense_operator",
     "describe_methods",

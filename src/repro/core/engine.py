@@ -61,9 +61,21 @@ Array = Any
 _REGISTRY: dict[str, "MethodSpec"] = {}
 
 #: Trace-time log of the batched vmap(scan) engine: one entry is appended
-#: each time XLA *traces* (= compiles) the batched engine, so tests can
-#: assert that a batched ``solve(A, B)`` compiles exactly once.
+#: each time XLA *traces* (= compiles) the batched engine (single-device
+#: and mesh-aware), so tests can assert that a batched ``solve(A, B)``
+#: compiles exactly once.
 BATCH_TRACE_EVENTS: list[tuple] = []
+
+
+def clear_batch_trace() -> None:
+    """Reset :data:`BATCH_TRACE_EVENTS` (test helper).
+
+    The mesh engine and the single-device batched engine both append to
+    this exact list object, so it must be cleared in place -- rebinding
+    the module attribute would silently detach their appends.  This
+    helper is the one supported way to reset it.
+    """
+    BATCH_TRACE_EVENTS.clear()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -133,6 +145,28 @@ def as_operator(A, b=None) -> LinearOperator:
                     "operator")
 
 
+def _stacklevel_outside_engine() -> int:
+    """``warnings.warn`` stacklevel of the first frame outside this module.
+
+    Used so engine warnings point at the *caller of* :func:`solve`
+    regardless of how many internal dispatch frames sit in between (the
+    depth differs between the batched, loop and mesh paths and would
+    otherwise silently drift on refactors).
+    """
+    import sys
+    level = 1
+    frame = sys._getframe(1)
+    while frame is not None and frame.f_globals.get("__name__") == __name__:
+        level += 1
+        frame = frame.f_back
+    return level
+
+
+def _is_mesh_operator(A) -> bool:
+    """Duck-typed DistributedOperator check (no distributed import)."""
+    return hasattr(A, "matvec_local") and hasattr(A, "mesh")
+
+
 def _resolve_sigma(sigma, spectrum, l: int) -> list[float]:
     if sigma is not None:
         sig = [float(s) for s in sigma]
@@ -160,13 +194,19 @@ def solve(
     sigma: Optional[Sequence[float]] = None,
     spectrum: Optional[tuple] = None,
     backend: Optional[str] = None,
+    mesh=None,
     **options,
 ) -> SolveResult:
     """Solve ``A x = b`` (or a stacked batch ``A X[j] = B[j]``).
 
     Args:
-      A: :class:`LinearOperator`, dense square array, or matvec callable.
-      b: right-hand side ``(n,)``, or ``(nrhs, n)`` for a batched solve.
+      A: :class:`LinearOperator`, dense square array, or matvec callable;
+        with ``mesh=`` also a ``repro.distributed.DistributedOperator``
+        (a ``LinearOperator`` with a ``stencil2d`` hint is auto-promoted
+        to ``DistPoisson``).
+      b: right-hand side ``(n,)``, or ``(nrhs, n)`` for a batched solve;
+        on a mesh, the global field ``op.global_shape`` (e.g.
+        ``(nx, ny)``) or a stacked batch ``(nrhs, nx, ny)``.
       method: one of :func:`methods` (default the paper's p(l)-CG).
       x0: initial guess, same shape as ``b`` (default zeros).
       tol: relative residual tolerance (``0`` disables early stopping).
@@ -178,16 +218,38 @@ def solve(
       backend: kernel tier for the scan engine
         ("fused" | "pallas" | "ref" | "auto" | None), ignored by
         reference methods and by the distributed injected-dot path.
+      mesh: a 2-axis ``jax.sharding.Mesh`` -- dispatches the method onto
+        the mesh execution layer: domain decomposition inside
+        (``shard_map`` + halo ``ppermute``), RHS batching outside
+        (``vmap``), ONE fused psum per iteration carrying all lanes'
+        ``(nrhs, 2l+1)`` payloads (``cg`` is the two-psum baseline).
+        Methods without a mesh path raise; see
+        ``repro.distributed.mesh_methods()``.
       **options: method-specific extras (``trace_gaps``, ``record_G``,
         ``max_restarts``, ``exploit_symmetry``, ...).
 
     Returns:
       :class:`SolveResult`; for batched input, ``x`` has shape
-      ``(nrhs, n)``, ``resnorms`` is a per-RHS list of traces, and
-      ``info["per_rhs_converged"]`` / ``info["per_rhs_iters"]`` hold the
-      per-system outcomes.
+      ``(nrhs, n)`` (``(nrhs, nx, ny)`` on a mesh), ``resnorms`` is a
+      per-RHS list of traces, and ``info["per_rhs_converged"]`` /
+      ``info["per_rhs_iters"]`` hold the per-system outcomes.
     """
     spec = get_method(method)
+    if mesh is not None or _is_mesh_operator(A):
+        if backend is not None:
+            import warnings
+            warnings.warn(
+                f"backend={backend!r} is ignored on the mesh path: the "
+                "injected local-partial dots bypass every kernel tier by "
+                "construction (the distributed hot path is the "
+                "halo-exchange stencil plus the collective schedule)",
+                stacklevel=_stacklevel_outside_engine())
+        # lazy import: keeps the core engine importable in environments
+        # where the distributed layer (shard_map et al.) is unavailable
+        from ..distributed.plcg_dist import solve_on_mesh
+        return solve_on_mesh(spec, A, b, mesh=mesh, x0=x0, tol=tol,
+                             maxiter=maxiter, M=M, l=l, sigma=sigma,
+                             spectrum=spectrum, backend=backend, **options)
     op = as_operator(A, b)
     if getattr(b, "ndim", 1) == 2:
         return _solve_batched(spec, op, b, x0=x0, tol=tol, maxiter=maxiter,
@@ -294,10 +356,15 @@ def _solve_batched_vmap(spec: MethodSpec, A: LinearOperator, B, *, x0, tol,
     Bj = jnp.asarray(B)
     if tol and tol < 100 * jnp.finfo(Bj.dtype).eps:
         import warnings
+
+        # attribute the warning to the caller of solve(), not to a frame
+        # inside this module: count the contiguous run of engine frames
+        # above us instead of hard-coding the internal call-chain depth
         warnings.warn(
             f"tol={tol:g} is below ~100*eps of the batched engine dtype "
             f"{Bj.dtype}; lanes will hit maxiter instead of converging -- "
-            "enable jax_enable_x64 or relax tol", stacklevel=4)
+            "enable jax_enable_x64 or relax tol",
+            stacklevel=_stacklevel_outside_engine())
     X0 = jnp.zeros_like(Bj) if x0 is None else jnp.asarray(x0)
     fn = _batched_engine(spec.name, A.matvec, l, maxiter + l + 1, sig, tol,
                          M, exploit_symmetry, unroll, backend,

@@ -32,6 +32,7 @@ from typing import Callable, NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .solver_cache import WeakCallableCache, weakly_callable
 from .solver_cache import clear_solver_cache  # noqa: F401  (re-export)
@@ -85,6 +86,7 @@ def plcg_scan(
     unroll: int = 1,
     backend: Optional[str] = None,
     stencil_hw: Optional[tuple] = None,
+    k_budget: Optional[jax.Array] = None,
 ) -> PLCGOut:
     """Run ``iters`` bodies of p(l)-CG (solution index reaches iters-l-1).
 
@@ -92,6 +94,12 @@ def plcg_scan(
     under jit / inside shard_map.  ``reduce_scalars(payload)`` performs the
     global sum of a stacked scalar payload (identity on a single device,
     ``psum`` in the distributed runtime) -- exactly one call per iteration.
+
+    ``k_budget`` (optional, may be a traced scalar) freezes the state --
+    without setting ``converged`` or ``breakdown`` -- once that many
+    solution updates have been committed: restart drivers with a global
+    iteration budget pass the *remaining* budget per sweep instead of
+    recompiling a differently-sized scan.
 
     ``backend`` selects the implementation of the iteration hot path:
 
@@ -250,11 +258,14 @@ def plcg_scan(
         inflight2 = jnp.concatenate([st.inflight[1:], payload[None]], axis=0)
         conv_now = ((i >= l) & jnp.logical_not(st.done) & jnp.logical_not(brk)
                     & (jnp.abs(zeta2) <= tol * bnorm))
+        # budget freeze: k2 + 1 updates are committed after this body
+        spent = (jnp.asarray(False) if k_budget is None
+                 else k2 + 1 >= k_budget)
         commit = jnp.logical_not(st.done | brk)
         new = PLCGState(
             Zw=Zw2, Vw=Vw2, Zhw=Zhw2, Gb=Gb2, gam=gam2, dlt=dlt2,
             inflight=inflight2, x=x2, p=p2, eta=eta2, zeta=zeta2,
-            k_done=k2, done=st.done | brk | conv_now,
+            k_done=k2, done=st.done | brk | conv_now | spent,
             converged=st.converged | conv_now,
             breakdown=st.breakdown | (brk & jnp.logical_not(st.done)),
         )
@@ -421,14 +432,20 @@ def _jitted_sweep(matvec, l, iters, sigma, tol, prec, exploit_symmetry,
     operator/settings compile once.  Keyed on ``matvec``/``prec`` object
     identity through weak references: reuse the same callable across calls
     to benefit (a fresh closure per call compiles, is cached until its
-    closure dies, then is evicted -- no unbounded retention)."""
+    closure dies, then is evicted -- no unbounded retention).
+
+    The returned callable takes ``(b, x0, k_budget)``: the budget is a
+    traced operand, so restart sweeps with shrinking budgets reuse the
+    one compiled program.
+    """
 
     def build():
-        return jax.jit(functools.partial(
+        fn = functools.partial(
             plcg_scan, weakly_callable(matvec), l=l, iters=iters,
             sigma=sigma, tol=tol, prec=weakly_callable(prec),
             exploit_symmetry=exploit_symmetry, unroll=unroll,
-            backend=backend, stencil_hw=stencil_hw))
+            backend=backend, stencil_hw=stencil_hw)
+        return jax.jit(lambda bb, xx, kb: fn(bb, xx, k_budget=kb))
 
     return _SWEEP_CACHE.get_or_build(
         (matvec, prec),
@@ -437,36 +454,33 @@ def _jitted_sweep(matvec, l, iters, sigma, tol, prec, exploit_symmetry,
         build)
 
 
-def plcg_solve(matvec, b, x0=None, *, l, sigma, tol=1e-8, maxiter=1000,
-               prec=None, exploit_symmetry: bool = True, max_restarts: int = 5,
-               unroll: int = 1, backend: Optional[str] = None,
-               stencil_hw: Optional[tuple] = None):
-    """Driver around the jitted engine: explicit restart on square-root
-    breakdown (paper Remark 8), happy-breakdown detection, restart budget.
+def run_restart_driver(sweep, b, x0, *, tol: float, maxiter: int,
+                       max_restarts: int, bnorm: float):
+    """Global-budget restart-on-breakdown loop (paper Remark 8), shared
+    by the single-device and mesh drivers.
 
-    Returns (x, resnorms, info dict).
+    ``sweep(b, x, remaining)`` runs one frozen-state sweep capped at
+    ``remaining`` solution updates and returns ``(x, resnorms,
+    converged, breakdown, k_done)``.  Every restart runs with the
+    *remaining* budget, so a breakdown-looping system performs at most
+    ``maxiter`` updates in total (not ``max_restarts x maxiter``);
+    happy breakdown at tolerance counts as convergence.  Returns
+    ``(x, resnorms list, info dict)``.
     """
-    x = jnp.zeros_like(b) if x0 is None else x0
-    bnorm = float(jnp.linalg.norm(b))
-    if bnorm == 0:
-        bnorm = 1.0
-    fn = _jitted_sweep(matvec, l, maxiter + l + 1, tuple(sigma), tol, prec,
-                       exploit_symmetry, unroll, backend, stencil_hw)
+    x = x0
     resnorms: list[float] = []
     restarts = breakdowns = 0
     total_k = 0
     converged = False
     while total_k < maxiter:
-        out = fn(b, x)
-        seg = [float(r) for r in out.resnorms if r > 0]
-        resnorms.extend(seg)
-        x = out.x
-        k = int(out.k_done) + 1
-        total_k += max(k, 1)
-        if bool(out.converged):
+        remaining = maxiter - total_k
+        x, resn, conv, brk, k_done = sweep(b, x, remaining)
+        resnorms.extend(float(r) for r in np.asarray(resn) if r > 0)
+        total_k += max(int(k_done) + 1, 1)
+        if bool(conv):
             converged = True
             break
-        if bool(out.breakdown):
+        if bool(brk):
             breakdowns += 1
             if resnorms and resnorms[-1] <= 4 * tol * bnorm:
                 converged = True          # happy breakdown at tolerance
@@ -480,3 +494,29 @@ def plcg_solve(matvec, b, x0=None, *, l, sigma, tol=1e-8, maxiter=1000,
         "converged": converged, "breakdowns": breakdowns,
         "restarts": restarts, "iterations": total_k,
     }
+
+
+def plcg_solve(matvec, b, x0=None, *, l, sigma, tol=1e-8, maxiter=1000,
+               prec=None, exploit_symmetry: bool = True, max_restarts: int = 5,
+               unroll: int = 1, backend: Optional[str] = None,
+               stencil_hw: Optional[tuple] = None):
+    """Driver around the jitted engine: explicit restart on square-root
+    breakdown (paper Remark 8), happy-breakdown detection, and a GLOBAL
+    iteration budget across restart sweeps (via the sweep's ``k_budget``
+    operand -- one compiled program regardless of restarts).
+
+    Returns (x, resnorms, info dict).
+    """
+    x0 = jnp.zeros_like(b) if x0 is None else x0
+    bnorm = float(jnp.linalg.norm(b))
+    if bnorm == 0:
+        bnorm = 1.0
+    fn = _jitted_sweep(matvec, l, maxiter + l + 1, tuple(sigma), tol, prec,
+                       exploit_symmetry, unroll, backend, stencil_hw)
+
+    def sweep(bb, xx, remaining):
+        out = fn(bb, xx, remaining)
+        return out.x, out.resnorms, out.converged, out.breakdown, out.k_done
+
+    return run_restart_driver(sweep, b, x0, tol=tol, maxiter=maxiter,
+                              max_restarts=max_restarts, bnorm=bnorm)

@@ -77,17 +77,50 @@ class WeakCallableCache:
     def __init__(self, maxsize: int = 16):
         self._maxsize = maxsize
         self._data: OrderedDict[tuple, Any] = OrderedDict()
+        self._dead: set = set()        # refs whose purge was deferred
+        self._mutating = False         # reentrancy guard for _on_death
         _REGISTRY.append(self)
 
     def __len__(self) -> int:
         return len(self._data)
 
     def clear(self) -> None:
-        self._data.clear()
+        # dropping the cached values can kill their last strong referents,
+        # firing _on_death REENTRANTLY inside OrderedDict.clear(); the
+        # guard makes those callbacks defer (everything is going away
+        # anyway) instead of iterating a dict in mid-mutation state
+        self._mutating = True
+        try:
+            self._data.clear()
+            self._dead.clear()
+        finally:
+            self._mutating = False
 
     def _on_death(self, dead_ref) -> None:
-        for key in [k for k in self._data if dead_ref in k[0]]:
-            self._data.pop(key, None)
+        """weakref callback: purge the dead referent's entries.
+
+        May fire while this cache is itself mutating (e.g. ``clear()``
+        drops the last reference to a cached sweep whose closure held the
+        last reference to the operator): iterating ``self._data`` then
+        raises (OrderedDict signals mutation-during-iteration with
+        ``KeyError``), so in that case the purge is deferred to the next
+        ``get_or_build``/``_purge_dead`` instead of touching the dict.
+        """
+        self._dead.add(dead_ref)
+        if not self._mutating:
+            self._purge_dead()
+
+    def _purge_dead(self) -> None:
+        self._mutating = True
+        try:
+            while self._dead:
+                dead_ref = self._dead.pop()
+                # reentrant callbacks during this scan/pop only append to
+                # self._dead (guard is set) and are drained by the loop
+                for key in [k for k in self._data if dead_ref in k[0]]:
+                    self._data.pop(key, None)
+        finally:
+            self._mutating = False
 
     def _key(self, callables, config) -> tuple:
         refs = []
@@ -103,12 +136,18 @@ class WeakCallableCache:
 
     def get_or_build(self, callables: tuple, config: tuple,
                      build: Callable[[], Any]) -> Any:
+        self._purge_dead()              # drain any deferred evictions
         key = self._key(callables, config)
         if key in self._data:
             self._data.move_to_end(key)
             return self._data[key]
         value = build()
-        self._data[key] = value
-        while len(self._data) > self._maxsize:
-            self._data.popitem(last=False)
+        self._mutating = True           # LRU eviction can fire callbacks
+        try:
+            self._data[key] = value
+            while len(self._data) > self._maxsize:
+                self._data.popitem(last=False)
+        finally:
+            self._mutating = False
+        self._purge_dead()
         return value

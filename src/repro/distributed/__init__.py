@@ -1,3 +1,22 @@
-from .plcg_dist import dist_plcg, dist_plcg_solve, dist_cg, DistPoisson
+"""Mesh execution layer of the unified solver engine.
 
-__all__ = ["dist_plcg", "dist_plcg_solve", "dist_cg", "DistPoisson"]
+There is no standalone distributed driver anymore: distributed solves go
+through the registry front-end, ``repro.core.solve(A, b, mesh=...)``
+(methods ``plcg`` / ``plcg_scan`` for the one-psum pipelined engine,
+``cg`` for the two-psum baseline).  This package exports the operator
+protocol plus the jittable sweep builders used for lowering, jaxpr
+introspection and benchmarking.
+"""
+from .operator import DistPoisson, DistributedOperator, as_dist_operator
+from .plcg_dist import (cg_mesh_sweep, mesh_methods, plcg_mesh_sweep,
+                        solve_on_mesh)
+
+__all__ = [
+    "DistPoisson",
+    "DistributedOperator",
+    "as_dist_operator",
+    "cg_mesh_sweep",
+    "mesh_methods",
+    "plcg_mesh_sweep",
+    "solve_on_mesh",
+]

@@ -1,204 +1,359 @@
-"""Distributed p(l)-CG on a 2-D processor grid (the paper's Sec. 5 setup,
-TPU-native).
+"""Mesh execution layer of the unified solver engine (paper Sec. 5 setup).
 
-Domain decomposition: the (nx, ny) Poisson grid is split into
-(nx/Px, ny/Py) local blocks over the ("data","model") mesh axes -- a 2-D
-decomposition (vs the paper's 1-D contiguous rows; strictly lower
-surface/volume, noted in DESIGN.md).  Per iteration:
+This module used to be a standalone distributed driver; it is now the
+layer ``repro.core.solve(A, b, mesh=...)`` dispatches onto.  Any
+:class:`~repro.distributed.operator.DistributedOperator` (or a
+``LinearOperator`` with a ``stencil2d`` hint, auto-promoted to
+:class:`DistPoisson`) runs a registry method on the mesh:
 
-  * SPMV: halo exchange with 4 ``ppermute``s (neighbor ICI traffic;
-    unpaired edges receive zeros == homogeneous Dirichlet) + the local
-    Pallas 5-point stencil kernel;
+  ============  =========================================================
+  ``plcg``      deep-pipelined p(l)-CG: ``jit(shard_map(vmap(plcg_scan)))``
+  ``plcg_scan`` alias of the same mesh engine (one scan engine everywhere)
+  ``cg``        classic CG baseline: TWO synchronous psums per iteration
+  ============  =========================================================
+
+Per iteration of the pipelined engine:
+
+  * SPMV: halo exchange (4 ``ppermute``; neighbor ICI traffic) + the
+    local Pallas 5-point stencil kernel;
   * dot products: local partials only; ONE fused ``psum`` of the stacked
     (2l+1)-scalar payload per iteration -- the paper's single
-    MPI_Iallreduce (Alg. 3 line 11);
+    ``MPI_Iallreduce`` (Alg. 3 line 11);
   * the psum result lands in the depth-l in-flight queue of
-    ``plcg_scan`` and is consumed l iterations later -- the MPI_Wait of
-    Alg. 3 line 5, giving XLA's scheduler l SPMVs of slack to hide the
-    reduction.
+    ``plcg_scan`` and is consumed l iterations later -- the ``MPI_Wait``
+    of Alg. 3 line 5, giving XLA's scheduler l SPMVs of slack to hide
+    the reduction.
 
-Everything runs inside one ``jax.shard_map`` region, so the lowered HLO
-exhibits exactly the collective schedule described in the paper.
+Batched multi-RHS: a ``(nrhs, nx, ny)`` right-hand side runs domain
+decomposition *inside* (``shard_map`` over the grid axes) and RHS
+batching *outside* (``vmap`` over lanes), so the per-iteration payload
+stacks to ``(nrhs, 2l+1)`` and the batched collective is STILL one psum
+-- all lanes' reductions ride one fused all-reduce, the strong-scaling
+multi-solve workload of arXiv:1905.06850.  Convergence is masked per
+lane by the scan engine's commit select, identically to the
+single-device batched path.
+
+The injected local-partial dots bypass every kernel ``backend`` tier
+(including ``"fused"``) by construction -- the distributed hot path is
+the halo-exchange stencil kernel plus the collective schedule, not the
+single-device megakernel.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Optional, Sequence
+import weakref
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+import numpy as np
+from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map_compat
-from repro.core.plcg_scan import plcg_scan
-from repro.kernels import ops as kops
+from repro.core import engine as _engine
+from repro.core.plcg_scan import plcg_scan, run_restart_driver
+from repro.core.results import SolveResult
+from repro.core.solver_cache import WeakCallableCache
+
+from .operator import DistributedOperator, as_dist_operator
+
+#: Jitted mesh sweeps, keyed weakly on the operator (dropping the operator
+#: releases the compiled shard_map program).
+_MESH_SWEEP_CACHE = WeakCallableCache(maxsize=16)
 
 
-@dataclasses.dataclass(frozen=True)
-class DistPoisson:
-    """Distributed 2-D Poisson operator bound to a mesh."""
-    nx: int
-    ny: int
-    mesh: Mesh
-    row_axis: str = "data"
-    col_axis: str = "model"
-
-    @property
-    def px(self) -> int:
-        return self.mesh.shape[self.row_axis]
-
-    @property
-    def py(self) -> int:
-        return self.mesh.shape[self.col_axis]
-
-    @property
-    def local_shape(self):
-        assert self.nx % self.px == 0 and self.ny % self.py == 0, (
-            "grid must divide the processor grid")
-        return (self.nx // self.px, self.ny // self.py)
-
-    def spec(self) -> P:
-        return P(self.row_axis, self.col_axis)
-
-    def matvec_local(self, xflat: jax.Array) -> jax.Array:
-        """Local SPMV with halo exchange; runs inside shard_map."""
-        H, W = self.local_shape
-        x = xflat.reshape(H, W)
-        ra, ca = self.row_axis, self.col_axis
-        fwd_r = [(i, i + 1) for i in range(self.px - 1)]
-        bwd_r = [(i + 1, i) for i in range(self.px - 1)]
-        fwd_c = [(i, i + 1) for i in range(self.py - 1)]
-        bwd_c = [(i + 1, i) for i in range(self.py - 1)]
-        # unpaired edges receive zeros (Dirichlet)
-        halo_n = jax.lax.ppermute(x[-1:, :], ra, fwd_r)[0]
-        halo_s = jax.lax.ppermute(x[:1, :], ra, bwd_r)[0]
-        halo_w = jax.lax.ppermute(x[:, -1:], ca, fwd_c)[:, 0]
-        halo_e = jax.lax.ppermute(x[:, :1], ca, bwd_c)[:, 0]
-        y = kops.stencil2d_apply(x, halo_n, halo_s, halo_w, halo_e)
-        return y.reshape(-1)
+def _batch_spec(spec: P) -> P:
+    """Prepend an unsharded lane axis to a field PartitionSpec."""
+    return P(*((None,) + tuple(spec)))
 
 
-def dist_plcg(op: DistPoisson, b_global: jax.Array, x0=None, *, l: int,
-              iters: int, sigma: Sequence[float], tol: float = 0.0,
-              exploit_symmetry: bool = True):
-    """Run the pipelined solver on the full mesh.
+def _shard_jit(op: DistributedOperator, one, *, batched: bool,
+               n_extra: int = 0, trace_event=None):
+    """Wrap a per-shard local body into the jitted shard_map program.
 
-    b_global: (nx, ny) right-hand side (sharded or shardable).
-    Returns (x (nx, ny) sharded, resnorms (iters,), converged, breakdown,
-    k_done).
-
-    The engine runs with injected local-partial dots and a single fused
-    psum per iteration, which bypasses every kernel ``backend`` tier
-    (including ``"fused"``) by construction -- the distributed hot path is
-    the halo-exchange stencil kernel plus the collective schedule, not the
-    single-device megakernel.
+    ``one(b_blk, x_blk, *extra)`` maps one local field block (plus
+    ``n_extra`` replicated scalar operands, e.g. an iteration budget) to
+    ``(x_blk, *4 replicated scalar outputs)``; with ``batched`` the RHS
+    lanes are vmapped OUTSIDE the domain decomposition (extras are
+    shared across lanes) and ``trace_event(shape)``, when given, logs a
+    compile event like the single-device batched engine.
     """
-    mesh = op.mesh
-    axes = (op.row_axis, op.col_axis)
+    spec = op.spec()
+    if batched:
+        def local_run(b_blk, x_blk, *extra):
+            if (trace_event is not None
+                    and len(_engine.BATCH_TRACE_EVENTS) < 4096):
+                _engine.BATCH_TRACE_EVENTS.append(
+                    trace_event(tuple(b_blk.shape)))
+            return jax.vmap(one, in_axes=(0, 0) + (None,) * n_extra)(
+                b_blk, x_blk, *extra)
+        io_spec = _batch_spec(spec)
+    else:
+        local_run, io_spec = one, spec
+    fn = shard_map_compat(
+        local_run, mesh=op.mesh,
+        in_specs=(io_spec, io_spec) + (P(),) * n_extra,
+        out_specs=(io_spec,) + (P(),) * 4,
+        check=False,
+    )
+    return jax.jit(fn)
 
-    def local_run(b_blk, x_blk):
-        bflat = b_blk.reshape(-1)
-        out = plcg_scan(
-            op.matvec_local, bflat, x_blk.reshape(-1),
-            l=l, iters=iters, sigma=tuple(sigma), tol=tol,
-            dot_local=lambda u, v: jnp.sum(u * v),
-            reduce_scalars=lambda p: jax.lax.psum(p, axes),
-            exploit_symmetry=exploit_symmetry,
+
+def plcg_mesh_sweep(op: DistributedOperator, *, l: int, iters: int,
+                    sigma: Sequence[float], tol: float = 0.0,
+                    exploit_symmetry: bool = True, batched: bool = False):
+    """Build (cached) the jitted p(l)-CG mesh sweep.
+
+    Returns a jitted callable ``(b, x0, k_budget) -> (x, resnorms,
+    converged, breakdown, k_done)`` where ``b``/``x0`` are global fields
+    of shape ``op.global_shape`` (``(nrhs, *global_shape)`` when
+    ``batched``) and ``k_budget`` is the (traced) solution-update budget
+    -- the restart driver passes the *remaining* global budget per sweep
+    so every sweep reuses ONE compiled program.  The traced program
+    contains exactly ONE ``psum`` in its scan body -- the structural
+    acceptance gate verified by
+    ``repro.kernels.introspect.count_primitive_in_scan_bodies``.
+    """
+    sig = tuple(sigma)
+
+    def build():
+        # the cached jitted program must not pin the operator (the cache
+        # key holds it weakly and evicts on death): trace through a weak
+        # proxy, like the single-device sweep's weakly_callable closures
+        opref = weakref.proxy(op)
+
+        def one(b_blk, x_blk, k_budget):
+            out = plcg_scan(
+                opref.matvec_local, b_blk.reshape(-1), x_blk.reshape(-1),
+                l=l, iters=iters, sigma=sig, tol=tol,
+                dot_local=opref.dot_local,
+                reduce_scalars=opref.reduce_scalars,
+                exploit_symmetry=exploit_symmetry, k_budget=k_budget,
+            )
+            return (out.x.reshape(b_blk.shape), out.resnorms, out.converged,
+                    out.breakdown, out.k_done)
+
+        return _shard_jit(op, one, batched=batched, n_extra=1,
+                          trace_event=lambda shape: ("plcg@mesh", shape, l))
+
+    return _MESH_SWEEP_CACHE.get_or_build(
+        (op,), ("plcg", l, iters, sig, tol, exploit_symmetry, batched),
+        build)
+
+
+def cg_mesh_sweep(op: DistributedOperator, *, iters: int, tol: float = 0.0,
+                  batched: bool = False):
+    """Build (cached) the jitted classic-CG mesh sweep (the two-psum
+    baseline for the strong-scaling comparisons, paper Figs. 3-5).
+
+    Same ``x0``/early-stop contract as the pipelined sweep: the initial
+    guess seeds ``r0 = b - A x0``, converged state freezes through the
+    ``done`` select, and the committed-update count ``k_done`` is
+    reported.  Returns a jitted callable ``(b, x0) -> (x, resnorms,
+    resnorm0, converged, k_done)``.
+    """
+
+    def build():
+        opref = weakref.proxy(op)       # see plcg_mesh_sweep
+
+        def one(b_blk, x_blk):
+            bflat = b_blk.reshape(-1)
+            bnorm2 = opref.reduce_scalars(opref.dot_local(bflat, bflat))
+            bnorm2 = jnp.where(bnorm2 == 0, 1.0, bnorm2)
+            r0 = bflat - opref.matvec_local(x_blk.reshape(-1))
+            gamma0 = opref.reduce_scalars(opref.dot_local(r0, r0))
+            done0 = gamma0 <= (tol ** 2) * bnorm2
+
+            def body(st, _):
+                x, r, p, gamma, k, done = st
+                s = opref.matvec_local(p)
+                sp = opref.reduce_scalars(
+                    opref.dot_local(s, p))                  # sync psum 1
+                alpha = gamma / sp
+                x2 = x + alpha * p
+                r2 = r - alpha * s
+                gamma2 = opref.reduce_scalars(
+                    opref.dot_local(r2, r2))                # sync psum 2
+                beta = gamma2 / gamma
+                p2 = r2 + beta * p
+                conv = gamma2 <= (tol ** 2) * bnorm2
+                new = (x2, r2, p2, gamma2, k + 1, done | conv)
+                out = jax.tree.map(lambda a, o: jnp.where(done, o, a),
+                                   new, st)
+                return out, jnp.sqrt(jnp.where(done, gamma, gamma2))
+
+            st0 = (x_blk.reshape(-1), r0, r0, gamma0, jnp.asarray(0), done0)
+            st, resn = jax.lax.scan(body, st0, jnp.arange(iters))
+            return (st[0].reshape(b_blk.shape), resn, jnp.sqrt(gamma0),
+                    st[5], st[4])
+
+        return _shard_jit(op, one, batched=batched)
+
+    return _MESH_SWEEP_CACHE.get_or_build(
+        (op,), ("cg", iters, tol, batched), build)
+
+
+# --------------------------------------------------------------------------
+# front-end dispatch (called by repro.core.solve when mesh= is given)
+# --------------------------------------------------------------------------
+
+def _canonicalize_b(op: DistributedOperator, b, x0):
+    """Reshape flat inputs to the operator's global field shape.
+
+    Accepts ``global_shape``, ``(nrhs, *global_shape)``, flat ``(n,)`` and
+    stacked-flat ``(nrhs, n)``.  Returns (b, x0, batched, orig_shape).
+    """
+    gshape = tuple(op.global_shape)
+    n = int(np.prod(gshape))
+    b = jnp.asarray(b)
+    orig_shape = b.shape
+    if b.shape == (n,):
+        b = b.reshape(gshape)
+    elif b.ndim == 2 and b.shape[-1] == n and b.shape != gshape:
+        b = b.reshape((b.shape[0],) + gshape)
+    batched = b.ndim == len(gshape) + 1 and b.shape[1:] == gshape
+    if not batched and b.shape != gshape:
+        raise ValueError(
+            f"b of shape {orig_shape} does not match the operator's global "
+            f"field {gshape} (or (nrhs, *{gshape}) / flat ({n},))")
+    x0 = jnp.zeros_like(b) if x0 is None else jnp.asarray(x0).reshape(b.shape)
+    return b, x0, batched, orig_shape
+
+
+def _mesh_plcg(op, b, x0, *, tol, maxiter, l, sigma,
+               exploit_symmetry: bool = True,
+               max_restarts=None) -> SolveResult:
+    b, x0, batched, orig_shape = _canonicalize_b(op, b, x0)
+    sig = tuple(sigma)
+    base_info = {"l": l, "sigma": list(sig), "backend": None,
+                 "mesh": dict(op.mesh.shape), "psums_per_iter": 1}
+
+    if batched:
+        if max_restarts is not None:
+            # mirror the single-device batched engine: don't silently
+            # drop a flag the caller believes is active
+            raise ValueError(
+                "options ['max_restarts'] are not supported by the "
+                "batched mesh engine (no data-dependent restarts; solve "
+                "each RHS individually for restart control)")
+        # one sweep, per-lane convergence masking inside the scan (no
+        # data-dependent restarts; mirrors the single-device batched
+        # path, so the budget is the non-binding maxiter + 1)
+        fn = plcg_mesh_sweep(op, l=l, iters=maxiter + l + 1, sigma=sig,
+                             tol=tol, exploit_symmetry=exploit_symmetry,
+                             batched=True)
+        out = fn(b, x0, maxiter + 1)
+        x, resn, conv, brk, k_done = out
+        resn = np.asarray(resn)                         # (nrhs, iters)
+        conv = np.asarray(conv)
+        brk = np.asarray(brk)
+        k_done = np.asarray(k_done)
+        return SolveResult(
+            x=x.reshape(orig_shape),
+            # lane j commits |zeta_k| for k = 0..k_done[j] at trace indices
+            # l..l+k_done[j] (count-sliced, same as the vmap engine)
+            resnorms=[[float(r) for r in row[l: l + int(k) + 1]]
+                      for row, k in zip(resn, k_done)],
+            iters=int(k_done.max()) + 1,
+            converged=bool(conv.all()),
+            breakdowns=int(brk.sum()),
+            info={**base_info, "method": f"p({l})-CG[scan,mesh+vmap]",
+                  "batched": "shard_map+vmap", "nrhs": int(b.shape[0]),
+                  "per_rhs_converged": conv,
+                  "per_rhs_iters": k_done + 1,
+                  "per_rhs_breakdown": brk},
         )
-        return (out.x.reshape(b_blk.shape), out.resnorms, out.converged,
-                out.breakdown, out.k_done)
 
-    fn = shard_map_compat(
-        local_run, mesh=mesh,
-        in_specs=(op.spec(), op.spec()),
-        out_specs=(op.spec(), P(), P(), P(), P()),
-        check=False,
+    # single RHS: the SAME global-budget restart-on-breakdown driver as
+    # the single-device plcg_solve (run_restart_driver), fed the mesh
+    # sweep -- the budget is a traced operand of ONE fixed-size compiled
+    # program, so restarts never retrace/recompile the shard_map sweep.
+    fn = plcg_mesh_sweep(op, l=l, iters=maxiter + l, sigma=sig,
+                         tol=tol, exploit_symmetry=exploit_symmetry)
+    x, resnorms, info = run_restart_driver(
+        fn, b, x0, tol=tol, maxiter=maxiter,
+        max_restarts=5 if max_restarts is None else max_restarts,
+        bnorm=float(jnp.linalg.norm(b)) or 1.0)
+    return SolveResult(
+        x=x.reshape(orig_shape), resnorms=resnorms,
+        iters=info["iterations"], converged=info["converged"],
+        breakdowns=info["breakdowns"], restarts=info["restarts"],
+        info={**base_info, "method": f"p({l})-CG[scan,mesh]"},
     )
-    if x0 is None:
-        x0 = jnp.zeros_like(b_global)
-    return jax.jit(fn)(b_global, x0)
 
 
-def dist_plcg_solve(op: DistPoisson, b_global: jax.Array, *, l: int,
-                    sigma: Sequence[float], tol: float = 1e-8,
-                    maxiter: int = 2000, max_restarts: int = 5):
-    """Driver with explicit restart on square-root breakdown (Remark 8).
+def _mesh_cg(op, b, x0, *, tol, maxiter) -> SolveResult:
+    b, x0, batched, orig_shape = _canonicalize_b(op, b, x0)
+    fn = cg_mesh_sweep(op, iters=maxiter, tol=tol, batched=batched)
+    x, resn, resn0, conv, k_done = fn(b, x0)
+    base_info = {"method": "cg[mesh]", "mesh": dict(op.mesh.shape),
+                 "psums_per_iter": 2}
+    if batched:
+        resn = np.asarray(resn)
+        resn0 = np.asarray(resn0)
+        conv = np.asarray(conv)
+        k_done = np.asarray(k_done)
+        return SolveResult(
+            x=x.reshape(orig_shape),
+            resnorms=[[float(r0)] + [float(r) for r in row[:int(k)]]
+                      for row, r0, k in zip(resn, resn0, k_done)],
+            iters=int(k_done.max()), converged=bool(conv.all()),
+            info={**base_info, "batched": "shard_map+vmap",
+                  "nrhs": int(b.shape[0]),
+                  "per_rhs_converged": conv, "per_rhs_iters": k_done},
+        )
+    k = int(k_done)
+    return SolveResult(
+        x=x.reshape(orig_shape),
+        resnorms=[float(resn0)] + [float(r) for r in np.asarray(resn)[:k]],
+        iters=k, converged=bool(conv), info=base_info,
+    )
 
-    The iteration budget is global: every restart sweep runs with the
-    *remaining* budget (``maxiter`` minus iterations already spent), so a
-    breakdown-looping system performs at most ``maxiter`` solution updates
-    in total rather than ``max_restarts * maxiter``.  Mirrors the
-    single-device ``plcg_solve`` contract, including ``iterations`` /
-    ``breakdowns`` in the info dict.
+
+#: method name -> mesh adapter; every other registry method raises.
+_MESH_METHODS = {
+    "cg": _mesh_cg,
+    "plcg": _mesh_plcg,
+    "plcg_scan": _mesh_plcg,
+}
+
+
+def mesh_methods() -> tuple:
+    """Registry methods with a mesh-aware execution path."""
+    return tuple(sorted(_MESH_METHODS))
+
+
+def solve_on_mesh(spec, A, b, *, mesh, x0, tol, maxiter, M, l, sigma,
+                  spectrum, backend, **options) -> SolveResult:
+    """Mesh-aware dispatch behind ``repro.core.solve(..., mesh=...)``.
+
+    ``A`` is coerced through :func:`as_dist_operator`; the method comes
+    from the same registry as the single-device path.  ``backend`` is
+    ignored here: the injected local-partial dots bypass every kernel
+    tier by construction (the hot path is the halo-exchange stencil plus
+    the collective schedule).
     """
-    import numpy as np
-    x = jnp.zeros_like(b_global)
-    all_res: list = []
-    restarts = breakdowns = 0
-    total_k = 0
-    converged = False
-    while total_k < maxiter:
-        remaining = maxiter - total_k
-        # iters bodies perform exactly iters - l solution updates, so the
-        # sweep can never overrun the remaining budget
-        x, resn, conv, brk, k_done = dist_plcg(
-            op, b_global, x, l=l, iters=remaining + l, sigma=sigma,
-            tol=tol)
-        all_res.extend([float(r) for r in np.asarray(resn) if r > 0])
-        total_k += max(int(k_done) + 1, 1)
-        if bool(conv):
-            converged = True
-            break
-        if bool(brk):
-            breakdowns += 1
-            if restarts >= max_restarts:
-                break
-            restarts += 1
-            continue
-        break                             # iteration budget exhausted
-    return x, all_res, {"converged": converged, "restarts": restarts,
-                        "breakdowns": breakdowns, "iterations": total_k}
-
-
-def dist_cg(op: DistPoisson, b_global: jax.Array, *, iters: int,
-            tol: float = 0.0):
-    """Distributed classic CG baseline: TWO synchronous psums per iteration
-    (gamma and the step dot), each consumed immediately -- zero overlap.
-    Used for the strong-scaling comparisons (paper Figs. 3-5)."""
-    mesh = op.mesh
-    axes = (op.row_axis, op.col_axis)
-
-    def local_run(b_blk):
-        bflat = b_blk.reshape(-1)
-        bnorm2 = jax.lax.psum(jnp.sum(bflat * bflat), axes)
-
-        def body(st, _):
-            x, r, p, gamma, done = st
-            s = op.matvec_local(p)
-            sp = jax.lax.psum(jnp.sum(s * p), axes)      # sync reduction 1
-            alpha = gamma / sp
-            x2 = x + alpha * p
-            r2 = r - alpha * s
-            gamma2 = jax.lax.psum(jnp.sum(r2 * r2), axes)  # sync reduction 2
-            beta = gamma2 / gamma
-            p2 = r2 + beta * p
-            conv = gamma2 <= (tol ** 2) * bnorm2
-            new = (x2, r2, p2, gamma2, done | conv)
-            out = jax.tree.map(lambda a, o: jnp.where(done, o, a), new, st)
-            return out, jnp.sqrt(jnp.where(done, gamma, gamma2))
-
-        x0 = jnp.zeros_like(bflat)
-        gamma0 = bnorm2
-        st, resn = jax.lax.scan(
-            body, (x0, bflat, bflat, gamma0, jnp.asarray(False)),
-            jnp.arange(iters))
-        return st[0].reshape(b_blk.shape), resn, st[4]
-
-    fn = shard_map_compat(
-        local_run, mesh=mesh,
-        in_specs=(op.spec(),),
-        out_specs=(op.spec(), P(), P()),
-        check=False,
-    )
-    return jax.jit(fn)(b_global)
+    if spec.name not in _MESH_METHODS:
+        raise ValueError(
+            f"method {spec.name!r} has no mesh-aware execution path; "
+            f"methods available on a mesh: {', '.join(mesh_methods())}")
+    if M is not None:
+        raise ValueError(
+            "mesh-aware dispatch does not support preconditioning yet "
+            "(M must be applied shard-locally; see ROADMAP)")
+    op = as_dist_operator(A, mesh)
+    if spec.name == "cg":
+        # same contract as the single-device cg adapter: l/sigma/spectrum
+        # are pipelined-method knobs and are ignored (not validated)
+        if options:
+            raise ValueError(
+                f"options {sorted(options)} are not supported by the "
+                "mesh-aware cg path")
+        return _mesh_cg(op, b, x0, tol=tol, maxiter=maxiter)
+    allowed = {"exploit_symmetry", "max_restarts"}
+    if set(options) - allowed:
+        raise ValueError(
+            f"options {sorted(set(options) - allowed)} are not supported "
+            f"by the mesh-aware {spec.name} path")
+    sig = tuple(_engine._resolve_sigma(sigma, spectrum, l))
+    return _MESH_METHODS[spec.name](op, b, x0, tol=tol, maxiter=maxiter,
+                                    l=l, sigma=sig, **options)

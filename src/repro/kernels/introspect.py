@@ -1,10 +1,17 @@
-"""Jaxpr introspection: count Pallas kernel launches in a traced function.
+"""Jaxpr introspection: count primitive equations in a traced function.
 
-The fused-iteration acceptance gate is structural, not wall-clock (CPU
-interpret-mode timings are not probative of TPU launch overhead): the
-``backend="fused"`` scan body must contain exactly ONE ``pallas_call``
-equation where the ``backend="pallas"`` tier has one per hot-path kernel.
-Counting equations in the traced jaxpr verifies that without running
+The structural acceptance gates of this repo are counted, not timed (CPU
+interpret-mode timings are not probative of TPU launch overhead or of
+collective latency):
+
+* the ``backend="fused"`` scan body must contain exactly ONE
+  ``pallas_call`` equation where the ``backend="pallas"`` tier has one
+  per hot-path kernel (:func:`count_pallas_calls`);
+* the mesh engine's scan body must contain exactly ONE ``psum`` for the
+  stacked (nrhs, 2l+1) payload, vs TWO for the classic-CG baseline
+  (:func:`count_primitive_in_scan_bodies` with ``"psum"``).
+
+Counting equations in the traced jaxpr verifies both without running
 anything.
 """
 from __future__ import annotations
@@ -12,24 +19,54 @@ from __future__ import annotations
 import jax
 
 
-def count_pallas_calls(fn, *args, **kwargs) -> int:
-    """Number of ``pallas_call`` equations anywhere in ``fn``'s jaxpr
+def count_primitive(fn, primitive: str, *args, **kwargs) -> int:
+    """Number of ``primitive`` equations anywhere in ``fn``'s jaxpr
     (recursing into scan/cond/jit sub-jaxprs; cond counts every branch)."""
     closed = jax.make_jaxpr(fn)(*args, **kwargs)
-    return _count(closed.jaxpr, set())
+    return _count(closed.jaxpr, primitive, set())
 
 
-def _count(jaxpr, seen: set) -> int:
+def count_pallas_calls(fn, *args, **kwargs) -> int:
+    """Number of ``pallas_call`` equations anywhere in ``fn``'s jaxpr."""
+    return count_primitive(fn, "pallas_call", *args, **kwargs)
+
+
+def count_primitive_in_scan_bodies(fn, primitive: str, *args,
+                                   **kwargs) -> list[int]:
+    """Per-``lax.scan``-body counts of ``primitive`` equations.
+
+    One entry per scan equation reachable from ``fn``'s jaxpr, in
+    traversal order -- i.e. the per-*iteration* cost of each loop.  For
+    the mesh solver sweeps (one scan) this returns ``[psums_per_iter]``.
+    """
+    closed = jax.make_jaxpr(fn)(*args, **kwargs)
+    bodies: list = []
+    _collect_scan_bodies(closed.jaxpr, bodies, set())
+    return [_count(b, primitive, set()) for b in bodies]
+
+
+def _count(jaxpr, primitive: str, seen: set) -> int:
     if id(jaxpr) in seen:       # guard against shared sub-jaxprs
         return 0
     seen.add(id(jaxpr))
     total = 0
     for eqn in jaxpr.eqns:
-        if eqn.primitive.name == "pallas_call":
+        if eqn.primitive.name == primitive:
             total += 1
         for sub in _sub_jaxprs(eqn.params):
-            total += _count(sub, seen)
+            total += _count(sub, primitive, seen)
     return total
+
+
+def _collect_scan_bodies(jaxpr, out: list, seen: set) -> None:
+    if id(jaxpr) in seen:
+        return
+    seen.add(id(jaxpr))
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "scan":
+            out.append(eqn.params["jaxpr"].jaxpr)
+        for sub in _sub_jaxprs(eqn.params):
+            _collect_scan_bodies(sub, out, seen)
 
 
 def _sub_jaxprs(obj):

@@ -17,16 +17,52 @@ import jax.numpy as jnp
 from . import ref
 from .fused_body import N_FIXED_SCALARS, fused_body
 from .multidot import multidot
-from .stencil2d import stencil2d
+from .stencil2d import stencil2d, stencil2d_batched
 from .window_axpy import window_axpy
+
+
+def _bcast_unbatched(axis_size, in_batched, args):
+    """custom_vmap helper: lift unbatched operands to the lane axis."""
+    return tuple(
+        a if b else jnp.broadcast_to(a, (axis_size,) + jnp.shape(a))
+        for a, b in zip(args, in_batched))
+
+
+# The halo stencil carries an explicit lane-batched variant: under
+# ``jax.vmap`` (the mesh engine's multi-RHS path, vmap INSIDE shard_map)
+# the SPMV over all RHS lanes must stay ONE launch streaming (B, bh, W)
+# bricks, rather than relying on the generic pallas batching rule.  The
+# custom_vmap wrappers below install ``stencil2d_batched`` (and its jnp
+# oracle) as that rule.
+
+@jax.custom_batching.custom_vmap
+def _stencil2d_pallas(x, hn, hs, hw, he):
+    return stencil2d(x, hn, hs, hw, he)
+
+
+@_stencil2d_pallas.def_vmap
+def _stencil2d_pallas_vmap(axis_size, in_batched, x, hn, hs, hw, he):
+    args = _bcast_unbatched(axis_size, in_batched, (x, hn, hs, hw, he))
+    return stencil2d_batched(*args), True
+
+
+@jax.custom_batching.custom_vmap
+def _stencil2d_ref(x, hn, hs, hw, he):
+    return ref.stencil2d_ref(x, hn, hs, hw, he)
+
+
+@_stencil2d_ref.def_vmap
+def _stencil2d_ref_vmap(axis_size, in_batched, x, hn, hs, hw, he):
+    args = _bcast_unbatched(axis_size, in_batched, (x, hn, hs, hw, he))
+    return ref.stencil2d_batched_ref(*args), True
 
 
 def stencil2d_apply(x, halo_n, halo_s, halo_w, halo_e, *, use_pallas=None):
     if use_pallas is None:
         use_pallas = jax.default_backend() == "tpu"
     if use_pallas:
-        return stencil2d(x, halo_n, halo_s, halo_w, halo_e)
-    return ref.stencil2d_ref(x, halo_n, halo_s, halo_w, halo_e)
+        return _stencil2d_pallas(x, halo_n, halo_s, halo_w, halo_e)
+    return _stencil2d_ref(x, halo_n, halo_s, halo_w, halo_e)
 
 
 def multidot_apply(W, z, *, use_pallas=None):

@@ -18,6 +18,19 @@ def stencil2d_ref(x, halo_n, halo_s, halo_w, halo_e):
     return 4.0 * x - up - down - left - right
 
 
+def stencil2d_batched_ref(x, halo_n, halo_s, halo_w, halo_e):
+    """Batched (B, H, W) oracle of ``stencil2d_batched`` (lane-leading)."""
+    hn = halo_n[:, None, :].astype(x.dtype)
+    hs = halo_s[:, None, :].astype(x.dtype)
+    hw = halo_w[:, :, None].astype(x.dtype)
+    he = halo_e[:, :, None].astype(x.dtype)
+    up = jnp.concatenate([hn, x[:, :-1, :]], axis=1)
+    down = jnp.concatenate([x[:, 1:, :], hs], axis=1)
+    left = jnp.concatenate([hw, x[:, :, :-1]], axis=2)
+    right = jnp.concatenate([x[:, :, 1:], he], axis=2)
+    return 4.0 * x - up - down - left - right
+
+
 def multidot_ref(W, z):
     """out (m,) = W.T @ z for lane-major W (n, m)."""
     acc = jnp.promote_types(W.dtype, jnp.float32)

@@ -9,6 +9,15 @@ TPU mapping: the grid tiles the local block over rows; each step holds a
 (bh, W) tile in VMEM plus its row-neighbors, so vertical neighbor access
 never leaves VMEM.  W should be a multiple of 128 (lane width); bh a
 multiple of 8 (f32 sublanes).
+
+``stencil2d_batched`` is the multi-RHS variant: the B lanes of a
+``(B, H, W)`` batch ride the leading block axis (the same lane-leading
+layout as the ``(B, n, window)`` batched scan-engine kernels), so the
+local SPMV over ALL right-hand sides is ONE ``pallas_call`` whose grid
+still only tiles rows -- each grid step streams a ``(B, bh, W)`` brick.
+``repro.kernels.ops`` installs it as the ``jax.vmap`` rule of the
+single-lane kernel (``custom_vmap``), which is how the mesh engine's
+``shard_map(vmap(plcg_scan))`` path lowers its halo SPMV to one launch.
 """
 from __future__ import annotations
 
@@ -66,5 +75,59 @@ def stencil2d(x, halo_n, halo_s, halo_w, halo_e, *, bh: int = 256,
         ],
         out_specs=pl.BlockSpec((bh, W), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((H, W), dtype),
+        interpret=interpret,
+    )(x, x, x, hn, hs, hw, he)
+
+
+def _kernel_batched(nblocks, xp_ref, xc_ref, xn_ref, hn_ref, hs_ref, hw_ref,
+                    he_ref, o_ref):
+    i = pl.program_id(0)
+    xc = xc_ref[...]                                        # (B, bh, W)
+    top_halo = jnp.where(i == 0, hn_ref[...], xp_ref[:, -1:, :])
+    bot_halo = jnp.where(i == nblocks - 1, hs_ref[...], xn_ref[:, :1, :])
+    up = jnp.concatenate([top_halo, xc[:, :-1, :]], axis=1)
+    down = jnp.concatenate([xc[:, 1:, :], bot_halo], axis=1)
+    left = jnp.concatenate([hw_ref[...], xc[:, :, :-1]], axis=2)
+    right = jnp.concatenate([xc[:, :, 1:], he_ref[...]], axis=2)
+    o_ref[...] = 4.0 * xc - up - down - left - right
+
+
+@functools.partial(jax.jit, static_argnames=("bh", "interpret"))
+def stencil2d_batched(x, halo_n, halo_s, halo_w, halo_e, *, bh: int = 256,
+                      interpret: bool | None = None):
+    """y = A_local x for all B lanes in ONE launch.
+
+    x: (B, H, W) lane-leading local batch; halo_n/halo_s: (B, W);
+    halo_w/halo_e: (B, H).  Grid and VMEM tiling are identical to the
+    single-lane kernel -- lanes only widen each block to (B, bh, W).
+    """
+    B, H, W = x.shape
+    bh = min(bh, H)
+    while H % bh:
+        bh //= 2
+    nblocks = H // bh
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    dtype = x.dtype
+    hn = halo_n.reshape(B, 1, W).astype(dtype)
+    hs = halo_s.reshape(B, 1, W).astype(dtype)
+    hw = halo_w.reshape(B, H, 1).astype(dtype)
+    he = halo_e.reshape(B, H, 1).astype(dtype)
+    kernel = functools.partial(_kernel_batched, nblocks)
+    return pl.pallas_call(
+        kernel,
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec((B, bh, W), lambda i: (0, jnp.maximum(i - 1, 0), 0)),
+            pl.BlockSpec((B, bh, W), lambda i: (0, i, 0)),
+            pl.BlockSpec((B, bh, W),
+                         lambda i: (0, jnp.minimum(i + 1, nblocks - 1), 0)),
+            pl.BlockSpec((B, 1, W), lambda i: (0, 0, 0)),
+            pl.BlockSpec((B, 1, W), lambda i: (0, 0, 0)),
+            pl.BlockSpec((B, bh, 1), lambda i: (0, i, 0)),
+            pl.BlockSpec((B, bh, 1), lambda i: (0, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((B, bh, W), lambda i: (0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, W), dtype),
         interpret=interpret,
     )(x, x, x, hn, hs, hw, he)

@@ -35,5 +35,32 @@ def make_mesh_for(devices: int, model_parallel: int = 1, pods: int = 1):
 def make_solver_mesh(*, multi_pod: bool = False):
     """Flat 2-D processor grid for the distributed p(l)-CG solver: the
     Poisson domain is decomposed over ("data","model") as a (16,16) (or
-    (32,16) across pods) grid of subdomains."""
-    return make_production_mesh(multi_pod=multi_pod)
+    (32,16) across pods) grid of subdomains.  Pass the result straight to
+    ``repro.core.solve(A, b, mesh=...)``."""
+    if multi_pod:
+        # fold the pod axis into rows: the solver engine wants a flat
+        # 2-axis grid (32 x 16 subdomains)
+        return make_mesh_compat((32, 16), ("data", "model"))
+    return make_production_mesh(multi_pod=False)
+
+
+def make_solver_mesh_for(devices: int, ny: int | None = None,
+                         nx: int | None = None):
+    """Flat 2-D solver processor grid for an arbitrary device count.
+
+    The column axis gets the largest power of two whose square fits in
+    ``devices`` and that divides ``ny``; the remaining devices become
+    rows, trimmed until they divide ``nx`` -- so the decomposition in
+    ``solve(..., mesh=...)`` is legal on an (nx, ny) grid whenever both
+    extents are passed.  Device counts that don't factor cleanly use the
+    largest legal subset (e.g. 4 of 5 devices).  This is the mesh the
+    launchers hand to the mesh-aware front-end.
+    """
+    mp = 1
+    while mp * mp <= devices and (ny is None or ny % mp == 0):
+        mp *= 2
+    mp = max(mp // 2, 1)
+    rows = max(devices // mp, 1)
+    while rows > 1 and nx is not None and nx % rows:
+        rows -= 1
+    return make_mesh_compat((rows, mp), ("data", "model"))

@@ -1,8 +1,10 @@
 """Solver launcher: the paper's own workload -- p(l)-CG Poisson solves.
 
-Single device the solve goes through the unified ``repro.core.solve``
-front-end (any registered --method, incl. batched --nrhs > 1); with
-multiple devices it runs the distributed shard_map engine.
+Every path goes through the unified ``repro.core.solve`` front-end: on a
+single device it dispatches any registered --method (incl. batched
+--nrhs > 1); with multiple devices it passes ``mesh=`` so the same call
+runs the mesh execution layer (shard_map domain decomposition inside,
+vmap RHS batching outside, one fused psum per iteration).
 
   PYTHONPATH=src python -m repro.launch.solve --nx 200 --l 2 --tol 1e-5
   PYTHONPATH=src python -m repro.launch.solve --method plcg_scan --nrhs 8
@@ -24,16 +26,18 @@ def main(argv=None):
     ap.add_argument("--iters", type=int, default=1500)
     ap.add_argument("--tol", type=float, default=1e-5)
     ap.add_argument("--method", type=str, default="plcg_scan",
-                    help="registered repro.core.solve method for the "
-                    "single-device path (cg|pcg|plcg|plcg_scan|dlanczos|"
-                    "plminres)")
+                    help="registered repro.core.solve method (single device: "
+                    "cg|pcg|plcg|plcg_scan|dlanczos|plminres; on a mesh: "
+                    "cg|plcg|plcg_scan)")
     ap.add_argument("--nrhs", type=int, default=1,
                     help="number of right-hand sides; > 1 runs the batched "
-                    "vmap(scan) multi-RHS engine")
+                    "multi-RHS engine (vmap(scan) on one device, "
+                    "shard_map(vmap(scan)) on a mesh)")
     ap.add_argument("--backend", type=str, default=None,
-                    help="scan-engine kernel backend: fused|pallas|ref|auto")
+                    help="scan-engine kernel backend: fused|pallas|ref|auto "
+                    "(single-device only; the mesh path bypasses it)")
     ap.add_argument("--dryrun", action="store_true",
-                    help="lower+compile on the production 16x16 (or 2x16x16 "
+                    help="lower+compile on the production 16x16 (or 32x16 "
                     "with --multi-pod) mesh and report roofline terms")
     ap.add_argument("--multi-pod", action="store_true")
     args = ap.parse_args(argv)
@@ -45,31 +49,25 @@ def main(argv=None):
     import jax.numpy as jnp
     import numpy as np
     from repro.core.shifts import chebyshev_shifts
-    from repro.distributed import DistPoisson, dist_plcg
-    from repro.distributed.plcg_dist import dist_plcg_solve
-    from repro.launch.mesh import (make_mesh_compat, make_mesh_for,
-                                   make_solver_mesh)
+    from repro.launch.mesh import make_solver_mesh, make_solver_mesh_for
 
     ny = args.ny or args.nx
     sigma = chebyshev_shifts(0.0, 8.0, args.l)
 
     if args.dryrun:
+        from repro.distributed import DistPoisson, plcg_mesh_sweep
         from repro.launch import hlo_analysis
         from repro.launch.dryrun import HBM_BW, ICI_BW, PEAK_FLOPS
         mesh = make_solver_mesh(multi_pod=args.multi_pod)
-        # the solver mesh is a flat 2-D processor grid; multi-pod folds the
-        # pod axis into rows (32 x 16 subdomains)
-        if args.multi_pod:
-            mesh = make_mesh_compat((32, 16), ("data", "model"))
         px, py = mesh.shape["data"], mesh.shape["model"]
         nx = max(args.nx, px * 128)       # production-scale local blocks
         nyy = max(ny, py * 128)
         op = DistPoisson(nx, nyy, mesh)
+        fn = plcg_mesh_sweep(op, l=args.l, iters=args.iters,
+                             sigma=tuple(sigma), tol=args.tol)
         b = jax.ShapeDtypeStruct((nx, nyy), jnp.float32)
         t0 = time.time()
-        fn = lambda bb: dist_plcg(op, bb, l=args.l, iters=args.iters,  # noqa: E731
-                                  sigma=sigma, tol=args.tol)
-        lowered = jax.jit(fn).lower(b)
+        lowered = fn.lower(b, b, args.iters)
         compiled = lowered.compile()
         ma = compiled.memory_analysis()
         st = hlo_analysis.analyze(compiled.as_text())
@@ -98,49 +96,32 @@ def main(argv=None):
               rec["memory"]["peak_per_device"] / 1e9)
         return rec
 
-    # real solve on available devices
-    ndev = len(jax.devices())
+    # real solve on available devices -- ONE front-end call either way
+    from repro.core import solve
     from repro.operators import poisson2d
+    ndev = len(jax.devices())
     A = poisson2d(args.nx, ny)
-    xs = np.ones((args.nx, ny))
-    b_flat = np.asarray(A @ xs.reshape(-1))
-
-    if ndev == 1:
-        # single device: the unified front-end drives any registered method
-        from repro.core import solve
-        if args.nrhs > 1:
-            rng = np.random.default_rng(0)
-            B = np.stack([b_flat] + [np.asarray(A @ rng.standard_normal(A.n))
-                                     for _ in range(args.nrhs - 1)])
-        else:
-            B = b_flat
-        t0 = time.time()
-        r = solve(A, B, method=args.method, l=args.l, tol=args.tol,
-                  maxiter=args.iters, sigma=sigma, backend=args.backend)
-        dt = time.time() - t0
-        x = np.asarray(r.x)
-        res = np.linalg.norm(b_flat - A @ (x[0] if args.nrhs > 1 else x))
-        print(f"{args.method} (l={args.l}, nrhs={args.nrhs}) on "
-              f"{args.nx}x{ny}: {r.iters} iters, {dt:.2f}s, "
-              f"|b-Ax| = {res:.3e}, converged={r.converged}")
-        return x
-
-    mp = 1
-    while mp * mp <= ndev and ny % mp == 0:
-        mp *= 2
-    mp //= 2
-    mesh = make_mesh_for(ndev, model_parallel=max(mp, 1))
-    op = DistPoisson(args.nx, ny, mesh)
-    b = jnp.asarray(b_flat.reshape(args.nx, ny))
+    b_flat = np.asarray(A @ np.ones(args.nx * ny))
+    if args.nrhs > 1:
+        rng = np.random.default_rng(0)
+        B = np.stack([b_flat] + [np.asarray(A @ rng.standard_normal(A.n))
+                                 for _ in range(args.nrhs - 1)])
+    else:
+        B = b_flat
+    mesh = (make_solver_mesh_for(ndev, ny, nx=args.nx) if ndev > 1
+            else None)
     t0 = time.time()
-    x, resn, info = dist_plcg_solve(op, b, l=args.l, maxiter=args.iters,
-                                    sigma=sigma, tol=args.tol)
-    x = np.asarray(x)
+    r = solve(A, B, method=args.method, l=args.l, tol=args.tol,
+              maxiter=args.iters, sigma=sigma, backend=args.backend,
+              mesh=mesh)
     dt = time.time() - t0
-    res = np.linalg.norm(b_flat - (A @ x.reshape(-1)))
-    print(f"p({args.l})-CG on {args.nx}x{ny} over {ndev} devices: "
-          f"{len(resn)} iters, {dt:.2f}s, |b-Ax| = {res:.3e}, "
-          f"converged={info['converged']}, restarts={info['restarts']}")
+    x = np.asarray(r.x).reshape(args.nrhs, -1) if args.nrhs > 1 \
+        else np.asarray(r.x).reshape(-1)
+    res = np.linalg.norm(b_flat - A @ (x[0] if args.nrhs > 1 else x))
+    where = f"{ndev}-device mesh {dict(mesh.shape)}" if mesh else "1 device"
+    print(f"{args.method} (l={args.l}, nrhs={args.nrhs}) on "
+          f"{args.nx}x{ny} over {where}: {r.iters} iters, {dt:.2f}s, "
+          f"|b-Ax| = {res:.3e}, converged={r.converged}")
     return x
 
 

@@ -19,6 +19,16 @@ def rng():
     return np.random.default_rng(0)
 
 
+@pytest.fixture
+def x64():
+    """Enable f64 for one test, restoring the previous setting after."""
+    import jax
+    old = jax.config.jax_enable_x64
+    jax.config.update("jax_enable_x64", True)
+    yield
+    jax.config.update("jax_enable_x64", old)
+
+
 @pytest.fixture(scope="session")
 def dist_env():
     """Environment for the multi-device subprocess tests: 8 forced host

@@ -1,11 +1,15 @@
-"""Multi-device tests (subprocess with 8 forced host devices): the
-distributed solver must reproduce the single-device trace, and the MoE
-shard_map path must match the local reference.
+"""Mesh execution layer tests: the distributed solvers are reachable ONLY
+through the unified front-end ``repro.core.solve(A, b, mesh=...)`` and
+must (a) reproduce the single-device batched engine, (b) trace to exactly
+ONE fused psum per iteration (TWO for the classic-CG baseline), and
+(c) mask per-RHS convergence across shards.
 
-The subprocess env (8 host devices, src on PYTHONPATH) comes from the
-``dist_env`` conftest fixture so the suite is deterministic on
-single-device hosts and in CI; meshes are built through the
-version-portable ``repro.launch.mesh.make_mesh_compat``."""
+Multi-device payloads run in subprocesses with 8 forced host devices (the
+``dist_env`` conftest fixture) so the suite is deterministic on
+single-device hosts and in CI; structural jaxpr assertions and the driver
+contracts run in-process on a (1, 1) mesh (collective semantics are
+identical, unpaired ppermute edges = Dirichlet zeros).  Meshes are built
+through the version-portable ``repro.launch.mesh.make_mesh_compat``."""
 import json
 import os
 import subprocess
@@ -24,98 +28,361 @@ def _run(code: str, env: dict) -> dict:
     return json.loads(out.stdout.strip().splitlines()[-1])
 
 
+# ------------------- acceptance: mesh vs batched engine -------------------
+
 @pytest.mark.slow
-def test_dist_plcg_matches_reference(dist_env):
+def test_mesh_batched_matches_single_device_engine(dist_env):
+    """solve(A, B, method="plcg_scan", mesh=mesh) with B (nrhs, nx, ny) on
+    a 8-device (4, 2) mesh matches the single-device batched vmap(scan)
+    engine to <= 1e-10 relative in f64, with identical per-RHS iteration
+    counts."""
     res = _run(textwrap.dedent("""
         import json, jax
         jax.config.update("jax_enable_x64", True)
         import jax.numpy as jnp, numpy as np
+        from repro.core import solve
         from repro.launch.mesh import make_mesh_compat
-        from repro.distributed import dist_plcg, DistPoisson
-        from repro.core.shifts import chebyshev_shifts
-        from repro.core.plcg import plcg
         from repro.operators import poisson2d
         mesh = make_mesh_compat((4, 2), ("data", "model"))
         nx = ny = 32
-        op = DistPoisson(nx, ny, mesh)
+        A = poisson2d(nx, ny)
+        rng = np.random.default_rng(0)
+        B = np.stack([np.asarray(A @ rng.standard_normal(A.n))
+                      for _ in range(4)])
+        kw = dict(method="plcg_scan", l=2, tol=1e-10, maxiter=200,
+                  spectrum=(0.0, 8.0))
+        ref = solve(A, B, **kw)                         # single device
+        r = solve(A, B.reshape(4, nx, ny), mesh=mesh, **kw)
+        xm = np.asarray(r.x).reshape(4, -1)
+        rel = max(np.linalg.norm(xm[j] - np.asarray(ref.x)[j])
+                  / np.linalg.norm(np.asarray(ref.x)[j]) for j in range(4))
+        print(json.dumps({
+            "rel": float(rel), "conv": bool(r.converged),
+            "iters_match": [int(a) == int(b) for a, b in
+                            zip(r.info["per_rhs_iters"],
+                                ref.info["per_rhs_iters"])],
+            "shape": list(np.asarray(r.x).shape),
+            "batched": r.info["batched"],
+            "psums": r.info["psums_per_iter"]}))
+    """), dist_env)
+    assert res["conv"] and res["rel"] <= 1e-10
+    assert all(res["iters_match"])
+    assert res["shape"] == [4, 32, 32]
+    assert res["batched"] == "shard_map+vmap" and res["psums"] == 1
+
+
+@pytest.mark.slow
+def test_mesh_single_rhs_matches_reference(dist_env):
+    """The single-RHS mesh path (restart driver) reproduces the python
+    p(l)-CG reference trace on a (4, 2) mesh."""
+    res = _run(textwrap.dedent("""
+        import json, jax
+        jax.config.update("jax_enable_x64", True)
+        import jax.numpy as jnp, numpy as np
+        from repro.core import solve
+        from repro.core.plcg import plcg
+        from repro.launch.mesh import make_mesh_compat
+        from repro.operators import poisson2d
+        mesh = make_mesh_compat((4, 2), ("data", "model"))
+        nx = ny = 32
         A = poisson2d(nx, ny)
         b_np = A @ np.ones(nx*ny)
-        x, resn, conv, brk, k_done = dist_plcg(
-            op, jnp.asarray(b_np.reshape(nx, ny)), l=2, iters=140,
-            sigma=chebyshev_shifts(0,8,2), tol=1e-10)
-        ref = plcg(A, b_np, l=2, tol=1e-10, maxiter=140, spectrum=(0,8))
-        rr = np.array([r for r in np.asarray(resn) if r > 0])
-        m = min(len(rr), len(ref.resnorms)) - 1
-        ok_trace = bool(np.allclose(rr[:m], ref.resnorms[:m], rtol=1e-7))
-        res = float(np.linalg.norm(b_np - A @ np.asarray(x).reshape(-1)))
+        r = solve(A, jnp.asarray(b_np.reshape(nx, ny)), method="plcg",
+                  l=2, tol=1e-10, maxiter=140, spectrum=(0, 8), mesh=mesh)
+        ref = plcg(A, b_np, l=2, tol=1e-10, maxiter=140, spectrum=(0, 8))
+        m = min(len(r.resnorms), len(ref.resnorms)) - 1
+        ok_trace = bool(np.allclose(r.resnorms[:m], ref.resnorms[:m],
+                                    rtol=1e-7))
+        res = float(np.linalg.norm(b_np - A @ np.asarray(r.x).reshape(-1)))
         print(json.dumps({"trace": ok_trace, "res": res,
-                          "conv": bool(conv)}))
+                          "conv": bool(r.converged)}))
     """), dist_env)
     assert res["trace"] and res["conv"] and res["res"] < 1e-7
 
 
-def test_dist_solve_budget_and_info():
-    """dist_plcg_solve enforces a GLOBAL iteration budget across restart
-    sweeps (no max_restarts x maxiter blow-up) and reports iterations /
-    breakdowns like the single-device driver.  Runs in-process on a (1,1)
-    mesh (unpaired ppermute edges = Dirichlet zeros)."""
-    import jax
-    import jax.numpy as jnp
-    import numpy as np
-    from repro.core.shifts import chebyshev_shifts
-    from repro.distributed import DistPoisson, dist_plcg_solve
-    from repro.launch.mesh import make_mesh_compat
-    from repro.operators import poisson2d
-
-    old = jax.config.jax_enable_x64
-    jax.config.update("jax_enable_x64", True)
-    try:
-        mesh = make_mesh_compat((1, 1), ("data", "model"))
-        nx = ny = 16
-        op = DistPoisson(nx, ny, mesh)
-        A = poisson2d(nx, ny)
-        b = jnp.asarray((A @ np.ones(nx * ny)).reshape(nx, ny))
-        # budget-exhaustion path: far too few iterations to converge
-        x, resn, info = dist_plcg_solve(op, b, l=2,
-                                        sigma=chebyshev_shifts(0, 8, 2),
-                                        tol=1e-14, maxiter=10)
-        assert not info["converged"]
-        assert info["iterations"] <= 10
-        assert set(info) == {"converged", "restarts", "breakdowns",
-                             "iterations"}
-        # convergent path reports the true iteration count
-        x, resn, info = dist_plcg_solve(op, b, l=2,
-                                        sigma=chebyshev_shifts(0, 8, 2),
-                                        tol=1e-10, maxiter=200)
-        assert info["converged"]
-        assert 0 < info["iterations"] <= 200
-        err = np.linalg.norm(np.asarray(x).reshape(-1) - 1.0)
-        assert err < 1e-6
-    finally:
-        jax.config.update("jax_enable_x64", old)
-
-
 @pytest.mark.slow
-def test_dist_cg_converges(dist_env):
+def test_mesh_per_rhs_masking_across_shards(dist_env):
+    """Converged lanes freeze through the scan engine's per-lane select
+    while live lanes keep iterating -- on shards exactly as on one
+    device: the smooth A@1 RHS stops well before a rough random RHS and
+    stops emitting residuals."""
     res = _run(textwrap.dedent("""
         import json, jax
         jax.config.update("jax_enable_x64", True)
         import jax.numpy as jnp, numpy as np
+        from repro.core import solve
         from repro.launch.mesh import make_mesh_compat
-        from repro.distributed import dist_cg, DistPoisson
         from repro.operators import poisson2d
         mesh = make_mesh_compat((2, 4), ("data", "model"))
         nx = ny = 32
-        op = DistPoisson(nx, ny, mesh)
+        A = poisson2d(nx, ny)
+        smooth = np.asarray(A @ np.ones(A.n))
+        rough = np.asarray(
+            A @ np.random.default_rng(3).standard_normal(A.n))
+        B = np.stack([smooth, rough]).reshape(2, nx, ny)
+        r = solve(A, B, method="plcg_scan", l=2, tol=1e-10, maxiter=200,
+                  spectrum=(0.0, 8.0), mesh=mesh)
+        it = [int(k) for k in r.info["per_rhs_iters"]]
+        print(json.dumps({
+            "conv": [bool(c) for c in r.info["per_rhs_converged"]],
+            "iters": it,
+            "trace_lens": [len(t) for t in r.resnorms]}))
+    """), dist_env)
+    assert all(res["conv"])
+    assert res["iters"][0] < res["iters"][1] - 10   # eigenvector lane stops
+    assert res["trace_lens"][0] < res["trace_lens"][1]
+
+
+@pytest.mark.slow
+def test_mesh_cg_baseline_converges(dist_env):
+    res = _run(textwrap.dedent("""
+        import json, jax
+        jax.config.update("jax_enable_x64", True)
+        import jax.numpy as jnp, numpy as np
+        from repro.core import solve
+        from repro.launch.mesh import make_mesh_compat
+        from repro.operators import poisson2d
+        mesh = make_mesh_compat((2, 4), ("data", "model"))
+        nx = ny = 32
         A = poisson2d(nx, ny)
         b_np = A @ np.ones(nx*ny)
-        x, resn, conv = dist_cg(op, jnp.asarray(b_np.reshape(nx, ny)),
-                                iters=140, tol=1e-10)
-        err = float(np.linalg.norm(np.asarray(x).reshape(-1) - 1.0))
-        print(json.dumps({"err": err, "conv": bool(conv)}))
+        r = solve(A, jnp.asarray(b_np.reshape(nx, ny)), method="cg",
+                  tol=1e-10, maxiter=140, mesh=mesh)
+        err = float(np.linalg.norm(np.asarray(r.x).reshape(-1) - 1.0))
+        print(json.dumps({"err": err, "conv": bool(r.converged),
+                          "psums": r.info["psums_per_iter"]}))
     """), dist_env)
-    assert res["conv"] and res["err"] < 1e-6
+    assert res["conv"] and res["err"] < 1e-6 and res["psums"] == 2
 
+
+# -------------------- structural: one psum per iteration ------------------
+
+def test_one_psum_per_iteration_vs_two_for_cg(x64):
+    """Jaxpr introspection (in-process, (1,1) mesh -- the traced program
+    is mesh-size independent): the pipelined mesh sweep carries ONE fused
+    psum per scan iteration, single-RHS and batched alike; the classic-CG
+    baseline carries TWO.  Halo exchange stays 4 ppermutes either way."""
+    import jax.numpy as jnp
+    from repro.core.shifts import chebyshev_shifts
+    from repro.distributed import DistPoisson, cg_mesh_sweep, plcg_mesh_sweep
+    from repro.kernels.introspect import count_primitive_in_scan_bodies
+    from repro.launch.mesh import make_mesh_compat
+
+    mesh = make_mesh_compat((1, 1), ("data", "model"))
+    op = DistPoisson(16, 16, mesh)
+    sig = tuple(chebyshev_shifts(0, 8, 2))
+    b = jnp.ones((16, 16))
+    b3 = jnp.ones((4, 16, 16))
+
+    fp = plcg_mesh_sweep(op, l=2, iters=30, sigma=sig, tol=1e-8)
+    assert count_primitive_in_scan_bodies(fp, "psum", b, b * 0, 30) == [1]
+    assert count_primitive_in_scan_bodies(fp, "ppermute",
+                                          b, b * 0, 30) == [4]
+    fb = plcg_mesh_sweep(op, l=2, iters=30, sigma=sig, tol=1e-8,
+                         batched=True)
+    # the stacked (nrhs, 2l+1) payload rides the SAME single psum
+    assert count_primitive_in_scan_bodies(fb, "psum", b3, b3 * 0, 30) == [1]
+    assert count_primitive_in_scan_bodies(fb, "ppermute",
+                                          b3, b3 * 0, 30) == [4]
+    fc = cg_mesh_sweep(op, iters=30, tol=1e-8)
+    assert count_primitive_in_scan_bodies(fc, "psum", b, b * 0) == [2]
+    fcb = cg_mesh_sweep(op, iters=30, tol=1e-8, batched=True)
+    assert count_primitive_in_scan_bodies(fcb, "psum", b3, b3 * 0) == [2]
+
+
+def test_mesh_parity_on_available_devices(x64):
+    """In-process multi-device parity: when the MAIN process has >= 4
+    devices (the CI distributed lane forces 4 via XLA_FLAGS), the
+    batched mesh engine on a real (2, 2) decomposition -- live ppermute
+    halo pairs, partial dots, one psum -- matches the single-device
+    batched engine to <= 1e-10 relative.  Skips on single-device hosts
+    (the slow subprocess tests cover that case)."""
+    import jax
+    import numpy as np
+    from repro.core import solve
+    from repro.launch.mesh import make_mesh_compat
+    from repro.operators import poisson2d
+
+    if len(jax.devices()) < 4:
+        pytest.skip("needs >= 4 host devices (CI dist lane forces 4)")
+    mesh = make_mesh_compat((2, 2), ("data", "model"))
+    nx = ny = 32
+    A = poisson2d(nx, ny)
+    rng = np.random.default_rng(1)
+    B = np.stack([np.asarray(A @ rng.standard_normal(A.n))
+                  for _ in range(3)])
+    kw = dict(method="plcg_scan", l=2, tol=1e-10, maxiter=200,
+              spectrum=(0.0, 8.0))
+    ref = solve(A, B, **kw)
+    r = solve(A, B.reshape(3, nx, ny), mesh=mesh, **kw)
+    xm = np.asarray(r.x).reshape(3, -1)
+    for j in range(3):
+        d = np.linalg.norm(xm[j] - np.asarray(ref.x)[j])
+        assert d <= 1e-10 * np.linalg.norm(np.asarray(ref.x)[j])
+    assert list(r.info["per_rhs_iters"]) == list(ref.info["per_rhs_iters"])
+
+
+# ----------------------- front-end contract (in-process) ------------------
+
+def test_mesh_solve_budget_and_info(x64):
+    """The folded restart driver enforces a GLOBAL iteration budget across
+    sweeps (no max_restarts x maxiter blow-up) and reports the common
+    SolveResult contract."""
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core import solve
+    from repro.launch.mesh import make_mesh_compat
+    from repro.operators import poisson2d
+
+    from repro.core.shifts import chebyshev_shifts
+    from repro.distributed import as_dist_operator, plcg_mesh_sweep
+
+    mesh = make_mesh_compat((1, 1), ("data", "model"))
+    nx = ny = 16
+    A = poisson2d(nx, ny)
+    b = jnp.asarray((A @ np.ones(nx * ny)).reshape(nx, ny))
+    # budget-exhaustion path: far too few iterations to converge
+    r = solve(A, b, method="plcg_scan", l=2, tol=1e-14, maxiter=10,
+              spectrum=(0, 8), mesh=mesh)
+    assert not r.converged
+    assert r.iters <= 10
+    assert r.info["psums_per_iter"] == 1
+    # convergent path reports the true iteration count and solution
+    r = solve(A, b, method="plcg_scan", l=2, tol=1e-10, maxiter=200,
+              spectrum=(0, 8), mesh=mesh)
+    assert r.converged and 0 < r.iters <= 200
+    assert np.linalg.norm(np.asarray(r.x).reshape(-1) - 1.0) < 1e-6
+    # the budget is a traced operand of ONE compiled sweep (restarts
+    # never recompile): same callable, different caps, exact k_done
+    op = as_dist_operator(A, mesh)
+    sig = tuple(chebyshev_shifts(0, 8, 2))
+    fn = plcg_mesh_sweep(op, l=2, iters=30, sigma=sig, tol=0.0)
+    assert plcg_mesh_sweep(op, l=2, iters=30, sigma=sig, tol=0.0) is fn
+    for cap in (5, 9):
+        out = fn(b, b * 0, cap)
+        assert int(out[4]) + 1 == cap       # k_done + 1 updates committed
+        assert not bool(out[2]) and not bool(out[3])  # frozen, not conv/brk
+
+
+def test_mesh_cg_x0_and_early_stop_contract(x64):
+    """dist CG honors x0 and stops early like the pipelined path: an
+    exact initial guess converges in 0 iterations, restarting from a
+    returned solution performs no further updates, and flat (n,) input
+    round-trips."""
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core import solve
+    from repro.launch.mesh import make_mesh_compat
+    from repro.operators import poisson2d
+
+    mesh = make_mesh_compat((1, 1), ("data", "model"))
+    nx = ny = 16
+    A = poisson2d(nx, ny)
+    ones = np.ones(nx * ny)
+    b = jnp.asarray((A @ ones).reshape(nx, ny))
+    exact = solve(A, b, method="cg", tol=1e-10, maxiter=300, mesh=mesh,
+                  x0=jnp.asarray(ones.reshape(nx, ny)))
+    assert exact.converged and exact.iters == 0
+    cold = solve(A, b, method="cg", tol=1e-10, maxiter=300, mesh=mesh)
+    warm = solve(A, b, method="cg", tol=1e-10, maxiter=300, mesh=mesh,
+                 x0=jnp.asarray(cold.x))
+    assert cold.converged and cold.iters > 0
+    assert warm.converged and warm.iters == 0       # x0 respected
+    assert len(cold.resnorms) == cold.iters + 1     # initial + per update
+    # flat right-hand side comes back flat
+    r = solve(A, jnp.asarray(A @ ones), method="cg", tol=1e-10,
+              maxiter=300, mesh=mesh)
+    assert np.asarray(r.x).shape == (nx * ny,)
+    assert np.linalg.norm(np.asarray(r.x) - ones) < 1e-6
+
+
+def test_dist_solvers_only_reachable_through_front_end():
+    """No standalone distributed drivers: repro.distributed exports the
+    operator protocol and sweep builders only, and the front-end rejects
+    methods without a mesh path."""
+    import numpy as np
+    import repro.distributed as dist
+    from repro.core import solve
+    from repro.launch.mesh import make_mesh_compat
+    from repro.operators import poisson2d
+
+    for gone in ("dist_plcg", "dist_cg", "dist_plcg_solve"):
+        assert not hasattr(dist, gone)
+    assert dist.mesh_methods() == ("cg", "plcg", "plcg_scan")
+
+    mesh = make_mesh_compat((1, 1), ("data", "model"))
+    A = poisson2d(8, 8)
+    b = np.asarray(A @ np.ones(A.n)).reshape(8, 8)
+    with pytest.raises(ValueError, match="no mesh-aware execution path"):
+        solve(A, b, method="pcg", mesh=mesh)
+    with pytest.raises(ValueError, match="precondition"):
+        solve(A, b, method="plcg_scan", mesh=mesh, M=lambda v: v)
+    with pytest.raises(ValueError, match="options"):
+        solve(A, b, method="plcg_scan", mesh=mesh, record_G=True)
+    # max_restarts works single-RHS but is rejected (not silently
+    # dropped) by the batched mesh engine, like the vmap(scan) engine
+    B2 = np.stack([b, b])
+    with pytest.raises(ValueError, match="max_restarts"):
+        solve(A, B2, method="plcg_scan", mesh=mesh, max_restarts=0)
+    with pytest.raises(TypeError, match="stencil2d"):
+        solve(np.eye(64), np.ones(64).reshape(8, 8), method="plcg_scan",
+              mesh=mesh)
+    # an explicitly requested kernel backend cannot take effect on the
+    # injected-dot mesh path: surfaced as a warning, not silently eaten
+    with pytest.warns(UserWarning, match="backend"):
+        solve(A, b, method="plcg_scan", l=1, tol=1e-4, maxiter=20,
+              spectrum=(0.0, 8.0), mesh=mesh, backend="fused")
+    # cg on a mesh ignores pipelined-method knobs like the single-device
+    # cg adapter (no sigma validation)
+    r = solve(A, b, method="cg", l=3, sigma=[0.5], tol=1e-6, maxiter=200,
+              mesh=mesh)
+    assert r.converged
+
+
+def test_dist_operator_protocol_and_caching(x64):
+    """DistPoisson satisfies the protocol, ppermute pair lists and the
+    stencil2d promotion are cached per operator, repeated front-end mesh
+    solves reuse ONE compiled sweep, and a DistributedOperator
+    dispatches without mesh=."""
+    import numpy as np
+    from repro.core import clear_batch_trace, solve
+    from repro.core import engine
+    from repro.distributed import (DistPoisson, DistributedOperator,
+                                   as_dist_operator)
+    from repro.launch.mesh import make_mesh_compat
+    from repro.operators import poisson2d
+
+    mesh = make_mesh_compat((1, 1), ("data", "model"))
+    A = poisson2d(16, 16)
+    op = as_dist_operator(A, mesh)
+    assert isinstance(op, DistPoisson)
+    assert isinstance(op, DistributedOperator)
+    assert op.global_shape == (16, 16) and op.local_shape == (16, 16)
+    # cached properties: same tuple object on repeated access
+    assert op._row_perms is op._row_perms
+    assert op._col_perms is op._col_perms
+    # canonical promotion: same A + mesh -> the SAME operator instance
+    assert as_dist_operator(A, mesh) is op
+    assert as_dist_operator(op, None) is op
+    assert as_dist_operator(op, mesh) is op
+    other = make_mesh_compat((1, 1), ("rows", "cols"))
+    with pytest.raises(ValueError, match="different mesh"):
+        as_dist_operator(op, other)
+    # ...so two identical front-end mesh solves compile the sweep ONCE
+    B = np.stack([np.asarray(A @ np.ones(A.n))] * 2).reshape(2, 16, 16)
+    kw = dict(method="plcg_scan", l=2, tol=1e-8, maxiter=60,
+              spectrum=(0.0, 8.0), mesh=mesh)
+    clear_batch_trace()
+    solve(A, B, **kw)
+    solve(A, B, **kw)
+    assert len(engine.BATCH_TRACE_EVENTS) == 1
+    # operator-first dispatch: solve() picks the mesh off the operator
+    b = np.asarray(A @ np.ones(A.n)).reshape(16, 16)
+    r = solve(op, b, method="cg", tol=1e-6, maxiter=300)
+    assert r.converged
+
+
+# --------------------- unrelated multi-device suites ----------------------
 
 @pytest.mark.slow
 def test_moe_shardmap_matches_local(dist_env):

@@ -6,7 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import as_operator, methods, solve
+from repro.core import as_operator, clear_batch_trace, methods, solve
 from repro.core import engine
 from repro.operators import poisson2d, poisson2d_dense
 from repro.operators.precond import jacobi
@@ -90,7 +90,7 @@ def test_batched_matches_single_rhs_and_compiles_once(poisson):
     solves to 1e-8 relative and runs as ONE jitted vmap(scan)."""
     A, _ = poisson
     B = _batch(A, 8)
-    engine.BATCH_TRACE_EVENTS.clear()
+    clear_batch_trace()
     rb = solve(A, B, method="plcg_scan", l=2, tol=1e-10, maxiter=200,
                spectrum=(0.0, 8.0))
     # exactly one trace event == exactly one XLA compilation of the engine
@@ -110,7 +110,7 @@ def test_batched_default_method_uses_vmap_engine(poisson):
     jitted vmap(scan) production engine."""
     A, _ = poisson
     B = _batch(A, 3, seed=1)
-    engine.BATCH_TRACE_EVENTS.clear()
+    clear_batch_trace()
     rb = solve(A, B, l=2, tol=1e-10, maxiter=200, spectrum=(0.0, 8.0))
     assert len(engine.BATCH_TRACE_EVENTS) == 1
     assert rb.info["batched"] == "vmap"
@@ -144,6 +144,31 @@ def test_batched_loop_fallback_for_reference_methods(poisson):
     for j in range(2):
         rj = solve(A, B[j], method="cg", tol=1e-10, maxiter=400)
         assert np.allclose(np.asarray(rb.x)[j], np.asarray(rj.x))
+
+
+def test_mesh_dispatch_through_front_end(poisson):
+    """solve(..., mesh=...) routes the SAME registry method through the
+    mesh execution layer: on a trivial (1, 1) mesh the batched result
+    matches the single-device vmap(scan) engine to 1e-10 relative, the
+    SolveResult carries the per-RHS info contract, and the mesh engine
+    logs its own trace event."""
+    from repro.launch.mesh import make_mesh_compat
+    A, _ = poisson
+    B = _batch(A, 2)
+    kw = dict(method="plcg_scan", l=2, tol=1e-10, maxiter=200,
+              spectrum=(0.0, 8.0))
+    rb = solve(A, B, **kw)
+    mesh = make_mesh_compat((1, 1), ("data", "model"))
+    clear_batch_trace()
+    rm = solve(A, B, mesh=mesh, **kw)
+    assert [e[0] for e in engine.BATCH_TRACE_EVENTS] == ["plcg@mesh"]
+    assert rm.info["batched"] == "shard_map+vmap"
+    assert rm.info["psums_per_iter"] == 1
+    assert np.asarray(rm.x).shape == (2, A.n)       # flat in, flat out
+    for j in range(2):
+        d = np.linalg.norm(np.asarray(rm.x)[j] - np.asarray(rb.x)[j])
+        assert d <= 1e-10 * np.linalg.norm(np.asarray(rb.x)[j])
+    assert list(rm.info["per_rhs_iters"]) == list(rb.info["per_rhs_iters"])
 
 
 # --------------------------- kernel backends ------------------------------
