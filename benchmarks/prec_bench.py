@@ -1,0 +1,81 @@
+"""Preconditioning benchmarks: the ladder none -> Jacobi -> BlockJacobi
+(-> Chebyshev) through the unified front-end, plus the structural
+launch-count gate of the diag-fused megakernel.
+
+The probative columns are ``iters`` (iterations to tolerance -- the
+quantity preconditioning buys, paper Sec. 6) and the residual-gap
+diagnostic (attainable accuracy, arXiv:1804.02962); ``us_per_call`` is
+CPU wall time and only indicative.  ``prec/fused_jacobi`` additionally
+records the per-iteration Pallas launch count: a diagonal preconditioner
+must NOT break the fused backend's single launch.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks._util import timeit_us as _timeit
+
+
+def prec_ladder():
+    """iterations-to-tol + us/iter for none vs Jacobi vs BlockJacobi vs
+    Chebyshev on the tier-1 Poisson problem (single process; BlockJacobi
+    runs its (2, 2) block grid exactly as the mesh path would)."""
+    from repro.core import BlockJacobi, Chebyshev, residual_gap, solve
+    from repro.operators import jacobi, poisson2d
+    nx = ny = 32
+    A = poisson2d(nx, ny)
+    b = np.asarray(A @ np.ones(A.n))
+    precs = [
+        ("none", None),
+        ("jacobi", jacobi(A)),
+        ("blockjacobi_2x2", BlockJacobi((nx, ny), blocks=(2, 2), degree=4)),
+        ("chebyshev_d3", Chebyshev(A, spectrum=(0.5, 8.0), degree=3)),
+    ]
+    rows = []
+    for tag, M in precs:
+        kw = dict(method="plcg_scan", l=2, tol=1e-6, maxiter=400, M=M)
+        if M is None:
+            kw["spectrum"] = (0.0, 8.0)
+        r = solve(A, b, **kw)
+        us = _timeit(lambda kw=kw: solve(A, b, **kw), reps=1)
+        gap = residual_gap(A, b, r)
+        rows.append((f"prec/{tag}", us,
+                     f"iters={r.iters};conv={r.converged};"
+                     f"us_per_iter={us / max(r.iters, 1):.0f};"
+                     f"rel_gap={gap['rel_gap']:.1e}"))
+    return rows
+
+
+def prec_fused_launches():
+    """Structural: backend='fused' with a Jacobi (diag) preconditioner
+    stays at ONE pallas_call per steady-state body; a general (opaque)
+    callable with a stencil hint takes the 2-launch split."""
+    from repro.core.plcg_scan import plcg_scan
+    from repro.core.shifts import chebyshev_shifts
+    from repro.kernels.introspect import count_pallas_calls
+    from repro.operators import jacobi, poisson2d
+    import jax.numpy as jnp
+    A = poisson2d(32, 32)
+    b = jnp.asarray(np.asarray(A @ np.ones(A.n)))
+    M = jacobi(A)
+    sig = tuple(chebyshev_shifts(0, 2, 2))
+
+    def launches(prec_diag, prec):
+        return count_pallas_calls(
+            lambda bb: plcg_scan(A.matvec, bb, l=2, iters=8, sigma=sig,
+                                 prec=prec, prec_diag=prec_diag,
+                                 backend="fused",
+                                 stencil_hw=A.stencil2d), b)
+
+    n_diag = launches(M.inv_diag, M)
+    n_gen = launches(None, lambda v: v / 4.0)
+    us = _timeit(lambda: plcg_scan(A.matvec, b, l=2, iters=40, sigma=sig,
+                                   prec=M, prec_diag=M.inv_diag,
+                                   backend="fused",
+                                   stencil_hw=A.stencil2d), reps=1)
+    return [("prec/fused_jacobi", us,
+             f"launches_diag={n_diag};launches_general={n_gen}")]
+
+
+ALL = [prec_ladder, prec_fused_launches]
+SMOKE = [prec_ladder, prec_fused_launches]

@@ -7,16 +7,20 @@ EXPERIMENTS.md).
 micro-times, the structural Table-1 rows) for the CI benchmark-smoke job:
 the rows must *print*, no timing is asserted.
 
-``--json PATH`` additionally writes the machine-readable trajectory file
-``{name: us_per_call}`` (plus a ``derived`` map) consumed by the perf
-gate: commit one ``BENCH_<rev>.json`` per landed revision so regressions
-are diffable across the PR sequence.
+``--json [PATH]`` additionally writes the machine-readable trajectory
+file ``{name: us_per_call}`` (plus a ``derived`` map) consumed by the
+perf gate: commit one ``BENCH_<rev>.json`` per landed revision so
+regressions are diffable across the PR sequence.  Without an explicit
+PATH the file is auto-named ``BENCH_<rev>.json`` from
+``git rev-parse --short HEAD``, so the provenance can no longer drift
+from the checked-out revision.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import pathlib
+import subprocess
 import sys
 import time
 
@@ -29,20 +33,34 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="fast CI subset; asserts nothing about timings")
-    ap.add_argument("--json", metavar="PATH", default=None,
-                    help="also write {name: us_per_call} (+derived) JSON, "
-                         "e.g. BENCH_<rev>.json")
+    ap.add_argument("--json", metavar="PATH", nargs="?", default=None,
+                    const="auto",
+                    help="also write {name: us_per_call} (+derived) JSON; "
+                         "without PATH, auto-names BENCH_<rev>.json from "
+                         "`git rev-parse --short HEAD`")
     args = ap.parse_args(argv)
+    if args.json == "auto":
+        try:
+            rev = subprocess.run(
+                ["git", "rev-parse", "--short", "HEAD"],
+                cwd=pathlib.Path(__file__).resolve().parent.parent,
+                capture_output=True, text=True, check=True).stdout.strip()
+        except (OSError, subprocess.CalledProcessError) as e:
+            rev = "local"
+            sys.stderr.write(f"[--json: git rev-parse unavailable ({e}); "
+                             "falling back to BENCH_local.json]\n")
+        args.json = f"BENCH_{rev}.json"
 
     from benchmarks import (dist_bench, engine_bench, kernels_bench,
-                            paper_figs, roofline)
+                            paper_figs, prec_bench, roofline)
     if args.smoke:
         groups = (list(engine_bench.SMOKE) + list(kernels_bench.ALL)
-                  + [paper_figs.table1_cost_model] + list(dist_bench.SMOKE))
+                  + [paper_figs.table1_cost_model] + list(dist_bench.SMOKE)
+                  + list(prec_bench.SMOKE))
     else:
         groups = (list(paper_figs.ALL) + list(kernels_bench.ALL)
                   + list(engine_bench.ALL) + list(dist_bench.ALL)
-                  + list(roofline.ALL))
+                  + list(prec_bench.ALL) + list(roofline.ALL))
     print("name,us_per_call,derived")
     failures = 0
     all_rows: list[tuple] = []

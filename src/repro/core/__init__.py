@@ -3,22 +3,34 @@
 ``repro.core.solve(A, b, method=..., l=..., M=...)`` dispatches every
 registered solver (``cg``, ``pcg``, ``plcg``, ``plcg_scan``, ``dlanczos``,
 ``plminres``) through a single signature and a common ``SolveResult``
-contract, including the batched multi-RHS ``vmap(scan)`` path.  Individual
+contract, including the batched multi-RHS ``vmap(scan)`` path and the
+mesh execution layer (``mesh=``).  Preconditioning is a first-class
+layer (``repro.core.precond``): ``M=`` accepts a structured
+:class:`Preconditioner` (``Jacobi`` fuses into the Pallas megakernel,
+``BlockJacobi``/``Chebyshev`` run shard-local on a mesh) or any bare
+callable, which is promoted via :func:`as_preconditioner`.  Individual
 algorithm modules (``cg.py``, ``plcg.py``, ``plcg_scan.py``, ...) stay
 importable directly for research use.
 """
 from .engine import (as_operator, clear_batch_trace, describe_methods,
-                     get_method, methods, register, solve)
-from .linop import (LinearOperator, Preconditioner, dense_operator,
-                    identity_preconditioner)
+                     get_method, methods, methods_supporting, register,
+                     solve)
+from .linop import LinearOperator, dense_operator, identity_preconditioner
+from .precond import (BlockJacobi, Chebyshev, Identity, Jacobi,
+                      Preconditioner, as_preconditioner, residual_gap)
 from .results import SolveResult
 from .solver_cache import clear_solver_cache
 
 __all__ = [
+    "BlockJacobi",
+    "Chebyshev",
+    "Identity",
+    "Jacobi",
     "LinearOperator",
     "Preconditioner",
     "SolveResult",
     "as_operator",
+    "as_preconditioner",
     "clear_batch_trace",
     "clear_solver_cache",
     "dense_operator",
@@ -26,6 +38,8 @@ __all__ = [
     "get_method",
     "identity_preconditioner",
     "methods",
+    "methods_supporting",
     "register",
+    "residual_gap",
     "solve",
 ]

@@ -50,6 +50,7 @@ from .dlanczos import d_lanczos
 from .linop import LinearOperator, dense_operator
 from .pcg import ghysels_pcg
 from .plcg import plcg
+from .precond import as_preconditioner
 from .plcg_scan import plcg_solve
 from .plcg_scan import plcg_scan as _plcg_scan_engine
 from .plminres import plminres
@@ -85,23 +86,40 @@ class MethodSpec:
     ``fn(A, b, x0, *, tol, maxiter, M, l, sigma, spectrum, backend, **opts)``
     must return a :class:`SolveResult`.  ``batched`` is ``"vmap"`` when the
     method is backed by the jittable scan engine (batch solves run as one
-    ``jit(vmap(scan))``) and ``"loop"`` otherwise.
+    ``jit(vmap(scan))``) and ``"loop"`` otherwise.  ``supports_M`` /
+    ``supports_mesh`` are the capability flags :func:`solve` checks up
+    front -- the single source of truth replacing per-adapter
+    ``ValueError``s, so every method rejects an unsupported ``M=`` /
+    ``mesh=`` with the same documented message.
     """
 
     name: str
     fn: Callable[..., SolveResult]
     batched: str = "loop"
     description: str = ""
+    supports_M: bool = True
+    supports_mesh: bool = False
+    uses_sigma: bool = False
 
 
-def register(name: str, *, batched: str = "loop", description: str = ""):
-    """Decorator registering a solver adapter under ``name``."""
+def register(name: str, *, batched: str = "loop", description: str = "",
+             supports_M: bool = True, supports_mesh: bool = False,
+             uses_sigma: bool = False):
+    """Decorator registering a solver adapter under ``name``.
+
+    ``uses_sigma`` marks pipelined methods that consume the auxiliary-
+    basis shifts -- only those trigger the (possibly costly) default
+    shift-interval derivation from ``M.precond_spectrum``.
+    """
     if batched not in ("loop", "vmap"):
         raise ValueError(f"batched must be 'loop' or 'vmap', got {batched!r}")
 
     def deco(fn):
         _REGISTRY[name] = MethodSpec(name=name, fn=fn, batched=batched,
-                                     description=description)
+                                     description=description,
+                                     supports_M=supports_M,
+                                     supports_mesh=supports_mesh,
+                                     uses_sigma=uses_sigma)
         return fn
 
     return deco
@@ -110,6 +128,12 @@ def register(name: str, *, batched: str = "loop", description: str = ""):
 def methods() -> tuple[str, ...]:
     """Registered method names, sorted."""
     return tuple(sorted(_REGISTRY))
+
+
+def methods_supporting(capability: str) -> tuple[str, ...]:
+    """Registered method names carrying a capability flag ("M" | "mesh")."""
+    flag = {"M": "supports_M", "mesh": "supports_mesh"}[capability]
+    return tuple(m for m in methods() if getattr(_REGISTRY[m], flag))
 
 
 def describe_methods() -> dict[str, str]:
@@ -211,7 +235,14 @@ def solve(
       x0: initial guess, same shape as ``b`` (default zeros).
       tol: relative residual tolerance (``0`` disables early stopping).
       maxiter: solution-update budget.
-      M: SPD preconditioner callable applying ``M^{-1} v``.
+      M: SPD preconditioner: a structured
+        :class:`repro.core.precond.Preconditioner` (``Jacobi`` fuses into
+        the Pallas megakernel via its ``inv_diag`` hint; ``BlockJacobi``
+        / ``Chebyshev`` / constant-diagonal ``Jacobi`` run shard-local on
+        a mesh) or any bare callable applying ``M^{-1} v`` (promoted via
+        :func:`repro.core.precond.as_preconditioner`).  ``Identity``
+        collapses to the unpreconditioned pipeline.  Methods without the
+        ``supports_M`` capability flag reject it up front.
       l: pipeline depth (pipelined methods only).
       sigma: l auxiliary-basis shifts; default Chebyshev roots on
         ``spectrum`` (itself defaulting to the Poisson interval (0, 8)).
@@ -223,8 +254,10 @@ def solve(
         (``shard_map`` + halo ``ppermute``), RHS batching outside
         (``vmap``), ONE fused psum per iteration carrying all lanes'
         ``(nrhs, 2l+1)`` payloads (``cg`` is the two-psum baseline).
-        Methods without a mesh path raise; see
-        ``repro.distributed.mesh_methods()``.
+        Methods without the ``supports_mesh`` registry capability raise;
+        shard-local preconditioning composes (``M=BlockJacobi(...)``,
+        ``Jacobi`` with a constant diagonal, ``Chebyshev``) and keeps the
+        one-psum contract.
       **options: method-specific extras (``trace_gaps``, ``record_G``,
         ``max_restarts``, ``exploit_symmetry``, ...).
 
@@ -235,7 +268,28 @@ def solve(
       ``info["per_rhs_iters"]`` hold the per-system outcomes.
     """
     spec = get_method(method)
+    # normalize the preconditioner ONCE: bare callables promote to the
+    # Preconditioner protocol, and Identity collapses to the cheaper
+    # unpreconditioned pipeline -- every downstream layer sees either
+    # None or a structured Preconditioner, never a raw closure
+    M = as_preconditioner(M).runtime()
+    if M is not None and not spec.supports_M:
+        raise ValueError(
+            f"method {method!r} does not support preconditioning (M=); "
+            f"methods with M= support: {', '.join(methods_supporting('M'))}")
+    if (M is not None and sigma is None and spectrum is None
+            and spec.uses_sigma):
+        # preconditioned default: shift the auxiliary-basis interval to
+        # the preconditioned spectrum when the preconditioner knows it
+        # (only for shift-consuming pipelined methods -- BlockJacobi's
+        # estimate runs a power iteration, which cg/pcg would discard)
+        spectrum = M.precond_spectrum((0.0, 8.0))
     if mesh is not None or _is_mesh_operator(A):
+        if not spec.supports_mesh:
+            raise ValueError(
+                f"method {method!r} has no mesh-aware execution path; "
+                f"methods available on a mesh: "
+                f"{', '.join(methods_supporting('mesh'))}")
         if backend is not None:
             import warnings
             warnings.warn(
@@ -314,6 +368,9 @@ def _batched_engine(method_name: str, matvec, l: int, iters: int, sigma,
             _plcg_scan_engine, solver_cache.weakly_callable(matvec), l=l,
             iters=iters, sigma=sigma, tol=tol,
             prec=solver_cache.weakly_callable(prec),
+            # diag fusion hint of a structured Preconditioner: captured as
+            # an array constant (does not pin the preconditioner object)
+            prec_diag=getattr(prec, "inv_diag", None),
             exploit_symmetry=exploit_symmetry, unroll=unroll,
             backend=backend, stencil_hw=stencil_hw)
 
@@ -386,6 +443,7 @@ def _solve_batched_vmap(spec: MethodSpec, A: LinearOperator, B, *, x0, tol,
         breakdowns=int(brk.sum()),
         info={"method": f"p({l})-CG[scan,vmap]", "l": l,
               "sigma": list(sig), "backend": backend, "batched": "vmap",
+              "prec": getattr(M, "name", None) if M is not None else None,
               "nrhs": int(Bj.shape[0]),
               "per_rhs_converged": conv,
               "per_rhs_iters": k_done + 1,
@@ -397,7 +455,8 @@ def _solve_batched_vmap(spec: MethodSpec, A: LinearOperator, B, *, x0, tol,
 # registered method adapters
 # --------------------------------------------------------------------------
 
-@register("cg", description="classic Hestenes-Stiefel CG (paper Alg. 4)")
+@register("cg", supports_mesh=True,
+          description="classic Hestenes-Stiefel CG (paper Alg. 4)")
 def _method_cg(A, b, x0=None, *, tol=1e-8, maxiter=1000, M=None, l=1,
                sigma=None, spectrum=None, backend=None, **kw):
     return classic_cg(A, b, x0, tol=tol, maxiter=maxiter, M=M, **kw)
@@ -417,7 +476,8 @@ def _method_dlanczos(A, b, x0=None, *, tol=1e-8, maxiter=1000, M=None, l=1,
     return d_lanczos(A, b, x0, tol=tol, maxiter=maxiter, M=M, **kw)
 
 
-@register("plcg", batched="vmap",
+@register("plcg", batched="vmap", supports_mesh=True,
+          uses_sigma=True,
           description="deep-pipelined p(l)-CG reference (paper Alg. 2)")
 def _method_plcg(A, b, x0=None, *, tol=1e-8, maxiter=1000, M=None, l=1,
                  sigma=None, spectrum=None, backend=None, **kw):
@@ -425,7 +485,8 @@ def _method_plcg(A, b, x0=None, *, tol=1e-8, maxiter=1000, M=None, l=1,
                 spectrum=spectrum, **kw)
 
 
-@register("plcg_scan", batched="vmap",
+@register("plcg_scan", batched="vmap", supports_mesh=True,
+          uses_sigma=True,
           description="jitted lax.scan p(l)-CG production engine (Alg. 3)")
 def _method_plcg_scan(A, b, x0=None, *, tol=1e-8, maxiter=1000, M=None, l=1,
                       sigma=None, spectrum=None, backend=None, **kw):
@@ -442,16 +503,22 @@ def _method_plcg_scan(A, b, x0=None, *, tol=1e-8, maxiter=1000, M=None, l=1,
         converged=info["converged"], breakdowns=info["breakdowns"],
         restarts=info["restarts"],
         info={"method": f"p({l})-CG[scan]", "l": l, "sigma": sig,
-              "backend": backend},
+              "backend": backend,
+              "prec": getattr(M, "name", None) if M is not None else None},
     )
 
 
-@register("plminres",
+@register("plminres", supports_M=False, uses_sigma=True,
           description="deep-pipelined MINRES (Remark 6; indefinite OK)")
 def _method_plminres(A, b, x0=None, *, tol=1e-8, maxiter=1000, M=None, l=1,
                      sigma=None, spectrum=None, backend=None, **kw):
-    if M is not None:
-        raise ValueError("plminres does not support preconditioning")
+    # solve() enforces supports_M up front with the uniform message;
+    # this guard covers direct registry invocation (get_method().fn) so
+    # a passed M is never silently dropped
+    if as_preconditioner(M).runtime() is not None:
+        raise ValueError(
+            "plminres does not support preconditioning (M=); see "
+            "repro.core.methods_supporting('M')")
     r = plminres(A, b, x0, l=l, m=min(maxiter, A.n), sigma=sigma,
                  spectrum=spectrum, **kw)
     # plgmres runs a fixed m iterations; grade convergence on the true

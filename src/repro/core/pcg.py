@@ -10,7 +10,8 @@ from __future__ import annotations
 
 from typing import Optional
 
-from .linop import LinearOperator, Preconditioner
+from .linop import LinearOperator
+from .precond import Preconditioner
 from .results import SolveResult
 
 

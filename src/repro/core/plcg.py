@@ -31,7 +31,8 @@ import dataclasses
 import math
 from typing import Any, Callable, Optional, Sequence
 
-from .linop import LinearOperator, Preconditioner
+from .linop import LinearOperator
+from .precond import Preconditioner
 from .results import SolveResult
 from .shifts import chebyshev_shifts
 

@@ -80,6 +80,7 @@ def plcg_scan(
     sigma: Sequence[float],
     tol: float = 0.0,
     prec: Optional[Callable] = None,
+    prec_diag=None,
     dot_local: Optional[Callable] = None,
     reduce_scalars: Optional[Callable] = None,
     exploit_symmetry: bool = True,
@@ -111,8 +112,14 @@ def plcg_scan(
       * ``"fused"``   -- the single-launch Pallas megakernel fusing the
         whole steady-state body: (K4) v/z/zhat recurrences + (K5) payload,
         and additionally the (K1) SPMV when ``stencil_hw`` marks the
-        operator as the 2-D Poisson stencil and no preconditioner is set.
-        Each basis vector is read from HBM exactly once per iteration;
+        operator as the 2-D Poisson stencil.  A *diagonal* preconditioner
+        (``prec_diag`` set -- the ``inv_diag`` hint of a structured
+        ``Preconditioner``) folds into the same single launch (SPMV +
+        diag apply + zhat recurrence in-kernel); a general ``prec``
+        callable falls back to a 2-launch split (Pallas stencil SPMV,
+        then the megakernel) when the stencil hint is present, or streams
+        the externally computed t/t_hat into one launch otherwise.  Each
+        basis vector is read from HBM exactly once per iteration;
       * ``"auto"``    -- ``"pallas"`` on TPU, ``"ref"`` elsewhere.
 
     The kernel path is only taken on the single-device full-vector dots
@@ -149,9 +156,27 @@ def plcg_scan(
     sig = jnp.asarray(list(sigma), dtype=b.dtype)
     ncols = iters + 2 * l + 2
     n = b.shape[0]
-    fuse_stencil = (use_fused and stencil_hw is not None and prec is None)
-    if fuse_stencil and stencil_hw[0] * stencil_hw[1] != n:
+    # fused-tier dispatch on the preconditioner structure:
+    #   fuse_diag    -- M^{-1} is a diagonal multiply (the inv_diag hint):
+    #                   apply it in-kernel, staying at ONE launch/iteration;
+    #   fuse_stencil -- the (K1) SPMV also runs in-kernel (stencil hint and
+    #                   either no prec or a fused diagonal one);
+    #   split_stencil-- general prec with a stencil hint: Pallas stencil
+    #                   SPMV + megakernel, a 2-launch split.
+    fuse_diag = use_fused and prec is not None and prec_diag is not None
+    fuse_stencil = (use_fused and stencil_hw is not None
+                    and (prec is None or fuse_diag))
+    split_stencil = (use_fused and stencil_hw is not None
+                     and prec is not None and not fuse_diag)
+    if (fuse_stencil or split_stencil) and stencil_hw[0] * stencil_hw[1] != n:
         raise ValueError(f"stencil_hw {stencil_hw} inconsistent with n={n}")
+    invd = None
+    if fuse_diag:
+        invd = jnp.asarray(prec_diag, b.dtype)
+        if invd.ndim not in (0, 1) or (invd.ndim == 1
+                                       and invd.shape[0] != n):
+            raise ValueError(
+                f"prec_diag must be a scalar or ({n},), got {invd.shape}")
 
     # ---- initialization (Alg. 2 lines 1-3) -------------------------------
     rhat0 = b - matvec(x0)
@@ -365,16 +390,33 @@ def plcg_scan(
         (col, gcc, brk, Gb2, gam2, dlt2, gam_c1, dlt_c1,
          dsub) = scalar_block(st, i, c)
         if fuse_stencil:
+            # in-kernel SPMV (+ in-kernel diag apply when preconditioned)
             t = t_hat = None
+        elif split_stencil:
+            # general prec, stencil hint: (K1) as the Pallas stencil
+            # kernel (launch 1 of the 2-launch split), prec applied
+            # between the launches
+            H2d, W2d = stencil_hw
+            z2d = st.Zw[:, 0].reshape(H2d, W2d)
+            zr = jnp.zeros_like
+            t_hat = kops.stencil2d_apply(
+                z2d, zr(z2d[0]), zr(z2d[0]), zr(z2d[:, 0]), zr(z2d[:, 0]),
+                use_pallas=True).reshape(-1)
+            t = prec(t_hat)
         else:
             t_hat = matvec(st.Zw[:, 0])
-            t = prec(t_hat) if prec is not None else t_hat
+            if prec is None:
+                t = t_hat
+            elif fuse_diag:
+                t = None            # the kernel applies invd to t_hat
+            else:
+                t = prec(t_hat)
         Vw2, Zw2, Zhw2k, dots = kops.fused_body_apply(
             st.Vw, st.Zw, st.Zhw if prec is not None else None,
             t, t_hat if prec is not None else None,
             l=l, steady=i >= l, s_warm=sig[jnp.minimum(i, l - 1)],
             gam=gam_c1, dlt=dlt_c1, dsub=dsub, gcc=gcc,
-            g=col[:2 * l][::-1],
+            g=col[:2 * l][::-1], invd=invd,
             stencil_hw=stencil_hw if fuse_stencil else None,
             use_pallas=True)
         Zhw2 = Zhw2k if prec is not None else st.Zhw
@@ -408,13 +450,14 @@ def plcg_scan(
 
 
 def plcg_jit(matvec, b, x0=None, *, l, iters, sigma, tol=0.0, prec=None,
-             exploit_symmetry: bool = True, unroll: int = 1,
+             prec_diag=None, exploit_symmetry: bool = True, unroll: int = 1,
              backend: Optional[str] = None,
              stencil_hw: Optional[tuple] = None) -> PLCGOut:
     """Convenience jitted single-device entry point."""
     fn = functools.partial(
         plcg_scan, matvec, l=l, iters=iters, sigma=tuple(sigma), tol=tol,
-        prec=prec, exploit_symmetry=exploit_symmetry, unroll=unroll,
+        prec=prec, prec_diag=prec_diag,
+        exploit_symmetry=exploit_symmetry, unroll=unroll,
         backend=backend, stencil_hw=stencil_hw)
     return jax.jit(lambda bb, xx: fn(bb, xx))(b, x0 if x0 is not None
                                               else jnp.zeros_like(b))
@@ -443,6 +486,9 @@ def _jitted_sweep(matvec, l, iters, sigma, tol, prec, exploit_symmetry,
         fn = functools.partial(
             plcg_scan, weakly_callable(matvec), l=l, iters=iters,
             sigma=sigma, tol=tol, prec=weakly_callable(prec),
+            # fusion hint of a structured Preconditioner (None for bare
+            # callables); the captured array does not pin the object
+            prec_diag=getattr(prec, "inv_diag", None),
             exploit_symmetry=exploit_symmetry, unroll=unroll,
             backend=backend, stencil_hw=stencil_hw)
         return jax.jit(lambda bb, xx, kb: fn(bb, xx, k_budget=kb))

@@ -7,7 +7,8 @@ through the registry front-end, ``repro.core.solve(A, b, mesh=...)``
 protocol plus the jittable sweep builders used for lowering, jaxpr
 introspection and benchmarking.
 """
-from .operator import DistPoisson, DistributedOperator, as_dist_operator
+from .operator import (DistPoisson, DistributedOperator, as_dist_operator,
+                       resolve_prec_local)
 from .plcg_dist import (cg_mesh_sweep, mesh_methods, plcg_mesh_sweep,
                         solve_on_mesh)
 
@@ -18,5 +19,6 @@ __all__ = [
     "cg_mesh_sweep",
     "mesh_methods",
     "plcg_mesh_sweep",
+    "resolve_prec_local",
     "solve_on_mesh",
 ]

@@ -10,7 +10,14 @@ solver engine injects into ``plcg_scan`` /  the distributed CG body:
   * ``spec()``         -- the :class:`PartitionSpec` of one global field;
   * ``dot_local``      -- a local partial inner product (no collective);
   * ``reduce_scalars`` -- the global sum of a stacked scalar payload (ONE
-    ``psum`` per call; the engine calls it exactly once per iteration).
+    ``psum`` per call; the engine calls it exactly once per iteration);
+  * ``prec_local``     -- (optional) resolve a structured
+    ``repro.core.precond.Preconditioner`` into its shard-local apply, or
+    None when that preconditioner has no communication-free form on this
+    operator.  :func:`resolve_prec_local` is the engine-side entry point
+    that falls back to ``M.local_apply(op)`` and raises the uniform
+    error; a resolved apply must never issue a global collective, which
+    is what keeps preconditioned mesh p(l)-CG at one psum per iteration.
 
 Anything implementing the protocol -- a 3-D stencil, an unstructured-grid
 operator with gather-based halos, a parameter-space Newton operator --
@@ -140,6 +147,38 @@ class DistPoisson:
 
     def reduce_scalars(self, payload: jax.Array) -> jax.Array:
         return jax.lax.psum(payload, self.axes)
+
+    def prec_local(self, M):
+        """Shard-local apply of a structured preconditioner, or None.
+
+        Delegates to ``M.local_apply(self)`` -- BlockJacobi blocks must
+        match this operator's processor grid (validated there), Jacobi
+        needs a constant diagonal, Chebyshev runs through
+        ``matvec_local`` (neighbor halos only).
+        """
+        return M.local_apply(self)
+
+
+def resolve_prec_local(op, M):
+    """Resolve ``M`` into a shard-local apply on ``op`` (engine entry).
+
+    ``None`` passes through.  Prefers the operator's ``prec_local`` hook,
+    falls back to ``M.local_apply(op)``; raises the uniform error when
+    neither yields a communication-free local apply (e.g. a bare ``M=``
+    callable, whose sharding the engine cannot know).
+    """
+    if M is None:
+        return None
+    hook = getattr(op, "prec_local", None)
+    fn = hook(M) if hook is not None else M.local_apply(op)
+    if fn is None:
+        raise ValueError(
+            f"preconditioner {getattr(M, 'name', M)!r} cannot be applied "
+            "shard-locally, so it has no mesh execution path; mesh-capable "
+            "preconditioners: repro.core.precond.BlockJacobi, Jacobi with "
+            "a constant diagonal, Chebyshev (a bare M= callable is opaque "
+            "to the mesh layer)")
+    return fn
 
 
 #: Canonical promotions, keyed weakly on the LinearOperator's matvec

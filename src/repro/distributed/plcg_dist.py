@@ -33,6 +33,14 @@ multi-solve workload of arXiv:1905.06850.  Convergence is masked per
 lane by the scan engine's commit select, identically to the
 single-device batched path.
 
+Preconditioning composes: a structured ``repro.core.precond``
+preconditioner with a shard-local apply (``BlockJacobi`` -- zero
+communication; ``Chebyshev`` -- neighbor halos only; constant-diagonal
+``Jacobi``) is resolved via ``operator.resolve_prec_local`` and applied
+inside the shard_map body, so preconditioned p(l)-CG keeps exactly ONE
+stacked psum per iteration (and preconditioned CG its two, by stacking
+``<r,u>``/``<r,r>`` into one payload).
+
 The injected local-partial dots bypass every kernel ``backend`` tier
 (including ``"fused"``) by construction -- the distributed hot path is
 the halo-exchange stencil kernel plus the collective schedule, not the
@@ -54,7 +62,8 @@ from repro.core.plcg_scan import plcg_scan, run_restart_driver
 from repro.core.results import SolveResult
 from repro.core.solver_cache import WeakCallableCache
 
-from .operator import DistributedOperator, as_dist_operator
+from .operator import (DistributedOperator, as_dist_operator,
+                       resolve_prec_local)
 
 #: Jitted mesh sweeps, keyed weakly on the operator (dropping the operator
 #: releases the compiled shard_map program).
@@ -98,9 +107,37 @@ def _shard_jit(op: DistributedOperator, one, *, batched: bool,
     return jax.jit(fn)
 
 
+def _weak_prec_resolver(op, prec):
+    """Trace-time shard-local resolution of ``prec`` on ``op`` (pass the
+    operator's ``weakref.proxy`` so neither object is pinned).
+
+    The returned thunk runs INSIDE the traced ``one`` body, so the
+    shard-local closure (which binds the preconditioner's arrays) lives
+    only for the duration of the trace -- the cached compiled program
+    never pins the Preconditioner object, exactly like the operator's
+    ``weakref.proxy``.  When the preconditioner died and a retrace is
+    attempted, this raises ``ReferenceError`` (and the weak cache key has
+    already evicted the entry).
+    """
+    if prec is None:
+        return lambda: None
+    mref = weakref.ref(prec)
+
+    def resolve():
+        M = mref()
+        if M is None:
+            raise ReferenceError(
+                "mesh preconditioner was garbage-collected; rebuild the "
+                "sweep (see repro.core.clear_solver_cache)")
+        return resolve_prec_local(op, M)
+
+    return resolve
+
+
 def plcg_mesh_sweep(op: DistributedOperator, *, l: int, iters: int,
                     sigma: Sequence[float], tol: float = 0.0,
-                    exploit_symmetry: bool = True, batched: bool = False):
+                    exploit_symmetry: bool = True, batched: bool = False,
+                    prec=None):
     """Build (cached) the jitted p(l)-CG mesh sweep.
 
     Returns a jitted callable ``(b, x0, k_budget) -> (x, resnorms,
@@ -108,10 +145,12 @@ def plcg_mesh_sweep(op: DistributedOperator, *, l: int, iters: int,
     of shape ``op.global_shape`` (``(nrhs, *global_shape)`` when
     ``batched``) and ``k_budget`` is the (traced) solution-update budget
     -- the restart driver passes the *remaining* global budget per sweep
-    so every sweep reuses ONE compiled program.  The traced program
-    contains exactly ONE ``psum`` in its scan body -- the structural
-    acceptance gate verified by
-    ``repro.kernels.introspect.count_primitive_in_scan_bodies``.
+    so every sweep reuses ONE compiled program.  ``prec`` is a structured
+    ``repro.core.precond.Preconditioner`` resolved shard-locally via
+    :func:`resolve_prec_local`; its apply is communication-free (or
+    neighbor-halo only), so the traced program STILL contains exactly ONE
+    ``psum`` in its scan body -- the structural acceptance gate verified
+    by ``repro.kernels.introspect.count_primitive_in_scan_bodies``.
     """
     sig = tuple(sigma)
 
@@ -120,11 +159,13 @@ def plcg_mesh_sweep(op: DistributedOperator, *, l: int, iters: int,
         # key holds it weakly and evicts on death): trace through a weak
         # proxy, like the single-device sweep's weakly_callable closures
         opref = weakref.proxy(op)
+        resolve = _weak_prec_resolver(opref, prec)
 
         def one(b_blk, x_blk, k_budget):
             out = plcg_scan(
                 opref.matvec_local, b_blk.reshape(-1), x_blk.reshape(-1),
                 l=l, iters=iters, sigma=sig, tol=tol,
+                prec=resolve(),
                 dot_local=opref.dot_local,
                 reduce_scalars=opref.reduce_scalars,
                 exploit_symmetry=exploit_symmetry, k_budget=k_budget,
@@ -136,60 +177,94 @@ def plcg_mesh_sweep(op: DistributedOperator, *, l: int, iters: int,
                           trace_event=lambda shape: ("plcg@mesh", shape, l))
 
     return _MESH_SWEEP_CACHE.get_or_build(
-        (op,), ("plcg", l, iters, sig, tol, exploit_symmetry, batched),
-        build)
+        (op, prec),
+        ("plcg", l, iters, sig, tol, exploit_symmetry, batched), build)
 
 
 def cg_mesh_sweep(op: DistributedOperator, *, iters: int, tol: float = 0.0,
-                  batched: bool = False):
+                  batched: bool = False, prec=None):
     """Build (cached) the jitted classic-CG mesh sweep (the two-psum
     baseline for the strong-scaling comparisons, paper Figs. 3-5).
 
     Same ``x0``/early-stop contract as the pipelined sweep: the initial
     guess seeds ``r0 = b - A x0``, converged state freezes through the
     ``done`` select, and the committed-update count ``k_done`` is
-    reported.  Returns a jitted callable ``(b, x0) -> (x, resnorms,
-    resnorm0, converged, k_done)``.
+    reported.  With ``prec`` (shard-local, see :func:`resolve_prec_local`)
+    this is preconditioned CG; the ``<r, u>`` and ``<r, r>`` reductions
+    ride ONE stacked psum so the per-iteration collective count stays at
+    the baseline's two.  Returns a jitted callable ``(b, x0) -> (x,
+    resnorms, resnorm0, converged, k_done)``.
     """
 
     def build():
         opref = weakref.proxy(op)       # see plcg_mesh_sweep
+        resolve = _weak_prec_resolver(opref, prec)
 
         def one(b_blk, x_blk):
+            plocal = resolve()
             bflat = b_blk.reshape(-1)
             bnorm2 = opref.reduce_scalars(opref.dot_local(bflat, bflat))
             bnorm2 = jnp.where(bnorm2 == 0, 1.0, bnorm2)
             r0 = bflat - opref.matvec_local(x_blk.reshape(-1))
-            gamma0 = opref.reduce_scalars(opref.dot_local(r0, r0))
-            done0 = gamma0 <= (tol ** 2) * bnorm2
+            if plocal is None:
+                gamma0 = opref.reduce_scalars(opref.dot_local(r0, r0))
+                rr0 = gamma0
+                u0 = r0
+            else:
+                u0 = plocal(r0)
+                pay0 = opref.reduce_scalars(jnp.stack(
+                    [opref.dot_local(r0, u0), opref.dot_local(r0, r0)]))
+                gamma0, rr0 = pay0[0], pay0[1]
+            done0 = rr0 <= (tol ** 2) * bnorm2
 
+            # the preconditioned carry adds rr = <r, r> (for the stopping
+            # test); the unpreconditioned carry stays identical to the
+            # two-psum baseline (there rr IS gamma)
             def body(st, _):
-                x, r, p, gamma, k, done = st
+                if plocal is None:
+                    x, r, p, gamma, k, done = st
+                    rr = gamma
+                else:
+                    x, r, p, gamma, rr, k, done = st
                 s = opref.matvec_local(p)
                 sp = opref.reduce_scalars(
                     opref.dot_local(s, p))                  # sync psum 1
                 alpha = gamma / sp
                 x2 = x + alpha * p
                 r2 = r - alpha * s
-                gamma2 = opref.reduce_scalars(
-                    opref.dot_local(r2, r2))                # sync psum 2
-                beta = gamma2 / gamma
-                p2 = r2 + beta * p
-                conv = gamma2 <= (tol ** 2) * bnorm2
-                new = (x2, r2, p2, gamma2, k + 1, done | conv)
+                if plocal is None:
+                    gamma2 = opref.reduce_scalars(
+                        opref.dot_local(r2, r2))            # sync psum 2
+                    rr2 = gamma2
+                    u2 = r2
+                else:
+                    u2 = plocal(r2)
+                    pay = opref.reduce_scalars(jnp.stack(
+                        [opref.dot_local(r2, u2),
+                         opref.dot_local(r2, r2)]))         # sync psum 2
+                    gamma2, rr2 = pay[0], pay[1]
+                p2 = u2 + (gamma2 / gamma) * p
+                conv = rr2 <= (tol ** 2) * bnorm2
+                if plocal is None:
+                    new = (x2, r2, p2, gamma2, k + 1, done | conv)
+                else:
+                    new = (x2, r2, p2, gamma2, rr2, k + 1, done | conv)
                 out = jax.tree.map(lambda a, o: jnp.where(done, o, a),
                                    new, st)
-                return out, jnp.sqrt(jnp.where(done, gamma, gamma2))
+                return out, jnp.sqrt(jnp.where(done, rr, rr2))
 
-            st0 = (x_blk.reshape(-1), r0, r0, gamma0, jnp.asarray(0), done0)
+            st0 = ((x_blk.reshape(-1), r0, u0, gamma0, jnp.asarray(0),
+                    done0) if plocal is None else
+                   (x_blk.reshape(-1), r0, u0, gamma0, rr0,
+                    jnp.asarray(0), done0))
             st, resn = jax.lax.scan(body, st0, jnp.arange(iters))
-            return (st[0].reshape(b_blk.shape), resn, jnp.sqrt(gamma0),
-                    st[5], st[4])
+            return (st[0].reshape(b_blk.shape), resn, jnp.sqrt(rr0),
+                    st[-1], st[-2])
 
         return _shard_jit(op, one, batched=batched)
 
     return _MESH_SWEEP_CACHE.get_or_build(
-        (op,), ("cg", iters, tol, batched), build)
+        (op, prec), ("cg", iters, tol, batched), build)
 
 
 # --------------------------------------------------------------------------
@@ -219,13 +294,14 @@ def _canonicalize_b(op: DistributedOperator, b, x0):
     return b, x0, batched, orig_shape
 
 
-def _mesh_plcg(op, b, x0, *, tol, maxiter, l, sigma,
+def _mesh_plcg(op, b, x0, *, tol, maxiter, l, sigma, prec=None,
                exploit_symmetry: bool = True,
                max_restarts=None) -> SolveResult:
     b, x0, batched, orig_shape = _canonicalize_b(op, b, x0)
     sig = tuple(sigma)
     base_info = {"l": l, "sigma": list(sig), "backend": None,
-                 "mesh": dict(op.mesh.shape), "psums_per_iter": 1}
+                 "mesh": dict(op.mesh.shape), "psums_per_iter": 1,
+                 "prec": getattr(prec, "name", None)}
 
     if batched:
         if max_restarts is not None:
@@ -240,7 +316,7 @@ def _mesh_plcg(op, b, x0, *, tol, maxiter, l, sigma,
         # path, so the budget is the non-binding maxiter + 1)
         fn = plcg_mesh_sweep(op, l=l, iters=maxiter + l + 1, sigma=sig,
                              tol=tol, exploit_symmetry=exploit_symmetry,
-                             batched=True)
+                             batched=True, prec=prec)
         out = fn(b, x0, maxiter + 1)
         x, resn, conv, brk, k_done = out
         resn = np.asarray(resn)                         # (nrhs, iters)
@@ -268,7 +344,8 @@ def _mesh_plcg(op, b, x0, *, tol, maxiter, l, sigma,
     # sweep -- the budget is a traced operand of ONE fixed-size compiled
     # program, so restarts never retrace/recompile the shard_map sweep.
     fn = plcg_mesh_sweep(op, l=l, iters=maxiter + l, sigma=sig,
-                         tol=tol, exploit_symmetry=exploit_symmetry)
+                         tol=tol, exploit_symmetry=exploit_symmetry,
+                         prec=prec)
     x, resnorms, info = run_restart_driver(
         fn, b, x0, tol=tol, maxiter=maxiter,
         max_restarts=5 if max_restarts is None else max_restarts,
@@ -281,12 +358,14 @@ def _mesh_plcg(op, b, x0, *, tol, maxiter, l, sigma,
     )
 
 
-def _mesh_cg(op, b, x0, *, tol, maxiter) -> SolveResult:
+def _mesh_cg(op, b, x0, *, tol, maxiter, prec=None) -> SolveResult:
     b, x0, batched, orig_shape = _canonicalize_b(op, b, x0)
-    fn = cg_mesh_sweep(op, iters=maxiter, tol=tol, batched=batched)
+    fn = cg_mesh_sweep(op, iters=maxiter, tol=tol, batched=batched,
+                       prec=prec)
     x, resn, resn0, conv, k_done = fn(b, x0)
     base_info = {"method": "cg[mesh]", "mesh": dict(op.mesh.shape),
-                 "psums_per_iter": 2}
+                 "psums_per_iter": 2,
+                 "prec": getattr(prec, "name", None)}
     if batched:
         resn = np.asarray(resn)
         resn0 = np.asarray(resn0)
@@ -309,7 +388,10 @@ def _mesh_cg(op, b, x0, *, tol, maxiter) -> SolveResult:
     )
 
 
-#: method name -> mesh adapter; every other registry method raises.
+#: method name -> mesh adapter.  The CAPABILITY lives in the registry
+#: (``MethodSpec.supports_mesh``, checked by ``solve()``); this dict is
+#: only the dispatch table, and a skew between the two raises loudly in
+#: :func:`solve_on_mesh` instead of producing a second error message.
 _MESH_METHODS = {
     "cg": _mesh_cg,
     "plcg": _mesh_plcg,
@@ -318,8 +400,9 @@ _MESH_METHODS = {
 
 
 def mesh_methods() -> tuple:
-    """Registry methods with a mesh-aware execution path."""
-    return tuple(sorted(_MESH_METHODS))
+    """Registry methods with a mesh-aware execution path (derived from
+    the ``supports_mesh`` capability flags -- single source of truth)."""
+    return _engine.methods_supporting("mesh")
 
 
 def solve_on_mesh(spec, A, b, *, mesh, x0, tol, maxiter, M, l, sigma,
@@ -327,20 +410,28 @@ def solve_on_mesh(spec, A, b, *, mesh, x0, tol, maxiter, M, l, sigma,
     """Mesh-aware dispatch behind ``repro.core.solve(..., mesh=...)``.
 
     ``A`` is coerced through :func:`as_dist_operator`; the method comes
-    from the same registry as the single-device path.  ``backend`` is
-    ignored here: the injected local-partial dots bypass every kernel
-    tier by construction (the hot path is the halo-exchange stencil plus
-    the collective schedule).
+    from the same registry as the single-device path (the front-end has
+    already enforced the ``supports_mesh`` capability flag).  ``M`` is a
+    normalized ``repro.core.precond.Preconditioner`` (or None) and is
+    resolved into its shard-local apply up front -- a preconditioner
+    without a communication-free local form raises here with the uniform
+    message.  ``backend`` is ignored: the injected local-partial dots
+    bypass every kernel tier by construction (the hot path is the
+    halo-exchange stencil plus the collective schedule).
     """
     if spec.name not in _MESH_METHODS:
+        if getattr(spec, "supports_mesh", False):
+            raise RuntimeError(
+                f"method {spec.name!r} declares supports_mesh=True but "
+                "has no adapter in distributed.plcg_dist._MESH_METHODS; "
+                "register one (the registry flag and the dispatch table "
+                "must move together)")
         raise ValueError(
             f"method {spec.name!r} has no mesh-aware execution path; "
             f"methods available on a mesh: {', '.join(mesh_methods())}")
-    if M is not None:
-        raise ValueError(
-            "mesh-aware dispatch does not support preconditioning yet "
-            "(M must be applied shard-locally; see ROADMAP)")
     op = as_dist_operator(A, mesh)
+    if M is not None:
+        resolve_prec_local(op, M)      # early, uniform validation
     if spec.name == "cg":
         # same contract as the single-device cg adapter: l/sigma/spectrum
         # are pipelined-method knobs and are ignored (not validated)
@@ -348,7 +439,7 @@ def solve_on_mesh(spec, A, b, *, mesh, x0, tol, maxiter, M, l, sigma,
             raise ValueError(
                 f"options {sorted(options)} are not supported by the "
                 "mesh-aware cg path")
-        return _mesh_cg(op, b, x0, tol=tol, maxiter=maxiter)
+        return _mesh_cg(op, b, x0, tol=tol, maxiter=maxiter, prec=M)
     allowed = {"exploit_symmetry", "max_restarts"}
     if set(options) - allowed:
         raise ValueError(
@@ -356,4 +447,4 @@ def solve_on_mesh(spec, A, b, *, mesh, x0, tol, maxiter, M, l, sigma,
             f"by the mesh-aware {spec.name} path")
     sig = tuple(_engine._resolve_sigma(sigma, spectrum, l))
     return _MESH_METHODS[spec.name](op, b, x0, tol=tol, maxiter=maxiter,
-                                    l=l, sigma=sig, **options)
+                                    l=l, sigma=sig, prec=M, **options)

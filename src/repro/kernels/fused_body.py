@@ -3,9 +3,14 @@
 One launch per iteration computes everything in the scan body that touches
 an n-vector (paper arXiv:1801.04728 Alg. 3):
 
-* **(K1)** the 5-point stencil SPMV ``t = A z_i`` -- fused in-kernel when
-  the operator is the paper's 2-D Poisson stencil (``stencil_hw`` given,
-  no preconditioner); otherwise ``t`` (and ``t_hat``) stream in as inputs;
+* **(K1)** the 5-point stencil SPMV ``t_hat = A z_i`` -- fused in-kernel
+  when the operator is the paper's 2-D Poisson stencil (``stencil_hw``
+  given); otherwise ``t`` (and ``t_hat``) stream in as inputs.  A
+  *diagonal* preconditioner apply ``t = M^{-1} t_hat`` (the ``inv_diag``
+  hint of ``repro.core.precond.Jacobi``) also runs in-kernel -- a scalar
+  inverse diagonal rides the packed scalar operand, a vector one streams
+  as an ``(n, 1)`` operand -- so preconditioned p(l)-CG keeps ONE launch
+  per steady-state iteration;
 * **(K4)** the sliding-window AXPY recurrences: the new basis vector
   ``v_c = (z_{c-l} - sum_k g_k v_{c-2l+k}) / g_cc``, the new auxiliary
   vector ``z_{i+1} = (t - gamma z_i - delta z_{i-1}) / delta'`` (and the
@@ -45,13 +50,15 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-#: scal layout: [steady, s_warm, gam, dlt, dsub, gcc, g_0 .. g_{2l-1}]
-N_FIXED_SCALARS = 6
+#: scal layout: [steady, s_warm, gam, dlt, dsub, gcc, invd, g_0 .. g_{2l-1}]
+#: (invd is the scalar inverse diagonal for diag="scalar", else unused)
+N_FIXED_SCALARS = 7
 
 
-def _make_kernel(l: int, has_zh: bool, has_stencil: bool, nblocks: int,
-                 acc):
+def _make_kernel(l: int, has_zh: bool, has_stencil: bool, diag: str,
+                 nblocks: int, acc):
     m = 2 * l + 1
+    has_diag = diag != "none"
 
     def kernel(*refs):
         it = iter(refs)
@@ -59,8 +66,11 @@ def _make_kernel(l: int, has_zh: bool, has_stencil: bool, nblocks: int,
         v_ref = next(it)
         z_ref = next(it)
         zh_ref = next(it) if has_zh else None
+        invd_ref = next(it) if diag == "vector" else None
         if has_stencil:
             zp_ref, zc_ref, zn_ref = next(it), next(it), next(it)
+        elif has_diag:
+            th_ref = next(it)                   # t computed in-kernel
         else:
             t_ref = next(it)
             th_ref = next(it) if has_zh else None
@@ -70,7 +80,7 @@ def _make_kernel(l: int, has_zh: bool, has_stencil: bool, nblocks: int,
         d_ref = next(it)
 
         i = pl.program_id(0)
-        scal = scal_ref[...].astype(acc)            # (1, 6 + 2l)
+        scal = scal_ref[...].astype(acc)            # (1, 7 + 2l)
         steady = scal[0, 0] > 0.5
         s_warm, gam, dlt = scal[0, 1], scal[0, 2], scal[0, 3]
         dsub, gcc = scal[0, 4], scal[0, 5]
@@ -91,8 +101,17 @@ def _make_kernel(l: int, has_zh: bool, has_stencil: bool, nblocks: int,
             zc_col = jnp.zeros_like(xc[:, :1])      # Dirichlet halos
             left = jnp.concatenate([zc_col, xc[:, :-1]], axis=1)
             right = jnp.concatenate([xc[:, 1:], zc_col], axis=1)
-            t = (4.0 * xc - up - down - left - right).reshape(-1, 1)
-            th = t
+            traw = (4.0 * xc - up - down - left - right).reshape(-1, 1)
+        elif has_diag:
+            traw = th_ref[...].astype(acc)          # (bs, 1)
+        if has_diag:
+            # in-kernel diagonal preconditioner: t = M^{-1} t_hat
+            th = traw
+            iv = (scal[0, 6] if diag == "scalar"
+                  else invd_ref[...].astype(acc))
+            t = iv * traw
+        elif has_stencil:
+            t = th = traw
         else:
             t = t_ref[...].astype(acc)              # (bs, 1)
             th = th_ref[...].astype(acc) if has_zh else t
@@ -133,22 +152,29 @@ def _make_kernel(l: int, has_zh: bool, has_stencil: bool, nblocks: int,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("l", "stencil_hw", "bn", "interpret"))
-def fused_body(Vw, Zw, scal, Zhw=None, t=None, t_hat=None, *, l: int,
-               stencil_hw=None, bn: int = 2048,
+                   static_argnames=("l", "stencil_hw", "diag", "bn",
+                                    "interpret"))
+def fused_body(Vw, Zw, scal, Zhw=None, t=None, t_hat=None, invd=None, *,
+               l: int, stencil_hw=None, diag: str = "none", bn: int = 2048,
                interpret: bool | None = None):
     """One fused p(l)-CG body step on lane-major windows.
 
     Args:
       Vw: (n, 2l+1) basis window, slot 0 newest.
       Zw: (n, l+1) auxiliary window, slot 0 newest.
-      scal: (1, 6+2l) packed scalars
-        ``[steady, s_warm, gam, dlt, dsub, gcc, g...]``.
+      scal: (1, 7+2l) packed scalars
+        ``[steady, s_warm, gam, dlt, dsub, gcc, invd, g...]`` (the invd
+        slot carries the scalar inverse diagonal for ``diag="scalar"``).
       Zhw: (n, 3) zhat window (preconditioned runs) or None.
-      t: (n,) preconditioned SPMV result; None fuses the 5-point stencil
-        in-kernel (requires ``stencil_hw`` and no ``Zhw``).
-      t_hat: (n,) unpreconditioned SPMV result (required with ``Zhw``).
-      stencil_hw: (H, W) 2-D grid shape of the Poisson domain.
+      t: (n,) preconditioned SPMV result; None computes it in-kernel
+        (from the fused 5-point stencil and/or the diagonal apply).
+      t_hat: (n,) unpreconditioned SPMV result (required with ``Zhw``
+        unless the stencil is fused in-kernel).
+      invd: (n, 1) inverse diagonal operand for ``diag="vector"``.
+      stencil_hw: (H, W) 2-D grid shape of the Poisson domain; set =>
+        the (K1) SPMV runs in-kernel.
+      diag: "none" | "scalar" | "vector" -- in-kernel diagonal
+        preconditioner mode (requires ``Zhw``).
       bn: row-block size (rounded down to divide n; with the stencil
         fused, blocks are whole grid rows, ``bn // W`` of them).
 
@@ -160,10 +186,25 @@ def fused_body(Vw, Zw, scal, Zhw=None, t=None, t_hat=None, *, l: int,
     if m != 2 * l + 1:
         raise ValueError(f"Vw must be (n, 2l+1), got {Vw.shape} for l={l}")
     has_zh = Zhw is not None
-    has_stencil = t is None
+    has_stencil = stencil_hw is not None
+    has_diag = diag != "none"
+    if has_diag and not has_zh:
+        raise ValueError("in-kernel diag preconditioner needs the Zhw "
+                         "window")
+    if has_stencil and has_zh and not has_diag:
+        raise ValueError("in-kernel SPMV with a preconditioner requires "
+                         "the diag mode (general prec => stream t/t_hat)")
+    if has_stencil or has_diag:
+        if t is not None:
+            raise ValueError("t is computed in-kernel with the stencil/"
+                             "diag fused; pass t=None")
+    elif t is None:
+        raise ValueError("with nothing fused in-kernel (no stencil_hw, "
+                         "diag='none') the streamed t operand is required")
+    if has_diag and not has_stencil and t_hat is None:
+        raise ValueError("the in-kernel diag apply needs the streamed "
+                         "t_hat operand when the stencil is not fused")
     if has_stencil:
-        if stencil_hw is None or has_zh:
-            raise ValueError("in-kernel SPMV needs stencil_hw and no Zhw")
         H, W2d = stencil_hw
         if H * W2d != n:
             raise ValueError(f"stencil_hw {stencil_hw} != n={n}")
@@ -190,6 +231,9 @@ def fused_body(Vw, Zw, scal, Zhw=None, t=None, t_hat=None, *, l: int,
     if has_zh:
         in_specs.append(pl.BlockSpec((bs, 3), row))
         operands.append(Zhw)
+    if diag == "vector":
+        in_specs.append(pl.BlockSpec((bs, 1), row))
+        operands.append(invd.reshape(n, 1))
     if has_stencil:
         z2d = Zw[:, 0].reshape(H, W2d)
         in_specs += [
@@ -199,6 +243,9 @@ def fused_body(Vw, Zw, scal, Zhw=None, t=None, t_hat=None, *, l: int,
                          lambda i: (jnp.minimum(i + 1, nblocks - 1), 0)),
         ]
         operands += [z2d, z2d, z2d]
+    elif has_diag:
+        in_specs.append(pl.BlockSpec((bs, 1), row))
+        operands.append(t_hat.reshape(n, 1))
     else:
         in_specs.append(pl.BlockSpec((bs, 1), row))
         operands.append(t.reshape(n, 1))
@@ -217,7 +264,7 @@ def fused_body(Vw, Zw, scal, Zhw=None, t=None, t_hat=None, *, l: int,
     out_shape.append(jax.ShapeDtypeStruct((1, m), acc))
 
     outs = pl.pallas_call(
-        _make_kernel(l, has_zh, has_stencil, nblocks, acc),
+        _make_kernel(l, has_zh, has_stencil, diag, nblocks, acc),
         grid=(nblocks,),
         in_specs=in_specs,
         out_specs=out_specs,

@@ -82,25 +82,35 @@ def window_axpy_apply(V, z, g, gcc, *, use_pallas=None):
 
 
 def fused_body_apply(Vw, Zw, Zhw, t, t_hat, *, l, steady, s_warm, gam, dlt,
-                     dsub, gcc, g, stencil_hw=None, use_pallas=None):
+                     dsub, gcc, g, invd=None, stencil_hw=None,
+                     use_pallas=None):
     """Dispatch one fused p(l)-CG body step (see ``fused_body``).
 
-    Scalars (``steady`` .. ``gcc`` plus the 2l band coefficients ``g``)
-    are packed into one (1, 6+2l) operand so the kernel signature stays
-    static across iterations.
+    Scalars (``steady`` .. ``gcc``, the scalar inverse diagonal when
+    ``invd`` is 0-d, plus the 2l band coefficients ``g``) are packed into
+    one (1, 7+2l) operand so the kernel signature stays static across
+    iterations.  ``invd`` (scalar or ``(n,)``) folds a diagonal
+    preconditioner apply into the kernel; a general preconditioner
+    instead streams its externally computed ``t``.
     """
     if use_pallas is None:
         use_pallas = jax.default_backend() == "tpu"
     if not use_pallas:
         return ref.fused_body_ref(Vw, Zw, Zhw, t, t_hat, l=l, steady=steady,
                                   s_warm=s_warm, gam=gam, dlt=dlt, dsub=dsub,
-                                  gcc=gcc, g=g, stencil_hw=stencil_hw)
+                                  gcc=gcc, g=g, invd=invd,
+                                  stencil_hw=stencil_hw)
     acc = jnp.promote_types(Vw.dtype, jnp.float32)
+    invd = None if invd is None else jnp.asarray(invd)
+    diag = ("none" if invd is None
+            else ("scalar" if invd.ndim == 0 else "vector"))
+    invd_s = invd if diag == "scalar" else jnp.zeros((), acc)
     scal = jnp.concatenate([
         jnp.stack([jnp.where(steady, 1.0, 0.0).astype(acc),
                    s_warm.astype(acc), gam.astype(acc), dlt.astype(acc),
-                   dsub.astype(acc), gcc.astype(acc)]),
+                   dsub.astype(acc), gcc.astype(acc), invd_s.astype(acc)]),
         g.astype(acc),
     ]).reshape(1, N_FIXED_SCALARS + 2 * l)
-    return fused_body(Vw, Zw, scal, Zhw, t, t_hat, l=l,
-                      stencil_hw=stencil_hw)
+    return fused_body(Vw, Zw, scal, Zhw, t, t_hat,
+                      invd if diag == "vector" else None, l=l,
+                      stencil_hw=stencil_hw, diag=diag)

@@ -46,24 +46,29 @@ def window_axpy_ref(V, z, g, gcc):
 
 
 def fused_body_ref(Vw, Zw, Zhw, t, t_hat, *, l, steady, s_warm, gam, dlt,
-                   dsub, gcc, g, stencil_hw=None):
+                   dsub, gcc, g, invd=None, stencil_hw=None):
     """jnp oracle of the fused p(l)-CG body megakernel.
 
     Same contract as ``fused_body`` (lane-major windows, in-body warmup
-    select, payload dots against the updated windows); ``t=None`` applies
-    the 5-point Dirichlet stencil to ``Zw[:, 0]`` reshaped to
-    ``stencil_hw``.  Returns (Vw2, Zw2, Zhw2 | None, dots).
+    select, payload dots against the updated windows); with
+    ``stencil_hw`` the 5-point Dirichlet stencil is applied to
+    ``Zw[:, 0]`` in place of a streamed ``t_hat``, and ``invd`` (scalar
+    or ``(n,)``) applies the in-body diagonal preconditioner
+    ``t = invd * t_hat``.  Returns (Vw2, Zw2, Zhw2 | None, dots).
     """
     acc = jnp.promote_types(Vw.dtype, jnp.float32)
     V = Vw.astype(acc)
     Z = Zw.astype(acc)
-    if t is None:
+    if t is None and stencil_hw is not None:
         H, W2d = stencil_hw
         x = Z[:, 0].reshape(H, W2d)
         zr = jnp.zeros_like
-        t = stencil2d_ref(x, zr(x[0]), zr(x[0]), zr(x[:, 0]),
-                          zr(x[:, 0])).reshape(-1)
-        t_hat = t
+        t_hat = stencil2d_ref(x, zr(x[0]), zr(x[0]), zr(x[:, 0]),
+                              zr(x[:, 0])).reshape(-1)
+        t = t_hat
+    if invd is not None:
+        iv = jnp.asarray(invd, acc)
+        t = (iv if iv.ndim == 0 else iv.reshape(-1)) * t_hat.astype(acc)
     t = t.astype(acc)[:, None]
     vnew = (Z[:, l - 1:l]
             - (V[:, :2 * l] * g.astype(acc)[None, :]).sum(

@@ -16,14 +16,18 @@ import numpy as np
 from scipy.linalg import solve_triangular
 
 from ..core.linop import LinearOperator, Preconditioner
+from ..core.precond import Jacobi
 
 
-def jacobi(A: LinearOperator) -> Preconditioner:
-    """Diagonal (Jacobi) preconditioner M = diag(A)."""
-    if A.diag is None:
-        raise ValueError("operator exposes no diagonal")
-    inv = 1.0 / np.asarray(A.diag)
-    return Preconditioner(apply=lambda v: v * inv, name="jacobi")
+def jacobi(A: LinearOperator) -> Jacobi:
+    """Diagonal (Jacobi) preconditioner M = diag(A).
+
+    Returns the structured ``repro.core.precond.Jacobi``: it carries the
+    ``inv_diag`` fusion hint (the fused scan backend keeps ONE Pallas
+    launch per iteration) and, for a constant diagonal, the shard-local
+    apply that makes it mesh-capable.
+    """
+    return Jacobi.from_operator(A)
 
 
 def block_jacobi_ssor(

@@ -315,6 +315,8 @@ def test_dist_solvers_only_reachable_through_front_end():
     b = np.asarray(A @ np.ones(A.n)).reshape(8, 8)
     with pytest.raises(ValueError, match="no mesh-aware execution path"):
         solve(A, b, method="pcg", mesh=mesh)
+    # a bare M= callable is opaque to the mesh layer (structured
+    # shard-local preconditioners work -- see tests/test_precond.py)
     with pytest.raises(ValueError, match="precondition"):
         solve(A, b, method="plcg_scan", mesh=mesh, M=lambda v: v)
     with pytest.raises(ValueError, match="options"):

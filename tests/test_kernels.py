@@ -154,12 +154,15 @@ def _fused_inputs(l, n, dtype, prec=False):
     return Vw, Zw, Zhw, t, th, scalars
 
 
-def _pack_scal(steady, scalars, l, dtype):
+def _pack_scal(steady, scalars, l, dtype, invd_s=0.0):
+    # layout must match fused_body.N_FIXED_SCALARS (incl. the scalar
+    # inverse-diagonal slot of the fused preconditioner apply)
     return jnp.concatenate([
         jnp.stack([jnp.asarray(1.0 if steady else 0.0, dtype),
                    scalars["s_warm"], scalars["gam"], scalars["dlt"],
-                   scalars["dsub"], scalars["gcc"]]),
-        scalars["g"]]).reshape(1, 6 + 2 * l).astype(dtype)
+                   scalars["dsub"], scalars["gcc"],
+                   jnp.asarray(invd_s, dtype)]),
+        scalars["g"]]).reshape(1, 7 + 2 * l).astype(dtype)
 
 
 @pytest.mark.parametrize("l", [1, 2, 4])
@@ -199,6 +202,42 @@ def test_fused_body_in_kernel_stencil(hw):
             continue
         np.testing.assert_allclose(np.asarray(a, np.float32),
                                    np.asarray(b, np.float32), atol=2e-4)
+
+
+@pytest.mark.parametrize("mode", ["scalar", "vector"])
+@pytest.mark.parametrize("stencil", [False, True])
+def test_fused_body_diag_preconditioner(mode, stencil):
+    """The in-kernel diagonal preconditioner apply (scalar slot or (n, 1)
+    operand), with and without the fused stencil SPMV, matches the oracle
+    that applies t = invd * t_hat."""
+    H, W = 16, 128
+    l, n, dtype = 2, H * W, jnp.float32
+    Vw, Zw, Zhw, t, th, scalars = _fused_inputs(l, n, dtype, prec=True)
+    if mode == "scalar":
+        invd = jnp.asarray(0.25, dtype)
+        scal = _pack_scal(True, scalars, l, dtype, invd_s=0.25)
+        vec = None
+    else:
+        invd = 1.0 / jnp.linspace(3.5, 4.5, n).astype(dtype)
+        scal = _pack_scal(True, scalars, l, dtype)
+        vec = invd.reshape(n, 1)
+    if stencil:
+        got = fused_body(Vw, Zw, scal, Zhw, None, None, vec, l=l,
+                         stencil_hw=(H, W), diag=mode, bn=4 * W,
+                         interpret=True)
+        want = ref.fused_body_ref(Vw, Zw, Zhw, None, None, l=l,
+                                  steady=jnp.bool_(True), invd=invd,
+                                  stencil_hw=(H, W), **scalars)
+    else:
+        got = fused_body(Vw, Zw, scal, Zhw, None, th, vec, l=l,
+                         diag=mode, bn=512, interpret=True)
+        want = ref.fused_body_ref(Vw, Zw, Zhw, None, th, l=l,
+                                  steady=jnp.bool_(True), invd=invd,
+                                  **scalars)
+    for lab, a, b in zip(("Vw2", "Zw2", "Zhw2", "dots"), got, want):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=2e-4,
+                                   err_msg=lab)
 
 
 def test_fused_body_batches_to_one_launch():

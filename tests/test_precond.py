@@ -1,0 +1,449 @@
+"""Preconditioning as a first-class layer (paper Sec. 6, Alg. 4).
+
+Covers the `repro.core.precond` protocol end to end: promotion and the
+Identity collapse, the registry capability flags (uniform M=/mesh=
+errors), Jacobi/BlockJacobi/Chebyshev numerics, the diag-fused Pallas
+megakernel gate (ONE launch per steady-state body with a Jacobi prec),
+the mesh execution path (shard-local applies, still exactly ONE stacked
+psum per iteration, single-device parity), solver-cache eviction when a
+Preconditioner object dies (extending the PR-3 reentrant `_on_death`
+fix), and the residual-gap diagnostics of arXiv:1804.02962.
+
+Multi-device coverage: `test_mesh_blockjacobi_parity_on_available_devices`
+runs a live (2, 2) decomposition when the main process has >= 4 devices
+(the CI preconditioned lane forces 4 via XLA_FLAGS) and skips elsewhere;
+every other test runs in-process on a (1, 1) mesh, where collective
+semantics are identical.
+"""
+import gc
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (BlockJacobi, Chebyshev, Identity, Jacobi,
+                        as_preconditioner, methods_supporting,
+                        residual_gap, solve)
+from repro.core.precond import (Preconditioner, _block_stencil5,
+                                chebyshev_inverse_apply)
+from repro.core.shifts import chebyshev_shifts
+from repro.launch.mesh import make_mesh_compat
+from repro.operators import poisson2d
+from repro.operators.precond import jacobi
+
+
+@pytest.fixture(scope="module", autouse=True)
+def x64_mod():
+    old = jax.config.jax_enable_x64
+    jax.config.update("jax_enable_x64", True)
+    yield
+    jax.config.update("jax_enable_x64", old)
+
+
+@pytest.fixture(scope="module")
+def poisson():
+    A = poisson2d(32, 32)
+    b = np.asarray(A @ np.ones(A.n))
+    return A, b
+
+
+@pytest.fixture(scope="module")
+def mesh11():
+    return make_mesh_compat((1, 1), ("data", "model"))
+
+
+# ----------------------- protocol & promotion -----------------------------
+
+def test_identity_collapse_and_promotion(poisson):
+    """M=None, M=Identity() and a bare identity callable are the same
+    solve: the engines collapse the identity into the cheap
+    unpreconditioned pipeline (3l+2, not 3l+5, vectors)."""
+    A, b = poisson
+    assert as_preconditioner(None).is_identity
+    assert as_preconditioner(None).runtime() is None
+    assert as_preconditioner(Identity()).runtime() is None
+    M = as_preconditioner(lambda v: v * 1.0)
+    assert isinstance(M, Preconditioner) and not M.is_identity
+    kw = dict(method="plcg_scan", l=2, tol=1e-10, maxiter=200,
+              spectrum=(0.0, 8.0))
+    r0 = solve(A, b, **kw)
+    r1 = solve(A, b, M=Identity(), **kw)
+    assert r0.iters == r1.iters
+    assert np.allclose(np.asarray(r0.x), np.asarray(r1.x), atol=0)
+    with pytest.raises(TypeError, match="preconditioner"):
+        as_preconditioner(42)
+
+
+def test_legacy_dataclass_preconditioner_still_dispatches(poisson):
+    """The pre-refactor linop.Preconditioner dataclass (still returned by
+    operators.block_jacobi_ssor) promotes through as_preconditioner."""
+    from repro.core.linop import Preconditioner as LegacyPrec
+    A, b = poisson
+    legacy = LegacyPrec(apply=lambda v: v / 4.0, name="legacy")
+    r = solve(A, b, method="cg", tol=1e-10, maxiter=400, M=legacy)
+    assert r.converged
+
+
+# -------------------------- capability flags ------------------------------
+
+def test_registry_capability_flags():
+    assert methods_supporting("M") == ("cg", "dlanczos", "pcg", "plcg",
+                                       "plcg_scan")
+    assert methods_supporting("mesh") == ("cg", "plcg", "plcg_scan")
+
+
+def test_uniform_M_rejection_lists_supporting_methods(poisson):
+    A, b = poisson
+    with pytest.raises(ValueError, match=r"plminres.*does not support "
+                                         r"preconditioning"):
+        solve(A, b, method="plminres", M=lambda v: v)
+    # the message documents the alternatives
+    with pytest.raises(ValueError, match="cg, dlanczos, pcg, plcg, "
+                                         "plcg_scan"):
+        solve(A, b, method="plminres", M=lambda v: v)
+    # Identity does NOT trip the flag: it is the unpreconditioned solve
+    r = solve(A, b, method="plminres", l=2, tol=1e-8, maxiter=150,
+              M=Identity(), spectrum=(0.0, 8.0))
+    assert r.info["method"]
+    # direct registry invocation (bypassing solve) must not silently
+    # drop M either
+    from repro.core import get_method
+    with pytest.raises(ValueError, match="plminres does not support"):
+        get_method("plminres").fn(A, b, M=lambda v: v)
+
+
+def test_uniform_mesh_rejection_lists_mesh_methods(poisson, mesh11):
+    A, b = poisson
+    for m in ("pcg", "dlanczos", "plminres"):
+        with pytest.raises(ValueError, match="no mesh-aware execution "
+                                             "path.*cg, plcg, plcg_scan"):
+            solve(A, b.reshape(32, 32), method=m, mesh=mesh11)
+
+
+def test_opaque_callable_rejected_on_mesh_with_uniform_message(poisson,
+                                                               mesh11):
+    A, b = poisson
+    with pytest.raises(ValueError, match="shard-local.*BlockJacobi"):
+        solve(A, b.reshape(32, 32), method="plcg_scan", mesh=mesh11,
+              M=lambda v: v / 4.0)
+    # vector-diagonal Jacobi has no sharding metadata either
+    with pytest.raises(ValueError, match="shard-local"):
+        solve(A, b.reshape(32, 32), method="cg", mesh=mesh11,
+              M=Jacobi(np.linspace(3.5, 4.5, A.n)))
+
+
+# ------------------------------ Jacobi ------------------------------------
+
+def test_jacobi_structure_and_defaults(poisson):
+    A, b = poisson
+    M = jacobi(A)                       # operators facade -> core.Jacobi
+    assert isinstance(M, Jacobi)
+    assert M.inv_diag == 0.25           # constant Poisson diagonal
+    assert np.allclose(np.asarray(M(b)), b / 4.0)
+    assert M.precond_spectrum((0.0, 8.0)) == (0.0, 2.0)
+    # engine default: sigma comes from the preconditioned interval
+    r = solve(A, b, method="plcg_scan", l=2, tol=1e-10, maxiter=300, M=M)
+    assert r.converged
+    assert max(r.info["sigma"]) < 2.0
+    assert r.info["prec"] == M.name
+    assert np.linalg.norm(b - np.asarray(A @ np.asarray(r.x))) < 5e-8
+
+
+# ---------------------------- BlockJacobi ---------------------------------
+
+def test_blockjacobi_is_spd_and_blockwise(poisson):
+    A, b = poisson
+    M = BlockJacobi((32, 32), blocks=(2, 2), degree=3)
+    rng = np.random.default_rng(0)
+    u, w = rng.standard_normal(A.n), rng.standard_normal(A.n)
+    # symmetry in exact blocks
+    assert abs(np.vdot(np.asarray(M(u)), w)
+               - np.vdot(u, np.asarray(M(w)))) < 1e-12
+    # positive definiteness on samples
+    for _ in range(4):
+        v = rng.standard_normal(A.n)
+        assert float(np.vdot(v, np.asarray(M(v)))) > 0
+    # blockwise apply == per-block Chebyshev inverse of the local stencil
+    g = u.reshape(32, 32)
+    blk = jnp.asarray(g[:16, :16])
+    want = chebyshev_inverse_apply(_block_stencil5, blk, M._shifts)
+    got = np.asarray(M(u)).reshape(32, 32)[:16, :16]
+    np.testing.assert_allclose(got, np.asarray(want), rtol=1e-13)
+
+
+def test_blockjacobi_block_grid_must_match_mesh(poisson, mesh11):
+    A, b = poisson
+    M = BlockJacobi((32, 32), blocks=(4, 1), degree=3)
+    with pytest.raises(ValueError, match="processor grid"):
+        solve(A, b.reshape(32, 32), method="plcg_scan", mesh=mesh11, M=M)
+
+
+# -------------------- acceptance: preconditioned mesh ---------------------
+
+def test_mesh_blockjacobi_matches_single_device_and_wins(poisson, mesh11):
+    """ISSUE acceptance: solve(A, b, mesh=..., M=BlockJacobi(...))
+    converges in fewer iterations than unpreconditioned on the Poisson
+    benchmark and matches the single-device preconditioned plcg_scan
+    result to <= 1e-10 relative (f64)."""
+    A, b = poisson
+    M = BlockJacobi.for_mesh(A, mesh11, degree=4)
+    kw = dict(method="plcg_scan", l=2, tol=1e-10, maxiter=300)
+    r_none = solve(A, b.reshape(32, 32), mesh=mesh11,
+                   spectrum=(0.0, 8.0), **kw)
+    r_mesh = solve(A, b.reshape(32, 32), mesh=mesh11, M=M, **kw)
+    r_single = solve(A, b, M=M, **kw)
+    assert r_mesh.converged and r_single.converged
+    assert r_mesh.iters < r_none.iters          # preconditioning wins
+    xm = np.asarray(r_mesh.x).reshape(-1)
+    xs = np.asarray(r_single.x)
+    assert (np.linalg.norm(xm - xs) <= 1e-10 * np.linalg.norm(xs))
+    assert r_mesh.info["psums_per_iter"] == 1
+    assert r_mesh.info["prec"] == M.name
+
+
+def test_mesh_batched_preconditioned_matches_batched_engine(poisson,
+                                                            mesh11):
+    """(nrhs, nx, ny) + BlockJacobi: RHS vmap outside, shard-local prec
+    inside, ONE stacked psum; parity vs the single-device batched
+    engine."""
+    A, _ = poisson
+    M = BlockJacobi.for_mesh(A, mesh11, degree=4)
+    rng = np.random.default_rng(1)
+    B = np.stack([np.asarray(A @ rng.standard_normal(A.n))
+                  for _ in range(3)])
+    kw = dict(method="plcg_scan", l=2, tol=1e-10, maxiter=300, M=M)
+    ref = solve(A, B, **kw)
+    r = solve(A, B.reshape(3, 32, 32), mesh=mesh11, **kw)
+    assert r.converged
+    xm = np.asarray(r.x).reshape(3, -1)
+    for j in range(3):
+        xs = np.asarray(ref.x)[j]
+        assert np.linalg.norm(xm[j] - xs) <= 1e-10 * np.linalg.norm(xs)
+    assert r.info["batched"] == "shard_map+vmap"
+    assert r.info["psums_per_iter"] == 1
+
+
+def test_mesh_blockjacobi_parity_on_available_devices(poisson):
+    """CI preconditioned lane: on >= 4 host devices, a REAL (2, 2)
+    decomposition with shard-local BlockJacobi -- live halo pairs,
+    partial dots, one stacked psum -- matches the single-device
+    preconditioned engine to <= 1e-10."""
+    if len(jax.devices()) < 4:
+        pytest.skip("needs >= 4 host devices (CI prec lane forces 4)")
+    A, b = poisson
+    mesh = make_mesh_compat((2, 2), ("data", "model"))
+    M = BlockJacobi.for_mesh(A, mesh, degree=4)
+    kw = dict(method="plcg_scan", l=2, tol=1e-10, maxiter=300, M=M)
+    r_mesh = solve(A, b.reshape(32, 32), mesh=mesh, **kw)
+    r_single = solve(A, b, **kw)
+    assert r_mesh.converged
+    xm = np.asarray(r_mesh.x).reshape(-1)
+    xs = np.asarray(r_single.x)
+    assert np.linalg.norm(xm - xs) <= 1e-10 * np.linalg.norm(xs)
+
+
+def test_one_psum_per_iteration_with_preconditioner(mesh11):
+    """Structural jaxpr gate: the preconditioned pipelined sweep still
+    carries exactly ONE psum per scan iteration (BlockJacobi adds zero
+    collectives; Chebyshev adds halo ppermutes only), and preconditioned
+    mesh CG stays at the baseline's two."""
+    from repro.distributed import (DistPoisson, cg_mesh_sweep,
+                                   plcg_mesh_sweep)
+    from repro.kernels.introspect import count_primitive_in_scan_bodies
+
+    op = DistPoisson(16, 16, mesh11)
+    sig = tuple(chebyshev_shifts(0, 1.3, 2))
+    b = jnp.ones((16, 16))
+    b3 = jnp.ones((3, 16, 16))
+    M = BlockJacobi((16, 16), blocks=(1, 1), degree=3)
+    fp = plcg_mesh_sweep(op, l=2, iters=30, sigma=sig, tol=1e-8, prec=M)
+    assert count_primitive_in_scan_bodies(fp, "psum", b, b * 0, 30) == [1]
+    assert count_primitive_in_scan_bodies(fp, "ppermute",
+                                          b, b * 0, 30) == [4]
+    fb = plcg_mesh_sweep(op, l=2, iters=30, sigma=sig, tol=1e-8, prec=M,
+                         batched=True)
+    assert count_primitive_in_scan_bodies(fb, "psum",
+                                          b3, b3 * 0, 30) == [1]
+    C = Chebyshev(op, spectrum=(0.5, 8.0), degree=3)
+    fc = plcg_mesh_sweep(op, l=2, iters=30, sigma=sig, tol=1e-8, prec=C)
+    assert count_primitive_in_scan_bodies(fc, "psum", b, b * 0, 30) == [1]
+    # degree-1 = 2 extra local SPMVs -> 4 ppermutes each, neighbor only
+    assert count_primitive_in_scan_bodies(fc, "ppermute",
+                                          b, b * 0, 30) == [12]
+    J = Jacobi(4.0)
+    fq = cg_mesh_sweep(op, iters=30, tol=1e-8, prec=J)
+    assert count_primitive_in_scan_bodies(fq, "psum", b, b * 0) == [2]
+
+
+def test_mesh_chebyshev_and_cg_preconditioned_solve(poisson, mesh11):
+    A, b = poisson
+    C = Chebyshev(A, spectrum=(0.5, 8.0), degree=3)
+    kw = dict(l=2, tol=1e-10, maxiter=300)
+    r_none = solve(A, b.reshape(32, 32), method="plcg_scan",
+                   spectrum=(0.0, 8.0), mesh=mesh11, **kw)
+    r = solve(A, b.reshape(32, 32), method="plcg_scan", mesh=mesh11,
+              M=C, **kw)
+    assert r.converged and r.iters < r_none.iters
+    res = np.linalg.norm(b - np.asarray(A @ np.asarray(r.x).reshape(-1)))
+    assert res < 5e-8
+    # preconditioned mesh CG (scalar Jacobi is a pure rescale on Poisson:
+    # same iterates as unpreconditioned -- the contract is it RUNS and
+    # converges with 2 psums)
+    rc = solve(A, b.reshape(32, 32), method="cg", tol=1e-10, maxiter=400,
+               mesh=mesh11, M=jacobi(A))
+    assert rc.converged and rc.info["psums_per_iter"] == 2
+    err = np.linalg.norm(np.asarray(rc.x).reshape(-1) - 1.0)
+    assert err < 1e-6
+
+
+# -------------------- fused megakernel launch gates -----------------------
+
+def test_fused_backend_with_jacobi_is_one_launch(poisson):
+    """ISSUE acceptance: backend='fused' with a Jacobi prec stays at ONE
+    pallas_call per steady-state body, <= 1e-12 rel parity vs the inline
+    engine; a general M with a stencil hint takes the 2-launch split."""
+    from repro.core.plcg_scan import plcg_scan
+    from repro.kernels.introspect import count_pallas_calls
+
+    A, b = poisson
+    bj = jnp.asarray(b)
+    M = jacobi(A)
+    sig = tuple(chebyshev_shifts(0, 2, 2))
+
+    def run(backend, prec, prec_diag):
+        return plcg_scan(A.matvec, bj, l=2, iters=120, sigma=sig,
+                         tol=1e-10, prec=prec, prec_diag=prec_diag,
+                         backend=backend, stencil_hw=A.stencil2d)
+
+    base = run(None, M, None)
+    fused = run("fused", M, M.inv_diag)
+    assert bool(base.converged) and bool(fused.converged)
+    rel = float(jnp.linalg.norm(fused.x - base.x)
+                / jnp.linalg.norm(base.x))
+    assert rel <= 1e-12
+    n_diag = count_pallas_calls(
+        lambda bb: plcg_scan(A.matvec, bb, l=2, iters=8, sigma=sig,
+                             prec=M, prec_diag=M.inv_diag,
+                             backend="fused", stencil_hw=A.stencil2d), bj)
+    assert n_diag == 1
+    general = lambda v: v / 4.0  # noqa: E731
+    n_general = count_pallas_calls(
+        lambda bb: plcg_scan(A.matvec, bb, l=2, iters=8, sigma=sig,
+                             prec=general, backend="fused",
+                             stencil_hw=A.stencil2d), bj)
+    assert n_general == 2
+
+
+def test_solve_fused_jacobi_through_front_end(poisson):
+    """The diag hint threads through solve() -> batched/single sweeps:
+    fused+Jacobi matches the inline engine, 1-D and stacked RHS."""
+    A, b = poisson
+    M = jacobi(A)
+    kw = dict(method="plcg_scan", l=2, tol=1e-10, maxiter=200, M=M)
+    r0 = solve(A, b, backend=None, **kw)
+    r1 = solve(A, b, backend="fused", **kw)
+    assert r0.converged and r1.converged
+    rel = (np.linalg.norm(np.asarray(r1.x) - np.asarray(r0.x))
+           / np.linalg.norm(np.asarray(r0.x)))
+    assert rel <= 1e-12
+    B = np.stack([b, b * 0.5])
+    rb = solve(A, B, backend="fused", **kw)
+    assert rb.converged
+    relb = (np.linalg.norm(np.asarray(rb.x)[0] - np.asarray(r0.x))
+            / np.linalg.norm(np.asarray(r0.x)))
+    assert relb <= 1e-12
+
+
+# ----------------- solver-cache eviction (Preconditioner) -----------------
+
+def test_sweep_cache_evicts_when_preconditioner_dies(poisson):
+    """The jitted sweep is keyed weakly on (matvec, prec): dropping the
+    Preconditioner object evicts the compiled sweep, exactly like a dead
+    operator closure."""
+    from repro.core import clear_solver_cache
+    from repro.core.plcg_scan import _SWEEP_CACHE, plcg_solve
+
+    A, b = poisson
+    clear_solver_cache()
+    gc.collect()
+    mv = A.matvec
+    M = Jacobi(4.0)
+    plcg_solve(mv, jnp.asarray(b), l=2, sigma=chebyshev_shifts(0, 2, 2),
+               tol=1e-10, maxiter=120, prec=M)
+    assert len(_SWEEP_CACHE) == 1
+    del M
+    gc.collect()
+    assert len(_SWEEP_CACHE) == 0
+    clear_solver_cache()
+
+
+def test_mesh_sweep_cache_evicts_when_preconditioner_dies(poisson, mesh11):
+    from repro.core import clear_solver_cache
+    from repro.distributed import as_dist_operator, plcg_mesh_sweep
+    from repro.distributed.plcg_dist import _MESH_SWEEP_CACHE
+
+    A, _ = poisson
+    op = as_dist_operator(A, mesh11)
+    clear_solver_cache()
+    gc.collect()
+    M = BlockJacobi((32, 32), blocks=(1, 1), degree=3)
+    sig = tuple(chebyshev_shifts(0, 1.3, 2))
+    fn = plcg_mesh_sweep(op, l=2, iters=20, sigma=sig, tol=1e-8, prec=M)
+    assert plcg_mesh_sweep(op, l=2, iters=20, sigma=sig, tol=1e-8,
+                           prec=M) is fn                    # cache hit
+    assert len(_MESH_SWEEP_CACHE) == 1
+    del fn, M
+    gc.collect()
+    assert len(_MESH_SWEEP_CACHE) == 0
+    clear_solver_cache()
+
+
+def test_cache_reentrant_death_during_clear_with_preconditioner():
+    """PR-3 regression, extended to Preconditioner keys: when clear()
+    drops a cached value that holds the LAST strong reference to the
+    Preconditioner, the weakref callback fires reentrantly inside
+    clear() -- it must defer (not mutate mid-iteration) and still leave
+    the cache empty."""
+    from repro.core.solver_cache import WeakCallableCache
+
+    cache = WeakCallableCache(maxsize=4)
+    M = Jacobi(4.0)
+    mv = lambda v: v  # noqa: E731
+    cache.get_or_build((mv, M), ("cfg",), lambda: ("sweep", M))
+    ref_died = []
+    import weakref
+    weakref.finalize(M, lambda: ref_died.append(True))
+    del M
+    gc.collect()
+    assert len(cache) == 1          # value still pins the preconditioner
+    cache.clear()                   # reentrant _on_death fires here
+    gc.collect()
+    assert ref_died == [True]
+    assert len(cache) == 0
+    # the cache stays usable after the reentrant purge
+    M2 = Jacobi(2.0)
+    cache.get_or_build((mv, M2), ("cfg",), lambda: "v2")
+    assert len(cache) == 1
+
+
+# ----------------------- residual-gap diagnostics -------------------------
+
+def test_residual_gap_report(poisson):
+    A, b = poisson
+    M = BlockJacobi((32, 32), blocks=(2, 2), degree=4)
+    r = solve(A, b, method="plcg_scan", l=2, tol=1e-10, maxiter=300, M=M)
+    gap = residual_gap(A, b, r)
+    assert set(gap) == {"true_resnorm", "implicit_resnorm", "gap",
+                        "rel_gap"}
+    assert gap["true_resnorm"] < 1e-7
+    # in f64, far from the attainable-accuracy floor, the implicit and
+    # true residuals agree to a small relative gap
+    assert gap["rel_gap"] < 1e-9
+    # batched results need an explicit lane (plus that lane's b)
+    B = np.stack([b, b * 2.0])
+    rb = solve(A, B, method="plcg_scan", l=2, tol=1e-10, maxiter=300, M=M)
+    with pytest.raises(ValueError, match="lane"):
+        residual_gap(A, B[1], rb)
+    gb = residual_gap(A, B[1], rb, lane=1)
+    assert gb["true_resnorm"] < 1e-6 and gb["rel_gap"] < 1e-8
