@@ -52,15 +52,16 @@ def main(argv=None) -> None:
         args.json = f"BENCH_{rev}.json"
 
     from benchmarks import (dist_bench, engine_bench, kernels_bench,
-                            paper_figs, prec_bench, roofline)
+                            paper_figs, prec_bench, roofline, serve_bench)
     if args.smoke:
         groups = (list(engine_bench.SMOKE) + list(kernels_bench.ALL)
                   + [paper_figs.table1_cost_model] + list(dist_bench.SMOKE)
-                  + list(prec_bench.SMOKE))
+                  + list(prec_bench.SMOKE) + list(serve_bench.SMOKE))
     else:
         groups = (list(paper_figs.ALL) + list(kernels_bench.ALL)
                   + list(engine_bench.ALL) + list(dist_bench.ALL)
-                  + list(prec_bench.ALL) + list(roofline.ALL))
+                  + list(prec_bench.ALL) + list(serve_bench.ALL)
+                  + list(roofline.ALL))
     print("name,us_per_call,derived")
     failures = 0
     all_rows: list[tuple] = []
@@ -78,6 +79,16 @@ def main(argv=None) -> None:
         all_rows.extend(rows)
         sys.stderr.write(f"[{getattr(fn, '__name__', 'roofline')}: "
                          f"{time.time()-t0:.1f}s]\n")
+    # the serving win tracked across PRs: per-call front-end overhead of
+    # one-shot solve() over a prepared Solver (a derived row so
+    # BENCH_<rev>.json diffs it like any other metric)
+    us = {name: v for name, v, _ in all_rows}
+    if us.get("serve/prepared"):
+        ratio = us["serve/oneshot"] / us["serve/prepared"]
+        row = ("serve/overhead_ratio", ratio,
+               "oneshot_us_per_call/prepared_us_per_call")
+        print(f"{row[0]},{row[1]:.2f},{row[2]}")
+        all_rows.append(row)
     if args.json:
         payload = {
             "us_per_call": {name: round(us, 1) for name, us, _ in all_rows},

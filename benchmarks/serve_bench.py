@@ -1,0 +1,130 @@
+"""Serving-layer benchmarks: the one-shot -> prepared -> pooled ladder.
+
+The probative columns are structural, not wall-clock (CPU timings are
+noisy and not probative of TPU dispatch): the per-call front-end setup
+a one-shot ``solve()`` repays on every call (``serve/setup`` times the
+whole validate/normalize/default/build pipeline in isolation), the
+retrace count of a prepared session across repeated same-shape calls
+(MUST be zero after the first call --
+``kernels.introspect.jit_cache_size``), and the flush occupancy /
+batched-sweep call count of ``SolverPool`` micro-batching
+(``engine.BATCH_TRACE_EVENTS``).  ``serve/overhead_ratio`` (one-shot us
+per call / prepared us per call, computed by ``run.py``) is the serving
+win ``BENCH_<rev>.json`` tracks across PRs.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks._util import timeit_us as _timeit
+
+
+def _problem(nx=16):
+    from repro.operators import poisson2d
+    A = poisson2d(nx, nx)
+    b = np.asarray(A @ np.ones(A.n))
+    return A, b
+
+
+#: Small + f32-convergent on purpose: the serving workload is MANY SMALL
+#: solves, where the per-call Python front-end is a visible fraction.
+KW = dict(l=2, tol=1e-4, maxiter=100, spectrum=(0.0, 8.0))
+REPS = 30
+
+
+def serve_overhead():
+    """Per-call cost of N identical small solves, one-shot solve() vs a
+    prepared Solver(A)(b), plus the isolated session-setup cost and the
+    prepared session's retrace count (zero after the first call is the
+    acceptance gate)."""
+    import jax
+
+    from repro.core import Solver, solve
+
+    A, b = _problem()
+
+    def oneshot():
+        return solve(A, b, method="plcg_scan", **KW).x
+
+    solver = Solver(A, "plcg_scan", **KW)
+
+    def prepared():
+        return solver(b).x
+
+    us_setup = _timeit(lambda: Solver(A, "plcg_scan", **KW), reps=REPS)
+    jax.block_until_ready(oneshot())
+    us_oneshot = _timeit(oneshot, reps=REPS)
+    jax.block_until_ready(prepared())
+    us_prepared = _timeit(prepared, reps=REPS)
+    # retraces across the timed calls: every prepared sweep that ran must
+    # sit at exactly ONE compilation
+    sizes = [c for c in solver.compile_counts().values() if c > 0]
+    ratio = us_oneshot / max(us_prepared, 1e-9)
+    return [
+        ("serve/setup", us_setup,
+         "validate+normalize+default+build, amortized to 0 by a session"),
+        ("serve/oneshot", us_oneshot, f"reps={REPS}"),
+        ("serve/prepared", us_prepared,
+         f"ratio_vs_oneshot={ratio:.2f};"
+         f"compiles={max(sizes) if sizes else 0};zero_retraces="
+         f"{all(c == 1 for c in sizes)}"),
+    ]
+
+
+def serve_pool():
+    """Micro-batched dispatch: 8 queued RHS through SolverPool = ONE
+    batched sweep call (counted via BATCH_TRACE_EVENTS), vs 8 sequential
+    prepared calls; occupancy + per-lane parity of a ragged (5-deep)
+    padded flush."""
+    from repro.core import Solver, SolverPool, clear_batch_trace, solve
+    from repro.core import engine
+
+    A, b = _problem()
+    rng = np.random.default_rng(0)
+    B = np.stack([np.asarray(A @ rng.standard_normal(A.n))
+                  for _ in range(8)])
+    solver = Solver(A, "plcg_scan", **KW)
+    pool = SolverPool(solver, max_batch=8)
+
+    def pooled():
+        hs = [pool.submit(B[j]) for j in range(8)]
+        pool.flush()
+        return [h.result().x for h in hs]
+
+    # warmup + sweep-call count in one pass
+    clear_batch_trace()
+    pooled()
+    sweep_calls_first = len(engine.BATCH_TRACE_EVENTS)
+    pooled()
+    retraces_after = len(engine.BATCH_TRACE_EVENTS) - sweep_calls_first
+    t0 = time.perf_counter()
+    for _ in range(5):
+        out = pooled()
+    us_pool = (time.perf_counter() - t0) / 5 * 1e6
+    del out
+    us_seq = _timeit(lambda: [solver(B[j]).x for j in range(8)], reps=3)
+    # ragged flush: 5 requests pad to the 8-bucket
+    hs = [pool.submit(B[j]) for j in range(5)]
+    (real, padded), = pool.flush()
+    del hs
+    # per-lane parity vs the one-shot front-end (structural sanity)
+    h = pool.submit(B[0])
+    pool.flush()
+    r0 = solve(A, B[0], method="plcg_scan", **KW)
+    rel = (np.linalg.norm(np.asarray(h.result().x) - np.asarray(r0.x))
+           / np.linalg.norm(np.asarray(r0.x)))
+    return [
+        ("serve/pool_flush8", us_pool / 8,
+         f"us_per_rhs;sweep_calls_first_flush={sweep_calls_first};"
+         f"retraces_after={retraces_after};"
+         f"speedup_vs_sequential={us_seq / max(us_pool, 1e-9):.2f}"),
+        ("serve/pool_ragged5", 0.0,
+         f"real={real};padded={padded};occupancy={real / padded:.3f};"
+         f"lane_rel_err={rel:.1e}"),
+    ]
+
+
+ALL = [serve_overhead, serve_pool]
+SMOKE = [serve_overhead, serve_pool]

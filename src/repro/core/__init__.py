@@ -8,9 +8,14 @@ mesh execution layer (``mesh=``).  Preconditioning is a first-class
 layer (``repro.core.precond``): ``M=`` accepts a structured
 :class:`Preconditioner` (``Jacobi`` fuses into the Pallas megakernel,
 ``BlockJacobi``/``Chebyshev`` run shard-local on a mesh) or any bare
-callable, which is promoted via :func:`as_preconditioner`.  Individual
-algorithm modules (``cg.py``, ``plcg.py``, ``plcg_scan.py``, ...) stay
-importable directly for research use.
+callable, which is promoted via :func:`as_preconditioner`.  For
+many-solves serving workloads, :class:`Solver` / :class:`SolverPool`
+(``repro.core.session``) prepare a solver once -- validation,
+normalization and sweep building out of the per-call path -- and
+micro-batch concurrent right-hand sides into one batched sweep;
+``solve()`` itself is the one-shot wrapper around that session API.
+Individual algorithm modules (``cg.py``, ``plcg.py``, ``plcg_scan.py``,
+...) stay importable directly for research use.
 """
 from .engine import (as_operator, clear_batch_trace, describe_methods,
                      get_method, methods, methods_supporting, register,
@@ -19,6 +24,7 @@ from .linop import LinearOperator, dense_operator, identity_preconditioner
 from .precond import (BlockJacobi, Chebyshev, Identity, Jacobi,
                       Preconditioner, as_preconditioner, residual_gap)
 from .results import SolveResult
+from .session import SolveHandle, Solver, SolverPool
 from .solver_cache import clear_solver_cache
 
 __all__ = [
@@ -28,7 +34,10 @@ __all__ = [
     "Jacobi",
     "LinearOperator",
     "Preconditioner",
+    "SolveHandle",
     "SolveResult",
+    "Solver",
+    "SolverPool",
     "as_operator",
     "as_preconditioner",
     "clear_batch_trace",

@@ -90,7 +90,12 @@ class MethodSpec:
     ``supports_mesh`` are the capability flags :func:`solve` checks up
     front -- the single source of truth replacing per-adapter
     ``ValueError``s, so every method rejects an unsupported ``M=`` /
-    ``mesh=`` with the same documented message.
+    ``mesh=`` with the same documented message.  ``options`` declares the
+    method-specific ``**options`` keys the adapter accepts: unknown keys
+    are rejected by :func:`solve` / :class:`~repro.core.session.Solver`
+    with a uniform error instead of leaking into the method body (where
+    they used to surface as an adapter-dependent ``TypeError`` or be
+    swallowed silently).
     """
 
     name: str
@@ -100,16 +105,19 @@ class MethodSpec:
     supports_M: bool = True
     supports_mesh: bool = False
     uses_sigma: bool = False
+    options: frozenset = frozenset()
 
 
 def register(name: str, *, batched: str = "loop", description: str = "",
              supports_M: bool = True, supports_mesh: bool = False,
-             uses_sigma: bool = False):
+             uses_sigma: bool = False, options: Sequence[str] = ()):
     """Decorator registering a solver adapter under ``name``.
 
     ``uses_sigma`` marks pipelined methods that consume the auxiliary-
     basis shifts -- only those trigger the (possibly costly) default
-    shift-interval derivation from ``M.precond_spectrum``.
+    shift-interval derivation from ``M.precond_spectrum``.  ``options``
+    is the closed set of method-specific ``**options`` keys the adapter
+    accepts (execution paths may restrict it further, never widen it).
     """
     if batched not in ("loop", "vmap"):
         raise ValueError(f"batched must be 'loop' or 'vmap', got {batched!r}")
@@ -119,7 +127,8 @@ def register(name: str, *, batched: str = "loop", description: str = "",
                                      description=description,
                                      supports_M=supports_M,
                                      supports_mesh=supports_mesh,
-                                     uses_sigma=uses_sigma)
+                                     uses_sigma=uses_sigma,
+                                     options=frozenset(options))
         return fn
 
     return deco
@@ -169,18 +178,27 @@ def as_operator(A, b=None) -> LinearOperator:
                     "operator")
 
 
-def _stacklevel_outside_engine() -> int:
-    """``warnings.warn`` stacklevel of the first frame outside this module.
+#: Modules whose frames count as "inside the engine" for warning
+#: attribution: the front-end itself and the prepared-solver session layer
+#: it delegates to.
+_INTERNAL_MODULES = (__name__, __name__.rsplit(".", 1)[0] + ".session")
 
-    Used so engine warnings point at the *caller of* :func:`solve`
-    regardless of how many internal dispatch frames sit in between (the
-    depth differs between the batched, loop and mesh paths and would
-    otherwise silently drift on refactors).
+
+def _stacklevel_outside_engine() -> int:
+    """``warnings.warn`` stacklevel of the first frame outside the engine
+    (this module and the session layer).
+
+    Used so engine warnings point at the *caller of* :func:`solve` /
+    :class:`~repro.core.session.Solver` regardless of how many internal
+    dispatch frames sit in between (the depth differs between the
+    batched, loop, mesh and prepared-session paths and would otherwise
+    silently drift on refactors).
     """
     import sys
     level = 1
     frame = sys._getframe(1)
-    while frame is not None and frame.f_globals.get("__name__") == __name__:
+    while (frame is not None
+           and frame.f_globals.get("__name__") in _INTERNAL_MODULES):
         level += 1
         frame = frame.f_back
     return level
@@ -199,6 +217,84 @@ def _resolve_sigma(sigma, spectrum, l: int) -> list[float]:
         return sig
     lmin, lmax = spectrum if spectrum is not None else (0.0, 8.0)
     return chebyshev_shifts(lmin, lmax, l)
+
+
+# --------------------------------------------------------------------------
+# one-time preparation helpers (shared by solve() and session.Solver)
+# --------------------------------------------------------------------------
+#
+# These are the pieces of the old monolithic solve() body that must run
+# exactly ONCE per prepared solver but used to run on every call: method
+# lookup, option validation, preconditioner normalization and the
+# shift-interval defaulting.  solve() composes them per call (one-shot
+# semantics unchanged); session.Solver composes them at construction.
+
+def _prepare_method(method: str) -> MethodSpec:
+    """Registry lookup (raises the uniform unknown-method error)."""
+    return get_method(method)
+
+
+def _prepare_options(spec: MethodSpec, options: dict) -> None:
+    """Reject ``**options`` keys outside the method's declared set.
+
+    Before this gate, unknown keys leaked into the adapter bodies where
+    they surfaced as an adapter-dependent ``TypeError`` (or were silently
+    swallowed by a ``**kw`` sink); now every method raises one uniform
+    error naming its accepted keys.  Execution paths (batched vmap, mesh)
+    may restrict the set further at dispatch time -- they can never widen
+    it.
+    """
+    unknown = set(options) - spec.options
+    if unknown:
+        accepted = (", ".join(sorted(spec.options)) if spec.options
+                    else "none")
+        raise ValueError(
+            f"method {spec.name!r} does not accept options "
+            f"{sorted(unknown)}; accepted options for {spec.name!r}: "
+            f"{accepted}")
+
+
+def _prepare_preconditioner(spec: MethodSpec, M):
+    """Normalize ``M`` once: bare callables promote to the Preconditioner
+    protocol, Identity collapses to the cheaper unpreconditioned pipeline,
+    and methods without the capability flag reject it up front -- every
+    downstream layer sees either None or a structured Preconditioner,
+    never a raw closure."""
+    M = as_preconditioner(M).runtime()
+    if M is not None and not spec.supports_M:
+        raise ValueError(
+            f"method {spec.name!r} does not support preconditioning (M=); "
+            f"methods with M= support: {', '.join(methods_supporting('M'))}")
+    return M
+
+
+def _prepare_spectrum(spec: MethodSpec, M, sigma, spectrum):
+    """Default the auxiliary-basis shift interval from the preconditioned
+    spectrum when the preconditioner knows it (only for shift-consuming
+    pipelined methods -- BlockJacobi's estimate runs a power iteration,
+    which cg/pcg would discard)."""
+    if (M is not None and sigma is None and spectrum is None
+            and spec.uses_sigma):
+        return M.precond_spectrum((0.0, 8.0))
+    return spectrum
+
+
+def _prepare_mesh_check(spec: MethodSpec, backend) -> None:
+    """Mesh-capability gate + the backend-ignored warning (the injected
+    local-partial dots bypass every kernel tier by construction)."""
+    if not spec.supports_mesh:
+        raise ValueError(
+            f"method {spec.name!r} has no mesh-aware execution path; "
+            f"methods available on a mesh: "
+            f"{', '.join(methods_supporting('mesh'))}")
+    if backend is not None:
+        import warnings
+        warnings.warn(
+            f"backend={backend!r} is ignored on the mesh path: the "
+            "injected local-partial dots bypass every kernel tier by "
+            "construction (the distributed hot path is the "
+            "halo-exchange stencil plus the collective schedule)",
+            stacklevel=_stacklevel_outside_engine())
 
 
 # --------------------------------------------------------------------------
@@ -259,59 +355,31 @@ def solve(
         ``Jacobi`` with a constant diagonal, ``Chebyshev``) and keeps the
         one-psum contract.
       **options: method-specific extras (``trace_gaps``, ``record_G``,
-        ``max_restarts``, ``exploit_symmetry``, ...).
+        ``max_restarts``, ``exploit_symmetry``, ...); keys outside the
+        method's declared option set raise a uniform error naming the
+        accepted keys.
 
     Returns:
       :class:`SolveResult`; for batched input, ``x`` has shape
       ``(nrhs, n)`` (``(nrhs, nx, ny)`` on a mesh), ``resnorms`` is a
       per-RHS list of traces, and ``info["per_rhs_converged"]`` /
       ``info["per_rhs_iters"]`` hold the per-system outcomes.
+
+    This is the one-shot convenience wrapper around the prepared-solver
+    session API: it builds a :class:`repro.core.session.Solver` (all
+    validation / normalization / defaulting, once) and runs it on ``b``.
+    Callers issuing many solves against one operator should hold the
+    :class:`Solver` (or a :class:`repro.core.session.SolverPool`)
+    themselves and skip the per-call setup entirely.
     """
-    spec = get_method(method)
-    # normalize the preconditioner ONCE: bare callables promote to the
-    # Preconditioner protocol, and Identity collapses to the cheaper
-    # unpreconditioned pipeline -- every downstream layer sees either
-    # None or a structured Preconditioner, never a raw closure
-    M = as_preconditioner(M).runtime()
-    if M is not None and not spec.supports_M:
-        raise ValueError(
-            f"method {method!r} does not support preconditioning (M=); "
-            f"methods with M= support: {', '.join(methods_supporting('M'))}")
-    if (M is not None and sigma is None and spectrum is None
-            and spec.uses_sigma):
-        # preconditioned default: shift the auxiliary-basis interval to
-        # the preconditioned spectrum when the preconditioner knows it
-        # (only for shift-consuming pipelined methods -- BlockJacobi's
-        # estimate runs a power iteration, which cg/pcg would discard)
-        spectrum = M.precond_spectrum((0.0, 8.0))
-    if mesh is not None or _is_mesh_operator(A):
-        if not spec.supports_mesh:
-            raise ValueError(
-                f"method {method!r} has no mesh-aware execution path; "
-                f"methods available on a mesh: "
-                f"{', '.join(methods_supporting('mesh'))}")
-        if backend is not None:
-            import warnings
-            warnings.warn(
-                f"backend={backend!r} is ignored on the mesh path: the "
-                "injected local-partial dots bypass every kernel tier by "
-                "construction (the distributed hot path is the "
-                "halo-exchange stencil plus the collective schedule)",
-                stacklevel=_stacklevel_outside_engine())
-        # lazy import: keeps the core engine importable in environments
-        # where the distributed layer (shard_map et al.) is unavailable
-        from ..distributed.plcg_dist import solve_on_mesh
-        return solve_on_mesh(spec, A, b, mesh=mesh, x0=x0, tol=tol,
-                             maxiter=maxiter, M=M, l=l, sigma=sigma,
-                             spectrum=spectrum, backend=backend, **options)
-    op = as_operator(A, b)
-    if getattr(b, "ndim", 1) == 2:
-        return _solve_batched(spec, op, b, x0=x0, tol=tol, maxiter=maxiter,
-                              M=M, l=l, sigma=sigma, spectrum=spectrum,
-                              backend=backend, **options)
-    return spec.fn(op, b, x0, tol=tol, maxiter=maxiter, M=M, l=l,
-                   sigma=sigma, spectrum=spectrum, backend=backend,
-                   **options)
+    from .session import Solver
+    # validate options before the keyword passthrough: session-only
+    # constructor keywords (n=) must not absorb a same-named unknown
+    # option key and dodge the uniform rejection
+    _prepare_options(get_method(method), options)
+    return Solver(A, method=method, tol=tol, maxiter=maxiter, M=M, l=l,
+                  sigma=sigma, spectrum=spectrum, backend=backend,
+                  mesh=mesh, **options).solve(b, x0=x0)
 
 
 # --------------------------------------------------------------------------
@@ -320,13 +388,13 @@ def solve(
 
 def _solve_batched(spec: MethodSpec, A: LinearOperator, B, *, x0, tol,
                    maxiter, M, l, sigma, spectrum, backend,
-                   **options) -> SolveResult:
+                   get_engine=None, **options) -> SolveResult:
     nrhs = B.shape[0]
     if spec.batched == "vmap":
         return _solve_batched_vmap(spec, A, B, x0=x0, tol=tol,
                                    maxiter=maxiter, M=M, l=l, sigma=sigma,
                                    spectrum=spectrum, backend=backend,
-                                   **options)
+                                   get_engine=get_engine, **options)
     outs = [
         spec.fn(A, B[j], None if x0 is None else x0[j], tol=tol,
                 maxiter=maxiter, M=M, l=l, sigma=sigma, spectrum=spectrum,
@@ -393,7 +461,7 @@ def _batched_engine(method_name: str, matvec, l: int, iters: int, sigma,
 def _solve_batched_vmap(spec: MethodSpec, A: LinearOperator, B, *, x0, tol,
                         maxiter, M, l, sigma, spectrum, backend,
                         exploit_symmetry: bool = True, unroll: int = 1,
-                        **options) -> SolveResult:
+                        get_engine=None, **options) -> SolveResult:
     """One jitted ``vmap`` of the scan engine over the stacked RHS.
 
     A single XLA compilation covers all ``nrhs`` systems; converged lanes
@@ -401,6 +469,10 @@ def _solve_batched_vmap(spec: MethodSpec, A: LinearOperator, B, *, x0, tol,
     lanes keep iterating.  Runs one sweep (no data-dependent restarts --
     restart-on-breakdown needs per-lane host control flow; use the loop
     path of the reference ``plcg`` when that matters).
+
+    ``get_engine`` (internal) lets a prepared :class:`session.Solver`
+    inject its strongly-held jitted engine in place of the weak-key cache
+    lookup; it receives exactly :func:`_batched_engine`'s arguments.
     """
     if options:
         # don't silently drop flags the single-RHS call would honor
@@ -423,9 +495,10 @@ def _solve_batched_vmap(spec: MethodSpec, A: LinearOperator, B, *, x0, tol,
             "enable jax_enable_x64 or relax tol",
             stacklevel=_stacklevel_outside_engine())
     X0 = jnp.zeros_like(Bj) if x0 is None else jnp.asarray(x0)
-    fn = _batched_engine(spec.name, A.matvec, l, maxiter + l + 1, sig, tol,
-                         M, exploit_symmetry, unroll, backend,
-                         getattr(A, "stencil2d", None))
+    build = get_engine if get_engine is not None else _batched_engine
+    fn = build(spec.name, A.matvec, l, maxiter + l + 1, sig, tol,
+               M, exploit_symmetry, unroll, backend,
+               getattr(A, "stencil2d", None))
     out = fn(Bj, X0)
     resn = np.asarray(out.resnorms)                     # (nrhs, iters)
     conv = np.asarray(out.converged)
@@ -455,14 +528,14 @@ def _solve_batched_vmap(spec: MethodSpec, A: LinearOperator, B, *, x0, tol,
 # registered method adapters
 # --------------------------------------------------------------------------
 
-@register("cg", supports_mesh=True,
+@register("cg", supports_mesh=True, options=("trace_true_residual",),
           description="classic Hestenes-Stiefel CG (paper Alg. 4)")
 def _method_cg(A, b, x0=None, *, tol=1e-8, maxiter=1000, M=None, l=1,
                sigma=None, spectrum=None, backend=None, **kw):
     return classic_cg(A, b, x0, tol=tol, maxiter=maxiter, M=M, **kw)
 
 
-@register("pcg",
+@register("pcg", options=("trace_true_residual",),
           description="Ghysels-Vanroose pipelined CG, depth 1 (Alg. 5)")
 def _method_pcg(A, b, x0=None, *, tol=1e-8, maxiter=1000, M=None, l=1,
                 sigma=None, spectrum=None, backend=None, **kw):
@@ -478,6 +551,8 @@ def _method_dlanczos(A, b, x0=None, *, tol=1e-8, maxiter=1000, M=None, l=1,
 
 @register("plcg", batched="vmap", supports_mesh=True,
           uses_sigma=True,
+          options=("exploit_symmetry", "record_G", "trace_gaps", "prune",
+                   "max_restarts"),
           description="deep-pipelined p(l)-CG reference (paper Alg. 2)")
 def _method_plcg(A, b, x0=None, *, tol=1e-8, maxiter=1000, M=None, l=1,
                  sigma=None, spectrum=None, backend=None, **kw):
@@ -485,11 +560,15 @@ def _method_plcg(A, b, x0=None, *, tol=1e-8, maxiter=1000, M=None, l=1,
                 spectrum=spectrum, **kw)
 
 
-@register("plcg_scan", batched="vmap", supports_mesh=True,
-          uses_sigma=True,
-          description="jitted lax.scan p(l)-CG production engine (Alg. 3)")
-def _method_plcg_scan(A, b, x0=None, *, tol=1e-8, maxiter=1000, M=None, l=1,
-                      sigma=None, spectrum=None, backend=None, **kw):
+def _run_plcg_scan(A, b, x0, *, tol, maxiter, M, l, sigma, spectrum,
+                   backend, sweep=None, **kw) -> SolveResult:
+    """Scan-engine single-RHS run + SolveResult packaging.
+
+    Shared by the one-shot adapter below and the prepared session path:
+    ``sweep`` (internal) is a pre-built jitted ``(b, x0, k_budget)``
+    sweep a :class:`session.Solver` holds strongly -- when given,
+    ``plcg_solve`` skips its weak-key cache lookup entirely.
+    """
     sig = _resolve_sigma(sigma, spectrum, l)
     bj = jnp.asarray(b)
     x0j = None if x0 is None else jnp.asarray(x0)
@@ -497,7 +576,7 @@ def _method_plcg_scan(A, b, x0=None, *, tol=1e-8, maxiter=1000, M=None, l=1,
                                    tol=tol, maxiter=maxiter, prec=M,
                                    backend=backend,
                                    stencil_hw=getattr(A, "stencil2d", None),
-                                   **kw)
+                                   sweep=sweep, **kw)
     return SolveResult(
         x=x, resnorms=resnorms, iters=info["iterations"],
         converged=info["converged"], breakdowns=info["breakdowns"],
@@ -506,6 +585,17 @@ def _method_plcg_scan(A, b, x0=None, *, tol=1e-8, maxiter=1000, M=None, l=1,
               "backend": backend,
               "prec": getattr(M, "name", None) if M is not None else None},
     )
+
+
+@register("plcg_scan", batched="vmap", supports_mesh=True,
+          uses_sigma=True,
+          options=("exploit_symmetry", "max_restarts", "unroll"),
+          description="jitted lax.scan p(l)-CG production engine (Alg. 3)")
+def _method_plcg_scan(A, b, x0=None, *, tol=1e-8, maxiter=1000, M=None, l=1,
+                      sigma=None, spectrum=None, backend=None, **kw):
+    return _run_plcg_scan(A, b, x0, tol=tol, maxiter=maxiter, M=M, l=l,
+                          sigma=sigma, spectrum=spectrum, backend=backend,
+                          **kw)
 
 
 @register("plminres", supports_M=False, uses_sigma=True,

@@ -545,11 +545,17 @@ def run_restart_driver(sweep, b, x0, *, tol: float, maxiter: int,
 def plcg_solve(matvec, b, x0=None, *, l, sigma, tol=1e-8, maxiter=1000,
                prec=None, exploit_symmetry: bool = True, max_restarts: int = 5,
                unroll: int = 1, backend: Optional[str] = None,
-               stencil_hw: Optional[tuple] = None):
+               stencil_hw: Optional[tuple] = None, sweep=None):
     """Driver around the jitted engine: explicit restart on square-root
     breakdown (paper Remark 8), happy-breakdown detection, and a GLOBAL
     iteration budget across restart sweeps (via the sweep's ``k_budget``
     operand -- one compiled program regardless of restarts).
+
+    ``sweep`` (optional) is a pre-built jitted ``(b, x0, k_budget)``
+    sweep -- a prepared ``repro.core.session.Solver`` passes the one it
+    holds strongly, so the per-call weak-cache lookup (and any rebuild)
+    is skipped; it must have been built with ``iters >= maxiter + l + 1``
+    and the same tol/sigma/backend configuration.
 
     Returns (x, resnorms, info dict).
     """
@@ -557,12 +563,13 @@ def plcg_solve(matvec, b, x0=None, *, l, sigma, tol=1e-8, maxiter=1000,
     bnorm = float(jnp.linalg.norm(b))
     if bnorm == 0:
         bnorm = 1.0
-    fn = _jitted_sweep(matvec, l, maxiter + l + 1, tuple(sigma), tol, prec,
-                       exploit_symmetry, unroll, backend, stencil_hw)
+    fn = sweep if sweep is not None else _jitted_sweep(
+        matvec, l, maxiter + l + 1, tuple(sigma), tol, prec,
+        exploit_symmetry, unroll, backend, stencil_hw)
 
-    def sweep(bb, xx, remaining):
+    def run_sweep(bb, xx, remaining):
         out = fn(bb, xx, remaining)
         return out.x, out.resnorms, out.converged, out.breakdown, out.k_done
 
-    return run_restart_driver(sweep, b, x0, tol=tol, maxiter=maxiter,
+    return run_restart_driver(run_sweep, b, x0, tol=tol, maxiter=maxiter,
                               max_restarts=max_restarts, bnorm=bnorm)

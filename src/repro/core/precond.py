@@ -177,8 +177,13 @@ class Identity(Preconditioner):
 class Jacobi(Preconditioner):
     """Diagonal preconditioner ``M = diag(d)``; ``apply`` multiplies by
     ``1/d``.  Carries the ``inv_diag`` fusion hint, so the fused scan
-    backend keeps ONE Pallas launch per steady-state body.  A constant
-    (scalar) diagonal is additionally shard-local, hence mesh-capable.
+    backend keeps ONE Pallas launch per steady-state body.  Mesh-capable
+    either way: a constant (scalar) diagonal is trivially shard-local,
+    and a full ``(n,)`` diagonal is shard-split through the operator's
+    2-D processor grid (each shard slices its own block of the inverse
+    diagonal by mesh axis index -- an elementwise multiply, zero
+    communication, so the preconditioned mesh sweep keeps exactly ONE
+    psum per iteration).
     """
 
     def __init__(self, diag, name: str = "jacobi"):
@@ -205,12 +210,35 @@ class Jacobi(Preconditioner):
         return self._inv
 
     def local_apply(self, op):
-        # a constant diagonal is trivially shard-local; a general (n,)
-        # diagonal would need its own sharding metadata -- not supported
-        if self._scalar:
+        if self._scalar:                # constant: trivially shard-local
             inv = self._inv
             return lambda v: v * inv
-        return None
+        # full (n,) diagonal: shard-split through the operator's 2-D
+        # decomposition.  The global inverse diagonal rides the traced
+        # program as a replicated constant; each shard dynamic-slices its
+        # own (H, W) block by mesh axis index -- no collective, keeping
+        # the one-psum-per-iteration gate of the mesh sweep.
+        gshape = tuple(getattr(op, "global_shape", ()) or ())
+        lshape = tuple(getattr(op, "local_shape", ()) or ())
+        axes = getattr(op, "axes", None)
+        if (len(gshape) != 2 or len(lshape) != 2 or axes is None
+                or np.size(self._inv) != gshape[0] * gshape[1]):
+            return None
+        inv2d = np.asarray(self._inv).reshape(gshape)
+        row_axis, col_axis = tuple(axes)[:2]
+
+        def apply_local(vflat):
+            import jax
+            import jax.numpy as jnp
+            H, W = lshape
+            i = jax.lax.axis_index(row_axis)
+            j = jax.lax.axis_index(col_axis)
+            blk = jax.lax.dynamic_slice(
+                jnp.asarray(inv2d, dtype=vflat.dtype),
+                (i * H, j * W), (H, W))
+            return (vflat.reshape(H, W) * blk).reshape(-1)
+
+        return apply_local
 
     def precond_spectrum(self, base=(0.0, 8.0)):
         lo, hi = base

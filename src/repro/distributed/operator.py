@@ -153,8 +153,10 @@ class DistPoisson:
 
         Delegates to ``M.local_apply(self)`` -- BlockJacobi blocks must
         match this operator's processor grid (validated there), Jacobi
-        needs a constant diagonal, Chebyshev runs through
-        ``matvec_local`` (neighbor halos only).
+        shard-splits a full ``(n,)`` diagonal through the ``axes`` /
+        ``local_shape`` metadata (a constant diagonal is trivially
+        local), Chebyshev runs through ``matvec_local`` (neighbor halos
+        only).
         """
         return M.local_apply(self)
 
@@ -175,9 +177,10 @@ def resolve_prec_local(op, M):
         raise ValueError(
             f"preconditioner {getattr(M, 'name', M)!r} cannot be applied "
             "shard-locally, so it has no mesh execution path; mesh-capable "
-            "preconditioners: repro.core.precond.BlockJacobi, Jacobi with "
-            "a constant diagonal, Chebyshev (a bare M= callable is opaque "
-            "to the mesh layer)")
+            "preconditioners: repro.core.precond.BlockJacobi, Jacobi "
+            "(scalar, or a full diagonal matching the operator's 2-D "
+            "grid), Chebyshev (a bare M= callable is opaque to the mesh "
+            "layer)")
     return fn
 
 

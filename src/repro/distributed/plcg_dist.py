@@ -296,9 +296,15 @@ def _canonicalize_b(op: DistributedOperator, b, x0):
 
 def _mesh_plcg(op, b, x0, *, tol, maxiter, l, sigma, prec=None,
                exploit_symmetry: bool = True,
-               max_restarts=None) -> SolveResult:
+               max_restarts=None, get_sweep=None) -> SolveResult:
     b, x0, batched, orig_shape = _canonicalize_b(op, b, x0)
     sig = tuple(sigma)
+    if get_sweep is None:
+        def get_sweep(*, iters, batched):
+            return plcg_mesh_sweep(op, l=l, iters=iters, sigma=sig,
+                                   tol=tol,
+                                   exploit_symmetry=exploit_symmetry,
+                                   batched=batched, prec=prec)
     base_info = {"l": l, "sigma": list(sig), "backend": None,
                  "mesh": dict(op.mesh.shape), "psums_per_iter": 1,
                  "prec": getattr(prec, "name", None)}
@@ -314,9 +320,7 @@ def _mesh_plcg(op, b, x0, *, tol, maxiter, l, sigma, prec=None,
         # one sweep, per-lane convergence masking inside the scan (no
         # data-dependent restarts; mirrors the single-device batched
         # path, so the budget is the non-binding maxiter + 1)
-        fn = plcg_mesh_sweep(op, l=l, iters=maxiter + l + 1, sigma=sig,
-                             tol=tol, exploit_symmetry=exploit_symmetry,
-                             batched=True, prec=prec)
+        fn = get_sweep(iters=maxiter + l + 1, batched=True)
         out = fn(b, x0, maxiter + 1)
         x, resn, conv, brk, k_done = out
         resn = np.asarray(resn)                         # (nrhs, iters)
@@ -343,9 +347,7 @@ def _mesh_plcg(op, b, x0, *, tol, maxiter, l, sigma, prec=None,
     # the single-device plcg_solve (run_restart_driver), fed the mesh
     # sweep -- the budget is a traced operand of ONE fixed-size compiled
     # program, so restarts never retrace/recompile the shard_map sweep.
-    fn = plcg_mesh_sweep(op, l=l, iters=maxiter + l, sigma=sig,
-                         tol=tol, exploit_symmetry=exploit_symmetry,
-                         prec=prec)
+    fn = get_sweep(iters=maxiter + l, batched=False)
     x, resnorms, info = run_restart_driver(
         fn, b, x0, tol=tol, maxiter=maxiter,
         max_restarts=5 if max_restarts is None else max_restarts,
@@ -358,10 +360,14 @@ def _mesh_plcg(op, b, x0, *, tol, maxiter, l, sigma, prec=None,
     )
 
 
-def _mesh_cg(op, b, x0, *, tol, maxiter, prec=None) -> SolveResult:
+def _mesh_cg(op, b, x0, *, tol, maxiter, prec=None,
+             get_sweep=None) -> SolveResult:
     b, x0, batched, orig_shape = _canonicalize_b(op, b, x0)
-    fn = cg_mesh_sweep(op, iters=maxiter, tol=tol, batched=batched,
-                       prec=prec)
+    if get_sweep is None:
+        def get_sweep(*, iters, batched):
+            return cg_mesh_sweep(op, iters=iters, tol=tol, batched=batched,
+                                 prec=prec)
+    fn = get_sweep(iters=maxiter, batched=batched)
     x, resn, resn0, conv, k_done = fn(b, x0)
     base_info = {"method": "cg[mesh]", "mesh": dict(op.mesh.shape),
                  "psums_per_iter": 2,
@@ -405,46 +411,127 @@ def mesh_methods() -> tuple:
     return _engine.methods_supporting("mesh")
 
 
+class PreparedMeshSolver:
+    """One-time-validated mesh solver session (``repro.core.session``'s
+    mesh back-end).
+
+    Construction performs everything ``solve(..., mesh=...)`` used to
+    redo per call: method/adaptor dispatch, operator promotion
+    (:func:`as_dist_operator`), early shard-local preconditioner
+    resolution, option validation and sigma resolution.  The jitted
+    shard_map sweeps are built through the same weak-key cache as the
+    one-shot path (so the two entry points share compilations) but are
+    additionally held **strongly** in ``self._sweeps`` -- a live session
+    keeps its compiled programs through ``clear_solver_cache()`` and
+    weak-cache eviction, and ``solve()`` never re-derives them through
+    the cache lookup.
+
+    ``backend`` is ignored on this path (the front-end already warned):
+    the injected local-partial dots bypass every kernel tier by
+    construction.
+    """
+
+    def __init__(self, spec, A, mesh, *, M, l, sigma, spectrum,
+                 **options):
+        if spec.name not in _MESH_METHODS:
+            if getattr(spec, "supports_mesh", False):
+                raise RuntimeError(
+                    f"method {spec.name!r} declares supports_mesh=True but "
+                    "has no adapter in distributed.plcg_dist._MESH_METHODS; "
+                    "register one (the registry flag and the dispatch table "
+                    "must move together)")
+            raise ValueError(
+                f"method {spec.name!r} has no mesh-aware execution path; "
+                f"methods available on a mesh: {', '.join(mesh_methods())}")
+        self.spec = spec
+        self.op = as_dist_operator(A, mesh)
+        self.prec = M
+        if M is not None:
+            resolve_prec_local(self.op, M)      # early, uniform validation
+        if spec.name == "cg":
+            # same contract as the single-device cg adapter: l/sigma/
+            # spectrum are pipelined-method knobs and are ignored
+            if options:
+                raise ValueError(
+                    f"options {sorted(options)} are not supported by the "
+                    "mesh-aware cg path")
+            self.sig = None
+        else:
+            allowed = {"exploit_symmetry", "max_restarts"}
+            if set(options) - allowed:
+                raise ValueError(
+                    f"options {sorted(set(options) - allowed)} are not "
+                    f"supported by the mesh-aware {spec.name} path")
+            self.sig = tuple(_engine._resolve_sigma(sigma, spectrum, l))
+        self.l = l
+        self.options = dict(options)
+        self._sweeps: dict = {}         # strong refs to jitted sweeps
+
+    @property
+    def builds(self) -> int:
+        """Number of distinct jitted sweeps this session holds."""
+        return len(self._sweeps)
+
+    def _get_sweep(self, kind: str, tol: float):
+        """Memoizing sweep getter bound to one (kind, tol); the returned
+        callable has the ``get_sweep(iters=, batched=)`` signature of the
+        ``_mesh_plcg`` / ``_mesh_cg`` runners."""
+
+        def get(*, iters, batched):
+            key = (kind, float(tol), int(iters), bool(batched))
+            if key not in self._sweeps:
+                if kind == "plcg":
+                    self._sweeps[key] = plcg_mesh_sweep(
+                        self.op, l=self.l, iters=iters, sigma=self.sig,
+                        tol=tol, batched=batched, prec=self.prec,
+                        exploit_symmetry=self.options.get(
+                            "exploit_symmetry", True))
+                else:
+                    self._sweeps[key] = cg_mesh_sweep(
+                        self.op, iters=iters, tol=tol, batched=batched,
+                        prec=self.prec)
+            return self._sweeps[key]
+
+        return get
+
+    def prepare(self, *, tol: float, maxiter: int,
+                batched: bool = False) -> None:
+        """Eagerly build (and strongly hold) the sweep for one
+        (tol, maxiter, batched) configuration -- jit wrapping only, the
+        XLA compile itself still happens at the first real call."""
+        if self.spec.name == "cg":
+            self._get_sweep("cg", tol)(iters=maxiter, batched=batched)
+        else:
+            iters = maxiter + self.l + (1 if batched else 0)
+            self._get_sweep("plcg", tol)(iters=iters, batched=batched)
+
+    def solve(self, b, x0=None, *, tol: float, maxiter: int) -> SolveResult:
+        if self.spec.name == "cg":
+            return _mesh_cg(self.op, b, x0, tol=tol, maxiter=maxiter,
+                            prec=self.prec,
+                            get_sweep=self._get_sweep("cg", tol))
+        return _MESH_METHODS[self.spec.name](
+            self.op, b, x0, tol=tol, maxiter=maxiter, l=self.l,
+            sigma=self.sig, prec=self.prec,
+            get_sweep=self._get_sweep("plcg", tol), **self.options)
+
+
+def prepare_on_mesh(spec, A, mesh, *, M, l, sigma, spectrum, backend=None,
+                    **options) -> PreparedMeshSolver:
+    """Build the prepared mesh session behind ``session.Solver(mesh=...)``
+    (validation / promotion / resolution once; see
+    :class:`PreparedMeshSolver`)."""
+    del backend     # front-end warned; bypassed by construction here
+    return PreparedMeshSolver(spec, A, mesh, M=M, l=l, sigma=sigma,
+                              spectrum=spectrum, **options)
+
+
 def solve_on_mesh(spec, A, b, *, mesh, x0, tol, maxiter, M, l, sigma,
                   spectrum, backend, **options) -> SolveResult:
-    """Mesh-aware dispatch behind ``repro.core.solve(..., mesh=...)``.
-
-    ``A`` is coerced through :func:`as_dist_operator`; the method comes
-    from the same registry as the single-device path (the front-end has
-    already enforced the ``supports_mesh`` capability flag).  ``M`` is a
-    normalized ``repro.core.precond.Preconditioner`` (or None) and is
-    resolved into its shard-local apply up front -- a preconditioner
-    without a communication-free local form raises here with the uniform
-    message.  ``backend`` is ignored: the injected local-partial dots
-    bypass every kernel tier by construction (the hot path is the
-    halo-exchange stencil plus the collective schedule).
-    """
-    if spec.name not in _MESH_METHODS:
-        if getattr(spec, "supports_mesh", False):
-            raise RuntimeError(
-                f"method {spec.name!r} declares supports_mesh=True but "
-                "has no adapter in distributed.plcg_dist._MESH_METHODS; "
-                "register one (the registry flag and the dispatch table "
-                "must move together)")
-        raise ValueError(
-            f"method {spec.name!r} has no mesh-aware execution path; "
-            f"methods available on a mesh: {', '.join(mesh_methods())}")
-    op = as_dist_operator(A, mesh)
-    if M is not None:
-        resolve_prec_local(op, M)      # early, uniform validation
-    if spec.name == "cg":
-        # same contract as the single-device cg adapter: l/sigma/spectrum
-        # are pipelined-method knobs and are ignored (not validated)
-        if options:
-            raise ValueError(
-                f"options {sorted(options)} are not supported by the "
-                "mesh-aware cg path")
-        return _mesh_cg(op, b, x0, tol=tol, maxiter=maxiter, prec=M)
-    allowed = {"exploit_symmetry", "max_restarts"}
-    if set(options) - allowed:
-        raise ValueError(
-            f"options {sorted(set(options) - allowed)} are not supported "
-            f"by the mesh-aware {spec.name} path")
-    sig = tuple(_engine._resolve_sigma(sigma, spectrum, l))
-    return _MESH_METHODS[spec.name](op, b, x0, tol=tol, maxiter=maxiter,
-                                    l=l, sigma=sig, prec=M, **options)
+    """One-shot mesh-aware dispatch behind ``repro.core.solve(mesh=...)``:
+    a thin wrapper preparing a :class:`PreparedMeshSolver` and running it
+    on ``b`` (the session API is the primary entry point; this keeps the
+    legacy call-per-solve contract)."""
+    return prepare_on_mesh(spec, A, mesh, M=M, l=l, sigma=sigma,
+                           spectrum=spectrum, backend=backend,
+                           **options).solve(b, x0, tol=tol, maxiter=maxiter)

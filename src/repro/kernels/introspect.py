@@ -19,6 +19,21 @@ from __future__ import annotations
 import jax
 
 
+def jit_cache_size(fn) -> int:
+    """Number of XLA compilations a jitted callable holds (-1 if the
+    callable exposes no cache, e.g. a plain function).
+
+    The serving-layer acceptance gate counts compilations, not time: a
+    prepared ``repro.core.session.Solver`` must show ZERO cache growth
+    across repeated same-shape calls after the first (each new RHS shape
+    or tol override adds exactly one entry).
+    """
+    try:
+        return int(fn._cache_size())
+    except AttributeError:
+        return -1
+
+
 def count_primitive(fn, primitive: str, *args, **kwargs) -> int:
     """Number of ``primitive`` equations anywhere in ``fn``'s jaxpr
     (recursing into scan/cond/jit sub-jaxprs; cond counts every branch)."""

@@ -9,6 +9,16 @@ vmap RHS batching outside, one fused psum per iteration).
   PYTHONPATH=src python -m repro.launch.solve --nx 200 --l 2 --tol 1e-5
   PYTHONPATH=src python -m repro.launch.solve --method plcg_scan --nrhs 8
   PYTHONPATH=src python -m repro.launch.solve --dryrun            # 16x16 mesh
+
+``--serve --requests N`` switches to the prepared-solver serving mode:
+one ``repro.core.session.Solver`` is built up front (validation /
+normalization / sweep building once), N requests stream through a
+``SolverPool`` that micro-batches them into padded batched sweeps
+(``--max-batch`` lanes per flush), and the per-request outcomes plus
+occupancy/compile stats are reported:
+
+  PYTHONPATH=src python -m repro.launch.solve --serve --requests 32 \\
+      --nx 64 --l 2 --max-batch 8
 """
 from __future__ import annotations
 
@@ -45,6 +55,14 @@ def main(argv=None):
                     help="lower+compile on the production 16x16 (or 32x16 "
                     "with --multi-pod) mesh and report roofline terms")
     ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--serve", action="store_true",
+                    help="prepared-solver serving mode: build one Solver, "
+                    "stream --requests RHS through a micro-batching "
+                    "SolverPool, report per-request outcomes + occupancy")
+    ap.add_argument("--requests", type=int, default=16,
+                    help="number of serving requests (--serve only)")
+    ap.add_argument("--max-batch", type=int, default=8,
+                    help="max lanes per pooled flush (--serve only)")
     args = ap.parse_args(argv)
 
     if args.dryrun:
@@ -126,6 +144,49 @@ def main(argv=None):
     elif args.prec == "chebyshev":
         from repro.core import Chebyshev
         M = Chebyshev(A, spectrum=(0.5, 8.0), degree=3)
+    if args.serve:
+        # prepared-solver serving mode: setup once, micro-batch requests
+        from repro.core.session import Solver, SolverPool
+        t0 = time.time()
+        solver = Solver(A, args.method, l=args.l, tol=args.tol,
+                        maxiter=args.iters,
+                        sigma=None if M is not None else sigma,
+                        M=M, backend=args.backend, mesh=mesh)
+        pool = SolverPool(solver, max_batch=args.max_batch)
+        setup_s = time.time() - t0
+        rng = np.random.default_rng(1)
+        shape = (args.nx, ny) if mesh is not None else (A.n,)
+        reqs = [np.asarray(A @ rng.standard_normal(A.n)).reshape(shape)
+                for _ in range(args.requests)]
+        t0 = time.time()
+        handles = [pool.submit(rb) for rb in reqs]
+        pool.flush()
+        results = [h.result() for h in handles]
+        dt = time.time() - t0
+        nconv = sum(1 for r in results if r.converged)
+        where = (f"{ndev}-device mesh {dict(mesh.shape)}" if mesh
+                 else "1 device")
+        print(f"served {args.requests} requests ({args.method}, l={args.l}, "
+              f"prec={args.prec}) on {args.nx}x{ny} over {where}: "
+              f"setup {setup_s:.2f}s, drain {dt:.2f}s "
+              f"({args.requests / max(dt, 1e-9):.1f} req/s), "
+              f"{nconv}/{args.requests} converged")
+        print(f"  batches={pool.stats['batches']} "
+              f"occupancy={pool.occupancy:.3f} "
+              f"lanes={pool.stats['lanes_real']}/"
+              f"{pool.stats['lanes_padded']} "
+              f"prepared_sweeps={solver.prepared_sweeps}")
+        worst = max(range(len(results)),
+                    key=lambda j: np.linalg.norm(
+                        reqs[j].reshape(-1)
+                        - np.asarray(A @ np.asarray(
+                            results[j].x).reshape(-1))))
+        res = np.linalg.norm(reqs[worst].reshape(-1) - np.asarray(
+            A @ np.asarray(results[worst].x).reshape(-1)))
+        print(f"  worst |b-Ax| = {res:.3e} (request {worst}, "
+              f"{results[worst].iters} iters)")
+        return results
+
     t0 = time.time()
     # with a preconditioner the engine derives the shift interval from
     # M.precond_spectrum; the hand-picked (0, 8) sigma is only for M=None
