@@ -89,6 +89,15 @@ def main(argv=None) -> None:
                "oneshot_us_per_call/prepared_us_per_call")
         print(f"{row[0]},{row[1]:.2f},{row[2]}")
         all_rows.append(row)
+    # the communication-hiding win tracked across PRs: blocking-psum sweep
+    # wall-clock over the split psum_scatter/all_gather sweep on the forced
+    # 8-device mesh (>1 means the in-flight reduction paid for itself)
+    if us.get("dist/overlap_overlap_8dev"):
+        ratio = us["dist/overlap_blocking_8dev"] / us["dist/overlap_overlap_8dev"]
+        row = ("dist/overlap_hiding_ratio", ratio,
+               "blocking_us/overlap_us on forced 8-device mesh")
+        print(f"{row[0]},{row[1]:.2f},{row[2]}")
+        all_rows.append(row)
     if args.json:
         payload = {
             "us_per_call": {name: round(us, 1) for name, us, _ in all_rows},

@@ -14,9 +14,13 @@ many-solves serving workloads, :class:`Solver` / :class:`SolverPool`
 normalization and sweep building out of the per-call path -- and
 micro-batch concurrent right-hand sides into one batched sweep;
 ``solve()`` itself is the one-shot wrapper around that session API.
-Individual algorithm modules (``cg.py``, ``plcg.py``, ``plcg_scan.py``,
-...) stay importable directly for research use.
+On a mesh, ``comm=`` (``repro.core.comm.CommPolicy``) selects how the
+per-iteration reduction runs: blocking psum, split psum_scatter +
+delayed all_gather genuinely overlapped with compute, or a staged
+ppermute ring.  Individual algorithm modules (``cg.py``, ``plcg.py``,
+``plcg_scan.py``, ...) stay importable directly for research use.
 """
+from .comm import CommPolicy, as_comm_policy
 from .engine import (as_operator, clear_batch_trace, describe_methods,
                      get_method, methods, methods_supporting, register,
                      solve)
@@ -30,6 +34,7 @@ from .solver_cache import clear_solver_cache
 __all__ = [
     "BlockJacobi",
     "Chebyshev",
+    "CommPolicy",
     "Identity",
     "Jacobi",
     "LinearOperator",
@@ -38,6 +43,7 @@ __all__ = [
     "SolveResult",
     "Solver",
     "SolverPool",
+    "as_comm_policy",
     "as_operator",
     "as_preconditioner",
     "clear_batch_trace",

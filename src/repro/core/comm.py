@@ -1,0 +1,192 @@
+"""Communication policies: how the per-iteration global reduction runs.
+
+The paper's point is that p(l)-CG *tolerates an l-iteration delay* on the
+scalar payload of each iteration -- the reduction may be in flight while
+the next l SPMVs (and the shard-local preconditioner apply, Remark 13)
+proceed.  The mesh engine realizes that tolerance through one of three
+:class:`CommPolicy` modes, selected with the ``comm=`` keyword of
+``repro.core.solve`` / :class:`repro.core.session.Solver` /
+``repro.distributed.prepare_on_mesh``:
+
+  ==============  =========================================================
+  ``"blocking"``  one stacked ``psum`` per iteration (the default; the
+                  delay exists only as scheduler slack)
+  ``"overlap"``   the psum is SPLIT: a ``psum_scatter`` issued at
+                  iteration k and a delayed ``all_gather`` consumed at
+                  iteration k+d -- the reduction is *structurally* in
+                  flight for d iterations of local compute (the
+                  reduction-pipelining design of arXiv:1905.06850)
+  ``"ring"``      no all-reduce primitive at all: a circulate-accumulate
+                  ppermute ring staged ACROSS scan iterations, one
+                  neighbor hop per in-flight slot per iteration (needs
+                  pipeline depth l >= ring hops + 1)
+  ==============  =========================================================
+
+``depth`` (overlap only) is the number of iterations the scattered
+partial stays in flight before the gather, ``1 <= depth <= l`` (default
+``l``, the maximum slack).  The *total* consumption delay is always
+exactly l in every mode -- the p(l)-CG recurrences require it -- so the
+policy changes only where inside that window the reduction completes.
+
+The policy is normalized ONCE by the engine front-end
+(``repro.core.engine._prepare_comm``); execution layers receive a
+:class:`CommPolicy` and build a :class:`CommRuntime` against the
+operator's split-phase reduction methods
+(``reduce_scalars_start`` / ``reduce_scalars_finish`` /
+``ring_schedule`` -- see ``repro.distributed.operator``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+COMM_MODES = ("blocking", "overlap", "ring")
+
+
+@dataclasses.dataclass(frozen=True)
+class CommPolicy:
+    """Normalized communication policy (hashable; part of sweep-cache keys).
+
+    ``mode`` is one of :data:`COMM_MODES`; ``depth`` is the overlap
+    staging depth d (``None`` resolves to the pipeline depth l at use).
+    """
+
+    mode: str = "blocking"
+    depth: Optional[int] = None
+
+    def __post_init__(self):
+        if self.mode not in COMM_MODES:
+            raise ValueError(
+                f"comm mode must be one of {'|'.join(COMM_MODES)}, got "
+                f"{self.mode!r}")
+        if self.depth is not None:
+            if self.mode != "overlap":
+                raise ValueError(
+                    f"comm depth applies to mode 'overlap' only (mode "
+                    f"{self.mode!r} stages are fixed by l and the mesh)")
+            if int(self.depth) < 1:
+                raise ValueError(f"comm depth must be >= 1, got {self.depth}")
+            object.__setattr__(self, "depth", int(self.depth))
+
+    @property
+    def is_blocking(self) -> bool:
+        return self.mode == "blocking"
+
+    def resolve_depth(self, l: int) -> int:
+        """The staging depth d for pipeline depth ``l`` (overlap: the
+        explicit depth or l; ring/blocking: the full window l)."""
+        return l if self.depth is None else self.depth
+
+
+def as_comm_policy(comm) -> CommPolicy:
+    """Promote ``comm`` (None | mode string | CommPolicy) to a
+    :class:`CommPolicy` -- the one normalization point, mirroring
+    ``as_preconditioner`` for ``M=``."""
+    if comm is None:
+        return CommPolicy()
+    if isinstance(comm, CommPolicy):
+        return comm
+    if isinstance(comm, str):
+        return CommPolicy(mode=comm)
+    raise TypeError(
+        f"cannot interpret {type(comm).__name__} as a communication "
+        f"policy; pass one of {'|'.join(COMM_MODES)} or a "
+        "repro.core.comm.CommPolicy")
+
+
+@dataclasses.dataclass(frozen=True)
+class CommRuntime:
+    """Resolved split-phase reduction, consumed by ``plcg_scan``'s
+    in-flight queue (built per sweep by :func:`build_comm_runtime`).
+
+    ``overlap``: ``start(payload)`` issues the ``psum_scatter`` (returns
+    the local shard of the partially reduced, zero-padded payload);
+    ``finish(shard, width)`` issues the delayed ``all_gather`` and
+    unpads; ``nshards`` sizes the in-flight shard slots.
+
+    ``ring``: ``schedule`` is the static hop list -- one
+    ``(axis_name, perm, reset_circ)`` per neighbor exchange of the
+    circulate-accumulate all-reduce (rows then columns on a 2-D torus);
+    slot j of the queue applies hop ``l-1-j`` while shifting, so a
+    payload completes all hops strictly before reaching the head.
+    """
+
+    mode: str
+    depth: int
+    nshards: int = 1
+    start: Optional[Callable] = None
+    finish: Optional[Callable] = None
+    schedule: tuple = ()
+
+
+def build_comm_runtime(policy: CommPolicy, op, l: int) -> Optional[CommRuntime]:
+    """Resolve ``policy`` against operator ``op`` for pipeline depth l.
+
+    Returns ``None`` for the blocking policy (the engine keeps its plain
+    ``reduce_scalars`` psum).  Raises the uniform capability errors when
+    the operator lacks the split-phase form or the pipeline is too
+    shallow for the requested staging -- called once at preparation time
+    (``PreparedMeshSolver``), never per solve.
+    """
+    policy = as_comm_policy(policy)
+    if policy.is_blocking:
+        return None
+    if policy.mode == "overlap":
+        if (getattr(op, "reduce_scalars_start", None) is None
+                or getattr(op, "reduce_scalars_finish", None) is None):
+            raise ValueError(
+                f"operator {type(op).__name__!r} has no split-phase "
+                "reduction (reduce_scalars_start/reduce_scalars_finish), "
+                "so comm='overlap' has no execution path on it; implement "
+                "the split-phase form of the DistributedOperator protocol "
+                "or use comm='blocking'")
+        d = policy.resolve_depth(l)
+        if not 1 <= d <= l:
+            raise ValueError(
+                f"comm='overlap' depth must satisfy 1 <= depth <= l "
+                f"(the reduction is consumed exactly l={l} iterations "
+                f"after issue), got depth={d}")
+        # late-binding closures: ``op`` may be a weakref.proxy (the mesh
+        # sweep builders trace through one so the cached jitted program
+        # never pins the operator) -- resolving the bound method here
+        # would capture a strong reference to the referent
+        return CommRuntime(mode="overlap", depth=d, nshards=_nshards(op),
+                           start=lambda p: op.reduce_scalars_start(p),
+                           finish=lambda s, w: op.reduce_scalars_finish(s, w))
+    # ring
+    sched_fn = getattr(op, "ring_schedule", None)
+    if sched_fn is None:
+        raise ValueError(
+            f"operator {type(op).__name__!r} has no ring reduction "
+            "schedule (ring_schedule), so comm='ring' has no execution "
+            "path on it; implement the split-phase form of the "
+            "DistributedOperator protocol or use comm='blocking'")
+    schedule = tuple(sched_fn())
+    if l < len(schedule) + 1:
+        raise ValueError(
+            f"comm='ring' needs pipeline depth l >= {len(schedule) + 1} "
+            f"(= {len(schedule)} ring hops of this mesh + 1) so every "
+            f"payload completes its hops before consumption, got l={l}; "
+            "deepen the pipeline or use comm='overlap'")
+    return CommRuntime(mode="ring", depth=l, schedule=schedule)
+
+
+def _nshards(op) -> int:
+    """Number of shards the split reduction scatters over."""
+    import numpy as np
+    return int(np.prod(list(op.mesh.shape.values())))
+
+
+def ring_hop(spec, acc, circ):
+    """Apply one circulate-accumulate ring hop.
+
+    ``spec = (axis_name, perm, reset_circ)``: circulate the running
+    buffer (or, entering a new torus phase, the accumulated partial) one
+    position around the ring and fold it into the accumulator.  Pure
+    neighbor traffic -- exactly one ``ppermute``.
+    """
+    import jax
+
+    axis, perm, reset = spec
+    circ2 = jax.lax.ppermute(acc if reset else circ, axis, list(perm))
+    return acc + circ2, circ2

@@ -95,7 +95,12 @@ class MethodSpec:
     are rejected by :func:`solve` / :class:`~repro.core.session.Solver`
     with a uniform error instead of leaking into the method body (where
     they used to surface as an adapter-dependent ``TypeError`` or be
-    swallowed silently).
+    swallowed silently).  ``supports_comm`` marks methods whose mesh
+    execution honors a ``comm=`` communication policy (split-phase /
+    ring reductions; see ``repro.core.comm``).  ``mesh_options`` is the
+    subset of ``options`` the mesh execution path honors -- the single
+    place that restriction lives (checked by ``_prepare_mesh_options``;
+    the mesh adapters no longer carry their own allow-lists).
     """
 
     name: str
@@ -104,31 +109,46 @@ class MethodSpec:
     description: str = ""
     supports_M: bool = True
     supports_mesh: bool = False
+    supports_comm: bool = False
     uses_sigma: bool = False
     options: frozenset = frozenset()
+    mesh_options: frozenset = frozenset()
 
 
 def register(name: str, *, batched: str = "loop", description: str = "",
              supports_M: bool = True, supports_mesh: bool = False,
-             uses_sigma: bool = False, options: Sequence[str] = ()):
+             supports_comm: bool = False, uses_sigma: bool = False,
+             options: Sequence[str] = (), mesh_options: Sequence[str] = ()):
     """Decorator registering a solver adapter under ``name``.
 
     ``uses_sigma`` marks pipelined methods that consume the auxiliary-
     basis shifts -- only those trigger the (possibly costly) default
     shift-interval derivation from ``M.precond_spectrum``.  ``options``
     is the closed set of method-specific ``**options`` keys the adapter
-    accepts (execution paths may restrict it further, never widen it).
+    accepts; ``mesh_options`` (must be a subset) is what survives on the
+    mesh execution path (execution paths may restrict the sets further,
+    never widen them).
     """
     if batched not in ("loop", "vmap"):
         raise ValueError(f"batched must be 'loop' or 'vmap', got {batched!r}")
+    if set(mesh_options) - set(options):
+        raise ValueError(
+            f"mesh_options {sorted(set(mesh_options) - set(options))} of "
+            f"method {name!r} are not declared in options")
+    if supports_comm and not supports_mesh:
+        raise ValueError(
+            f"method {name!r} declares supports_comm without supports_mesh; "
+            "communication policies only select the mesh reduction")
 
     def deco(fn):
         _REGISTRY[name] = MethodSpec(name=name, fn=fn, batched=batched,
                                      description=description,
                                      supports_M=supports_M,
                                      supports_mesh=supports_mesh,
+                                     supports_comm=supports_comm,
                                      uses_sigma=uses_sigma,
-                                     options=frozenset(options))
+                                     options=frozenset(options),
+                                     mesh_options=frozenset(mesh_options))
         return fn
 
     return deco
@@ -139,9 +159,36 @@ def methods() -> tuple[str, ...]:
     return tuple(sorted(_REGISTRY))
 
 
+#: The cross-cutting solve knobs -- the keyword-only group every entry
+#: point (:func:`solve`, :class:`~repro.core.session.Solver`,
+#: ``prepare_on_mesh``) accepts on top of the per-method ``**options``.
+#: ONE validation table: each knob maps to the ``MethodSpec`` capability
+#: flag that gates it (None = accepted by every method) and the execution
+#: path it selects; the ``_prepare_*`` helper named in the third column
+#: normalizes it exactly once per prepared solver (never per call).
+#:
+#:   knob        capability flag   normalized by                path
+#:   ----------  ----------------  ---------------------------  -----------
+#:   ``M=``      ``supports_M``    ``_prepare_preconditioner``  all
+#:   ``mesh=``   ``supports_mesh`` ``_prepare_mesh_check``      mesh only
+#:   ``backend=``  --              ``plcg_scan`` BACKENDS       single-dev
+#:                                 (warned + ignored on a mesh)
+#:   ``comm=``   ``supports_comm`` ``_prepare_comm``            mesh only
+#:                                 (rejected off-mesh up front)
+_KNOB_TABLE = {
+    "M": "supports_M",
+    "mesh": "supports_mesh",
+    "backend": None,
+    "comm": "supports_comm",
+}
+
+
 def methods_supporting(capability: str) -> tuple[str, ...]:
-    """Registered method names carrying a capability flag ("M" | "mesh")."""
-    flag = {"M": "supports_M", "mesh": "supports_mesh"}[capability]
+    """Registered method names carrying a capability flag
+    ("M" | "mesh" | "comm") -- derived from :data:`_KNOB_TABLE`."""
+    flag = _KNOB_TABLE[capability]
+    if flag is None:
+        return methods()
     return tuple(m for m in methods() if getattr(_REGISTRY[m], flag))
 
 
@@ -297,6 +344,57 @@ def _prepare_mesh_check(spec: MethodSpec, backend) -> None:
             stacklevel=_stacklevel_outside_engine())
 
 
+def _prepare_comm(spec: MethodSpec, comm, on_mesh: bool):
+    """Normalize ``comm=`` once (string -> ``CommPolicy``) and gate it on
+    the capability flag and the execution path -- non-blocking policies
+    select the *mesh* reduction schedule, so off-mesh uses are rejected
+    up front with the same uniform style as ``M=`` / ``mesh=``."""
+    from .comm import as_comm_policy
+    policy = as_comm_policy(comm)
+    if policy.is_blocking:
+        return policy
+    if not spec.supports_comm:
+        raise ValueError(
+            f"method {spec.name!r} does not support communication "
+            f"policies (comm=); methods with comm= support: "
+            f"{', '.join(methods_supporting('comm'))}")
+    if not on_mesh:
+        raise ValueError(
+            f"comm={policy.mode!r} selects the mesh reduction schedule "
+            "and has no single-device execution path; pass mesh=... (or "
+            "a DistributedOperator) or drop comm=")
+    return policy
+
+
+def _prepare_mesh_options(spec: MethodSpec, options: dict) -> None:
+    """Reject declared method options the mesh execution path does not
+    honor (``MethodSpec.mesh_options``) -- the single validation table
+    replacing the allow-lists the mesh adapters used to hard-code."""
+    unsupported = set(options) - spec.mesh_options
+    if unsupported:
+        supported = (f"; mesh-supported options for {spec.name!r}: "
+                     f"{', '.join(sorted(spec.mesh_options))}"
+                     if spec.mesh_options else "")
+        raise ValueError(
+            f"options {sorted(unsupported)} are not supported by the "
+            f"mesh-aware {spec.name} path{supported}")
+
+
+def _prepare_knobs(spec: MethodSpec, *, M, backend, mesh, comm,
+                   on_mesh: Optional[bool] = None):
+    """One-stop validation of the cross-cutting knob group (M= / mesh= /
+    backend= / comm= -- see :data:`_KNOB_TABLE`): runs each knob's
+    ``_prepare_*`` helper in table order and returns the normalized
+    ``(M, comm)`` pair.  ``on_mesh`` may be forced when the mesh path is
+    selected by an operator rather than an explicit ``mesh=``."""
+    on_mesh = (mesh is not None) if on_mesh is None else on_mesh
+    M = _prepare_preconditioner(spec, M)
+    if on_mesh:
+        _prepare_mesh_check(spec, backend)
+    comm = _prepare_comm(spec, comm, on_mesh)
+    return M, comm
+
+
 # --------------------------------------------------------------------------
 # the front-end
 # --------------------------------------------------------------------------
@@ -315,6 +413,7 @@ def solve(
     spectrum: Optional[tuple] = None,
     backend: Optional[str] = None,
     mesh=None,
+    comm=None,
     **options,
 ) -> SolveResult:
     """Solve ``A x = b`` (or a stacked batch ``A X[j] = B[j]``).
@@ -354,6 +453,17 @@ def solve(
         shard-local preconditioning composes (``M=BlockJacobi(...)``,
         ``Jacobi`` with a constant diagonal, ``Chebyshev``) and keeps the
         one-psum contract.
+      comm: communication policy for the mesh reduction -- ``"blocking"``
+        (default, one fused psum per iteration), ``"overlap"`` (split
+        psum_scatter + delayed all_gather carried in the scan-state
+        queue; genuinely in flight across d iterations of local
+        compute), ``"ring"`` (circulate-accumulate ppermute hops staged
+        across iterations; needs ``l >= hops + 1``), or a
+        :class:`repro.core.comm.CommPolicy` (e.g. with an explicit
+        overlap ``depth``).  Methods without the ``supports_comm``
+        capability, and non-mesh calls, reject non-blocking policies up
+        front.  See the ``M=``/``mesh=``/``backend=``/``comm=`` knob
+        table in this module (``_KNOB_TABLE``).
       **options: method-specific extras (``trace_gaps``, ``record_G``,
         ``max_restarts``, ``exploit_symmetry``, ...); keys outside the
         method's declared option set raise a uniform error naming the
@@ -379,7 +489,7 @@ def solve(
     _prepare_options(get_method(method), options)
     return Solver(A, method=method, tol=tol, maxiter=maxiter, M=M, l=l,
                   sigma=sigma, spectrum=spectrum, backend=backend,
-                  mesh=mesh, **options).solve(b, x0=x0)
+                  mesh=mesh, comm=comm, **options).solve(b, x0=x0)
 
 
 # --------------------------------------------------------------------------
@@ -549,10 +659,11 @@ def _method_dlanczos(A, b, x0=None, *, tol=1e-8, maxiter=1000, M=None, l=1,
     return d_lanczos(A, b, x0, tol=tol, maxiter=maxiter, M=M, **kw)
 
 
-@register("plcg", batched="vmap", supports_mesh=True,
+@register("plcg", batched="vmap", supports_mesh=True, supports_comm=True,
           uses_sigma=True,
           options=("exploit_symmetry", "record_G", "trace_gaps", "prune",
                    "max_restarts"),
+          mesh_options=("exploit_symmetry", "max_restarts"),
           description="deep-pipelined p(l)-CG reference (paper Alg. 2)")
 def _method_plcg(A, b, x0=None, *, tol=1e-8, maxiter=1000, M=None, l=1,
                  sigma=None, spectrum=None, backend=None, **kw):
@@ -588,8 +699,9 @@ def _run_plcg_scan(A, b, x0, *, tol, maxiter, M, l, sigma, spectrum,
 
 
 @register("plcg_scan", batched="vmap", supports_mesh=True,
-          uses_sigma=True,
+          supports_comm=True, uses_sigma=True,
           options=("exploit_symmetry", "max_restarts", "unroll"),
+          mesh_options=("exploit_symmetry", "max_restarts"),
           description="jitted lax.scan p(l)-CG production engine (Alg. 3)")
 def _method_plcg_scan(A, b, x0=None, *, tol=1e-8, maxiter=1000, M=None, l=1,
                       sigma=None, spectrum=None, backend=None, **kw):

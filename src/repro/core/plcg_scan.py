@@ -47,7 +47,10 @@ class PLCGState(NamedTuple):
     Gb: jax.Array          # (ncols, 2l+1) banded G, row c = band of column c
     gam: jax.Array         # (ncols,)
     dlt: jax.Array         # (ncols,)
-    inflight: jax.Array    # (l, 2l+1) in-flight reduction payloads
+    inflight: tuple        # in-flight reduction queue: (l, 2l+1) array
+    #                        (blocking) or the comm policy's slot pytree
+    #                        (overlap: scattered shards [+ gathered tail];
+    #                        ring: (acc, circ) hop buffers)
     x: jax.Array           # (n,) current solution x_{i-l}
     p: jax.Array           # (n,) search direction p_{i-l}
     eta: jax.Array         # scalar eta_{i-l}
@@ -88,6 +91,7 @@ def plcg_scan(
     backend: Optional[str] = None,
     stencil_hw: Optional[tuple] = None,
     k_budget: Optional[jax.Array] = None,
+    comm=None,
 ) -> PLCGOut:
     """Run ``iters`` bodies of p(l)-CG (solution index reaches iters-l-1).
 
@@ -101,6 +105,21 @@ def plcg_scan(
     solution updates have been committed: restart drivers with a global
     iteration budget pass the *remaining* budget per sweep instead of
     recompiling a differently-sized scan.
+
+    ``comm`` (optional) is a resolved ``repro.core.comm.CommRuntime``
+    selecting how the per-iteration reduction is realized inside the
+    depth-l queue: ``None`` keeps the blocking form (one fused
+    ``reduce_scalars`` call per iteration); ``"overlap"`` splits it into
+    ``comm.start`` (psum_scatter) at push and ``comm.finish``
+    (all_gather) ``comm.depth`` iterations later, carrying scattered
+    shard slots in the queue; ``"ring"`` replaces the all-reduce with
+    circulate-accumulate ``ppermute`` hops applied while the queue
+    shifts.  The total consumption delay stays EXACTLY l in every mode
+    -- the recurrences finalize column i-l+1 from the dots of body i-l
+    -- so the policy changes only which collective runs and where inside
+    the l-body window it completes.  Only meaningful on the distributed
+    path (``reduce_scalars`` injected); collectives still execute
+    unconditionally on frozen lanes, matching the blocking psum.
 
     ``backend`` selects the implementation of the iteration hot path:
 
@@ -152,6 +171,77 @@ def plcg_scan(
     dot = dot_local or _default_dot
     red = reduce_scalars or (lambda p: p)
     W = 2 * l + 1
+
+    # ---- in-flight reduction queue (comm policy) -------------------------
+    # queue_pop reads the head (the payload produced exactly l bodies ago)
+    # plus, for split policies, the auxiliary value that must transit the
+    # queue this body (the freshly gathered payload); queue_push shifts the
+    # queue and inserts this body's payload at the tail.  Collectives live
+    # ONLY inside these two closures, run unconditionally every body (the
+    # freeze/convergence select gates the state commit, never the
+    # collective), and the head-to-tail distance is l in every mode.
+    if comm is None or comm.mode == "blocking":
+        inflight0 = jnp.zeros((l, W), b.dtype)
+
+        def queue_pop(q):
+            return q[0], None
+
+        def queue_push(q, payload, aux):
+            del aux
+            return jnp.concatenate([q[1:], red(payload)[None]], axis=0)
+    elif comm.mode == "overlap":
+        # scattered shards ride d slots, then (d < l) the gathered full
+        # payload rides the remaining l-d: scatter at push, gather when
+        # leaving the scattered stage -- the reduction is structurally in
+        # flight for d bodies of local work (arXiv:1905.06850)
+        d = comm.depth
+        C = -(-W // comm.nshards)          # zero-padded chunk per shard
+
+        def queue_pop(q):
+            if d == l:
+                return comm.finish(q[0][0], W), None
+            return q[1][0], comm.finish(q[0][0], W)
+
+        def queue_push(q, payload, aux):
+            scat2 = jnp.concatenate([q[0][1:], comm.start(payload)[None]],
+                                    axis=0)
+            if d == l:
+                return (scat2,)
+            return (scat2, jnp.concatenate([q[1][1:], aux[None]], axis=0))
+
+        inflight0 = ((jnp.zeros((d, C), b.dtype),) if d == l else
+                     (jnp.zeros((d, C), b.dtype),
+                      jnp.zeros((l - d, W), b.dtype)))
+    else:                                   # ring
+        # circulate-accumulate all-reduce spread across the queue shifts:
+        # the element landing in slot j has completed l-1-j neighbor hops,
+        # so the head (slot 0) is fully reduced iff l-1 >= len(schedule)
+        # (validated at runtime construction) -- pure ppermute traffic,
+        # no all-reduce primitive at all
+        from .comm import ring_hop
+        sched = comm.schedule
+
+        def queue_pop(q):
+            return q[0][0], None
+
+        def queue_push(q, payload, aux):
+            del aux
+            acc, circ = q
+            new_a, new_c = [], []
+            for j in range(l - 1):
+                a, cc = acc[j + 1], circ[j + 1]
+                h = l - 1 - j               # hops completed once in slot j
+                if 1 <= h <= len(sched):
+                    a, cc = ring_hop(sched[h - 1], a, cc)
+                new_a.append(a)
+                new_c.append(cc)
+            new_a.append(payload)
+            new_c.append(payload)
+            return jnp.stack(new_a), jnp.stack(new_c)
+
+        inflight0 = (jnp.zeros((l, W), b.dtype),
+                     jnp.zeros((l, W), b.dtype))
+
     x0 = jnp.zeros_like(b) if x0 is None else x0
     sig = jnp.asarray(list(sigma), dtype=b.dtype)
     ncols = iters + 2 * l + 2
@@ -196,7 +286,7 @@ def plcg_scan(
     state = PLCGState(
         Zw=Zw, Vw=Vw, Zhw=Zhw, Gb=Gb,
         gam=jnp.zeros(ncols, b.dtype), dlt=jnp.zeros(ncols, b.dtype),
-        inflight=jnp.zeros((l, W), b.dtype),
+        inflight=inflight0,
         x=x0, p=jnp.zeros_like(b),
         eta=jnp.asarray(0.0, b.dtype), zeta=jnp.asarray(0.0, b.dtype),
         k_done=jnp.asarray(-1), done=jnp.asarray(False),
@@ -208,13 +298,14 @@ def plcg_scan(
         row = jax.lax.dynamic_slice_in_dim(Gb, jnp.maximum(r, 0), 1, 0)[0]
         return jnp.where(r >= 0, row, jnp.zeros_like(row))
 
-    def scalar_block(st: PLCGState, i, c):
-        """(K2)+(K3): finalize column c of G from the arrived payload and
-        update the gamma/delta recurrences.  O(l^2) scalar work; values are
-        garbage during warmup (i < l) and discarded by the caller's select,
+    def scalar_block(st: PLCGState, i, c, col_in):
+        """(K2)+(K3): finalize column c of G from the arrived payload
+        ``col_in`` (the queue head popped by the caller) and update the
+        gamma/delta recurrences.  O(l^2) scalar work; values are garbage
+        during warmup (i < l) and discarded by the caller's select,
         exactly like the legacy evaluate-both-phases body."""
         # -------- arrived payload = raw band of column c ------------------
-        col = st.inflight[0]
+        col = col_in
         # symmetric fill (eq. 14): rows c-2l+k, k<l, from earlier columns
         if exploit_symmetry:
             filled = []
@@ -276,11 +367,10 @@ def plcg_scan(
                        (v_k - dkm1 * st.p) / eta_safe)
         return x2, p2, eta_k, zeta_k, jnp.maximum(k, st.k_done)
 
-    def finalize(st: PLCGState, i, payload, brk, x2, p2, eta2, zeta2, k2,
-                 Vw2, Zw2, Zhw2, Gb2, gam2, dlt2):
+    def finalize(st: PLCGState, i, payload, q_aux, brk, x2, p2, eta2, zeta2,
+                 k2, Vw2, Zw2, Zhw2, Gb2, gam2, dlt2):
         """Queue push + convergence/freeze commit, shared by both bodies."""
-        payload = red(payload)
-        inflight2 = jnp.concatenate([st.inflight[1:], payload[None]], axis=0)
+        inflight2 = queue_push(st.inflight, payload, q_aux)
         conv_now = ((i >= l) & jnp.logical_not(st.done) & jnp.logical_not(brk)
                     & (jnp.abs(zeta2) <= tol * bnorm))
         # budget freeze: k2 + 1 updates are committed after this body
@@ -305,6 +395,11 @@ def plcg_scan(
         # ---------------- (K1) SPMV --------------------------------------
         t_hat = matvec(st.Zw[:, 0])
         t = prec(t_hat) if prec is not None else t_hat
+        # pop AFTER the SPMV + shard-local preconditioner apply in trace
+        # order: with a split comm policy the head-of-queue gather is
+        # issued here with no data dependence on t, so the prec apply is
+        # free to overlap the in-flight reduction (paper Remark 13)
+        col_in, q_aux = queue_pop(st.inflight)
 
         c = i - l + 1                       # column being finalized
 
@@ -318,7 +413,7 @@ def plcg_scan(
 
         def steady(_):
             (col, gcc, brk, Gb2, gam2, dlt2, gam_c1, dlt_c1,
-             dsub) = scalar_block(st, i, c)
+             dsub) = scalar_block(st, i, c, col_in)
             # -------- (K4) v recurrence (line 17) -------------------------
             # v_c = (z_c - sum_k col[k] v_{c-2l+k}) / gcc ;
             # v_{c-2l+k} = Vw[:, 2l-1-k]
@@ -379,7 +474,7 @@ def plcg_scan(
         # nonexistent rows during warmup)
         vmask = jnp.arange(l + 1) + (i + 1 - 2 * l) >= 0
         payload = jnp.concatenate([vd[::-1] * vmask, zd[::-1]])  # band layout
-        return finalize(st, i, payload, brk, x2, p2, eta2, zeta2, k2,
+        return finalize(st, i, payload, q_aux, brk, x2, p2, eta2, zeta2, k2,
                         Vw2, Zw2, Zhw2, Gb2, gam2, dlt2)
 
     def body_fused(st: PLCGState, i):
@@ -387,8 +482,9 @@ def plcg_scan(
         (K1 when the stencil is fused) + (K4) + (K5); only the O(l^2)
         scalar recurrences (K2/K3/K6) stay in jnp."""
         c = i - l + 1
+        col_in, q_aux = queue_pop(st.inflight)
         (col, gcc, brk, Gb2, gam2, dlt2, gam_c1, dlt_c1,
-         dsub) = scalar_block(st, i, c)
+         dsub) = scalar_block(st, i, c, col_in)
         if fuse_stencil:
             # in-kernel SPMV (+ in-kernel diag apply when preconditioned)
             t = t_hat = None
@@ -440,7 +536,7 @@ def plcg_scan(
             vd = vd_full
         vmask = jnp.arange(l + 1) + (i + 1 - 2 * l) >= 0
         payload = jnp.concatenate([vd[::-1] * vmask, zd[::-1]])
-        return finalize(st, i, payload, brk, x2, p2, eta2, zeta2, k2,
+        return finalize(st, i, payload, q_aux, brk, x2, p2, eta2, zeta2, k2,
                         Vw2, Zw2, Zhw2, Gb2, gam2, dlt2)
 
     final, resnorms = jax.lax.scan(body_fused if use_fused else body, state,

@@ -148,10 +148,16 @@ class Solver:
     def __init__(self, A, method: str = "plcg_scan", *, tol: float = 1e-8,
                  maxiter: int = 1000, M=None, l: int = 1, sigma=None,
                  spectrum=None, backend: Optional[str] = None, mesh=None,
-                 n: Optional[int] = None, **options):
+                 comm=None, n: Optional[int] = None, **options):
         spec = engine._prepare_method(method)
         engine._prepare_options(spec, options)
-        M = engine._prepare_preconditioner(spec, M)
+        on_mesh = mesh is not None or engine._is_mesh_operator(A)
+        # the cross-cutting knob group (M=/mesh=/backend=/comm=) is
+        # validated and normalized ONCE here, through the engine's single
+        # knob table -- no layer below re-validates per call
+        M, comm = engine._prepare_knobs(spec, M=M, backend=backend,
+                                        mesh=mesh, comm=comm,
+                                        on_mesh=on_mesh)
         spectrum = engine._prepare_spectrum(spec, M, sigma, spectrum)
         self.method = method
         self.spec = spec
@@ -162,6 +168,7 @@ class Solver:
         self.sigma = sigma
         self.spectrum = spectrum
         self.backend = backend
+        self.comm = comm
         self.options = dict(options)
         self._pending: list = []
         self._prepared: dict = {}       # strong refs: config -> jitted fn
@@ -169,14 +176,13 @@ class Solver:
                       "flushed_rhs": 0, "padded_lanes": 0}
 
         self._mesh_session = None
-        if mesh is not None or engine._is_mesh_operator(A):
-            engine._prepare_mesh_check(spec, backend)
+        if on_mesh:
             # lazy import: keeps the core engine importable where the
             # distributed layer (shard_map et al.) is unavailable
             from ..distributed.plcg_dist import prepare_on_mesh
             self._mesh_session = prepare_on_mesh(
                 spec, A, mesh, M=M, l=l, sigma=sigma, spectrum=spectrum,
-                backend=backend, **options)
+                comm=comm, **options)
             self._op = self._mesh_session.op
             return
 
@@ -405,6 +411,7 @@ class Solver:
             return _mesh_plcg(sess.op, B, X0, tol=self.tol,
                               maxiter=self.maxiter, l=sess.l,
                               sigma=sess.sig, prec=sess.prec,
+                              comm=sess.comm,
                               get_sweep=sess._get_sweep("plcg", self.tol),
                               **opts)
         op = self._ensure_op(B[0])

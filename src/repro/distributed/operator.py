@@ -11,6 +11,17 @@ solver engine injects into ``plcg_scan`` /  the distributed CG body:
   * ``dot_local``      -- a local partial inner product (no collective);
   * ``reduce_scalars`` -- the global sum of a stacked scalar payload (ONE
     ``psum`` per call; the engine calls it exactly once per iteration);
+  * ``reduce_scalars_start`` / ``reduce_scalars_finish`` -- (optional)
+    the SPLIT-PHASE form of the reduction backing ``comm="overlap"``:
+    ``start`` issues a ``psum_scatter`` of the (zero-padded) payload and
+    returns the local shard of the partial sums, ``finish(shard, width)``
+    completes it with an ``all_gather`` and unpads -- the engine carries
+    the shard in its scan-state queue and calls ``finish`` d iterations
+    later, so the reduction is structurally in flight across d bodies of
+    local compute;
+  * ``ring_schedule`` -- (optional) the static hop list backing
+    ``comm="ring"``: ``(axis_name, perm, reset)`` neighbor exchanges of a
+    circulate-accumulate all-reduce, applied one per queue shift;
   * ``prec_local``     -- (optional) resolve a structured
     ``repro.core.precond.Preconditioner`` into its shard-local apply, or
     None when that preconditioner has no communication-free form on this
@@ -147,6 +158,47 @@ class DistPoisson:
 
     def reduce_scalars(self, payload: jax.Array) -> jax.Array:
         return jax.lax.psum(payload, self.axes)
+
+    @property
+    def nshards(self) -> int:
+        return self.px * self.py
+
+    def reduce_scalars_start(self, payload: jax.Array) -> jax.Array:
+        """Issue the reduction: one ``psum_scatter`` of the zero-padded
+        payload over the full device grid; returns this shard's chunk of
+        the partial sums (``ceil(W/nshards)`` entries).  The matching
+        ``reduce_scalars_finish`` may run any number of iterations later
+        -- the scatter+gather pair composes to exactly the ``psum``."""
+        w = payload.shape[-1]
+        wp = -(-w // self.nshards) * self.nshards
+        if wp != w:
+            pad = [(0, 0)] * (payload.ndim - 1) + [(0, wp - w)]
+            payload = jnp.pad(payload, pad)
+        return jax.lax.psum_scatter(payload, self.axes,
+                                    scatter_dimension=payload.ndim - 1,
+                                    tiled=True)
+
+    def reduce_scalars_finish(self, shard: jax.Array, width: int) -> jax.Array:
+        """Complete a split reduction: ``all_gather`` the partial-sum
+        chunks and drop the zero padding back to ``width`` entries."""
+        full = jax.lax.all_gather(shard, self.axes, axis=shard.ndim - 1,
+                                  tiled=True)
+        return full[..., :width]
+
+    def ring_schedule(self) -> tuple:
+        """Hop list of the circulate-accumulate all-reduce on the 2-D
+        torus: ``px - 1`` wraparound hops along the row ring (each rank
+        accumulates every row partner), then ``py - 1`` along the column
+        ring circulating the row-complete partials (``reset`` re-seeds
+        the circulating buffer from the accumulator at the phase entry).
+        ``(px-1) + (py-1)`` neighbor exchanges total; composes to the
+        full ``psum`` over ``axes``."""
+        ring_r = tuple((i, (i + 1) % self.px) for i in range(self.px))
+        ring_c = tuple((i, (i + 1) % self.py) for i in range(self.py))
+        hops = [(self.row_axis, ring_r, False) for _ in range(self.px - 1)]
+        hops += [(self.col_axis, ring_c, h == 0)
+                 for h in range(self.py - 1)]
+        return tuple(hops)
 
     def prec_local(self, M):
         """Shard-local apply of a structured preconditioner, or None.

@@ -58,6 +58,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map_compat
 from repro.core import engine as _engine
+from repro.core.comm import as_comm_policy, build_comm_runtime
 from repro.core.plcg_scan import plcg_scan, run_restart_driver
 from repro.core.results import SolveResult
 from repro.core.solver_cache import WeakCallableCache
@@ -137,7 +138,7 @@ def _weak_prec_resolver(op, prec):
 def plcg_mesh_sweep(op: DistributedOperator, *, l: int, iters: int,
                     sigma: Sequence[float], tol: float = 0.0,
                     exploit_symmetry: bool = True, batched: bool = False,
-                    prec=None):
+                    prec=None, comm=None):
     """Build (cached) the jitted p(l)-CG mesh sweep.
 
     Returns a jitted callable ``(b, x0, k_budget) -> (x, resnorms,
@@ -149,10 +150,22 @@ def plcg_mesh_sweep(op: DistributedOperator, *, l: int, iters: int,
     ``repro.core.precond.Preconditioner`` resolved shard-locally via
     :func:`resolve_prec_local`; its apply is communication-free (or
     neighbor-halo only), so the traced program STILL contains exactly ONE
-    ``psum`` in its scan body -- the structural acceptance gate verified
-    by ``repro.kernels.introspect.count_primitive_in_scan_bodies``.
+    reduction per scan body -- with the default blocking ``comm`` policy
+    a single ``psum``, the structural acceptance gate verified by
+    ``repro.kernels.introspect.count_primitive_in_scan_bodies``.
+
+    ``comm`` (a ``repro.core.comm.CommPolicy`` or mode string) selects
+    how that reduction is realized: ``"overlap"`` splits it into a
+    ``psum_scatter`` at issue and an ``all_gather`` ``depth`` iterations
+    later (zero bare psums in the scan body -- the reduction is
+    structurally in flight); ``"ring"`` stages circulate-accumulate
+    ``ppermute`` hops across the queue shifts.  The policy is part of the
+    sweep cache key; its operator capabilities are validated here via
+    ``build_comm_runtime`` (prepared sessions validate earlier, at
+    construction).
     """
     sig = tuple(sigma)
+    policy = as_comm_policy(comm)
 
     def build():
         # the cached jitted program must not pin the operator (the cache
@@ -160,6 +173,7 @@ def plcg_mesh_sweep(op: DistributedOperator, *, l: int, iters: int,
         # proxy, like the single-device sweep's weakly_callable closures
         opref = weakref.proxy(op)
         resolve = _weak_prec_resolver(opref, prec)
+        runtime = build_comm_runtime(policy, opref, l)
 
         def one(b_blk, x_blk, k_budget):
             out = plcg_scan(
@@ -169,6 +183,7 @@ def plcg_mesh_sweep(op: DistributedOperator, *, l: int, iters: int,
                 dot_local=opref.dot_local,
                 reduce_scalars=opref.reduce_scalars,
                 exploit_symmetry=exploit_symmetry, k_budget=k_budget,
+                comm=runtime,
             )
             return (out.x.reshape(b_blk.shape), out.resnorms, out.converged,
                     out.breakdown, out.k_done)
@@ -178,7 +193,8 @@ def plcg_mesh_sweep(op: DistributedOperator, *, l: int, iters: int,
 
     return _MESH_SWEEP_CACHE.get_or_build(
         (op, prec),
-        ("plcg", l, iters, sig, tol, exploit_symmetry, batched), build)
+        ("plcg", l, iters, sig, tol, exploit_symmetry, batched, policy),
+        build)
 
 
 def cg_mesh_sweep(op: DistributedOperator, *, iters: int, tol: float = 0.0,
@@ -296,18 +312,24 @@ def _canonicalize_b(op: DistributedOperator, b, x0):
 
 def _mesh_plcg(op, b, x0, *, tol, maxiter, l, sigma, prec=None,
                exploit_symmetry: bool = True,
-               max_restarts=None, get_sweep=None) -> SolveResult:
+               max_restarts=None, comm=None, get_sweep=None) -> SolveResult:
     b, x0, batched, orig_shape = _canonicalize_b(op, b, x0)
     sig = tuple(sigma)
+    policy = as_comm_policy(comm)
     if get_sweep is None:
         def get_sweep(*, iters, batched):
             return plcg_mesh_sweep(op, l=l, iters=iters, sigma=sig,
                                    tol=tol,
                                    exploit_symmetry=exploit_symmetry,
-                                   batched=batched, prec=prec)
+                                   batched=batched, prec=prec, comm=policy)
     base_info = {"l": l, "sigma": list(sig), "backend": None,
-                 "mesh": dict(op.mesh.shape), "psums_per_iter": 1,
+                 "mesh": dict(op.mesh.shape), "comm": policy.mode,
+                 # a split/ring policy leaves ZERO blocking psums in the
+                 # scan body (the init reduction outside it stays a psum)
+                 "psums_per_iter": 1 if policy.is_blocking else 0,
                  "prec": getattr(prec, "name", None)}
+    if policy.mode == "overlap":
+        base_info["overlap_depth"] = policy.resolve_depth(l)
 
     if batched:
         if max_restarts is not None:
@@ -432,7 +454,7 @@ class PreparedMeshSolver:
     """
 
     def __init__(self, spec, A, mesh, *, M, l, sigma, spectrum,
-                 **options):
+                 comm=None, **options):
         if spec.name not in _MESH_METHODS:
             if getattr(spec, "supports_mesh", False):
                 raise RuntimeError(
@@ -448,21 +470,22 @@ class PreparedMeshSolver:
         self.prec = M
         if M is not None:
             resolve_prec_local(self.op, M)      # early, uniform validation
+        # mesh-path option restriction + comm policy: both validated once
+        # here through the engine's declarative tables (MethodSpec.
+        # mesh_options / supports_comm) -- the adapters carry no
+        # allow-lists of their own anymore
+        _engine._prepare_mesh_options(spec, options)
+        self.comm = _engine._prepare_comm(spec, comm, on_mesh=True)
         if spec.name == "cg":
             # same contract as the single-device cg adapter: l/sigma/
             # spectrum are pipelined-method knobs and are ignored
-            if options:
-                raise ValueError(
-                    f"options {sorted(options)} are not supported by the "
-                    "mesh-aware cg path")
             self.sig = None
         else:
-            allowed = {"exploit_symmetry", "max_restarts"}
-            if set(options) - allowed:
-                raise ValueError(
-                    f"options {sorted(set(options) - allowed)} are not "
-                    f"supported by the mesh-aware {spec.name} path")
             self.sig = tuple(_engine._resolve_sigma(sigma, spectrum, l))
+            # early, uniform validation of the operator's split-phase /
+            # ring capability and the depth/hop constraints against l --
+            # a prepared session never fails at first solve
+            build_comm_runtime(self.comm, self.op, l)
         self.l = l
         self.options = dict(options)
         self._sweeps: dict = {}         # strong refs to jitted sweeps
@@ -484,6 +507,7 @@ class PreparedMeshSolver:
                     self._sweeps[key] = plcg_mesh_sweep(
                         self.op, l=self.l, iters=iters, sigma=self.sig,
                         tol=tol, batched=batched, prec=self.prec,
+                        comm=self.comm,
                         exploit_symmetry=self.options.get(
                             "exploit_symmetry", True))
                 else:
@@ -512,26 +536,27 @@ class PreparedMeshSolver:
                             get_sweep=self._get_sweep("cg", tol))
         return _MESH_METHODS[self.spec.name](
             self.op, b, x0, tol=tol, maxiter=maxiter, l=self.l,
-            sigma=self.sig, prec=self.prec,
+            sigma=self.sig, prec=self.prec, comm=self.comm,
             get_sweep=self._get_sweep("plcg", tol), **self.options)
 
 
 def prepare_on_mesh(spec, A, mesh, *, M, l, sigma, spectrum, backend=None,
-                    **options) -> PreparedMeshSolver:
+                    comm=None, **options) -> PreparedMeshSolver:
     """Build the prepared mesh session behind ``session.Solver(mesh=...)``
     (validation / promotion / resolution once; see
-    :class:`PreparedMeshSolver`)."""
+    :class:`PreparedMeshSolver`).  ``comm`` selects the reduction policy
+    (``repro.core.comm.CommPolicy`` or mode string)."""
     del backend     # front-end warned; bypassed by construction here
     return PreparedMeshSolver(spec, A, mesh, M=M, l=l, sigma=sigma,
-                              spectrum=spectrum, **options)
+                              spectrum=spectrum, comm=comm, **options)
 
 
 def solve_on_mesh(spec, A, b, *, mesh, x0, tol, maxiter, M, l, sigma,
-                  spectrum, backend, **options) -> SolveResult:
+                  spectrum, backend, comm=None, **options) -> SolveResult:
     """One-shot mesh-aware dispatch behind ``repro.core.solve(mesh=...)``:
     a thin wrapper preparing a :class:`PreparedMeshSolver` and running it
     on ``b`` (the session API is the primary entry point; this keeps the
     legacy call-per-solve contract)."""
     return prepare_on_mesh(spec, A, mesh, M=M, l=l, sigma=sigma,
-                           spectrum=spectrum, backend=backend,
+                           spectrum=spectrum, backend=backend, comm=comm,
                            **options).solve(b, x0, tol=tol, maxiter=maxiter)

@@ -9,10 +9,16 @@ collective latency):
   per hot-path kernel (:func:`count_pallas_calls`);
 * the mesh engine's scan body must contain exactly ONE ``psum`` for the
   stacked (nrhs, 2l+1) payload, vs TWO for the classic-CG baseline
-  (:func:`count_primitive_in_scan_bodies` with ``"psum"``).
+  (:func:`count_primitive_in_scan_bodies` with ``"psum"``);
+* under ``comm="overlap"`` the body must instead contain exactly one
+  ``reduce_scatter`` + one ``all_gather`` and ZERO bare psums -- the
+  split reduction is structurally in flight
+  (:func:`count_collectives_in_scan_bodies` returns all four collective
+  counts at once), and the staging depth is visible as the scattered
+  slot block in the scan carry (:func:`scan_carry_shapes`).
 
-Counting equations in the traced jaxpr verifies both without running
-anything.
+Counting equations in the traced jaxpr verifies all of this without
+running anything.
 """
 from __future__ import annotations
 
@@ -58,6 +64,59 @@ def count_primitive_in_scan_bodies(fn, primitive: str, *args,
     bodies: list = []
     _collect_scan_bodies(closed.jaxpr, bodies, set())
     return [_count(b, primitive, set()) for b in bodies]
+
+
+#: jaxpr primitive names of the collectives a comm policy can emit (note
+#: ``psum_scatter`` traces as ``reduce_scatter``).
+COLLECTIVE_PRIMITIVES = ("psum", "reduce_scatter", "all_gather", "ppermute")
+
+
+def count_collectives_in_scan_bodies(fn, *args, **kwargs) -> list[dict]:
+    """Per-scan-body counts of every collective primitive at once.
+
+    One dict per scan equation (same order as
+    :func:`count_primitive_in_scan_bodies`), mapping each name in
+    :data:`COLLECTIVE_PRIMITIVES` to its per-iteration count -- the
+    structural signature of a comm policy: blocking
+    ``{"psum": 1, ...}``, overlap ``{"psum": 0, "reduce_scatter": 1,
+    "all_gather": 1, ...}``, ring all-zeros except ``ppermute`` (halo
+    hops + reduction hops).
+    """
+    closed = jax.make_jaxpr(fn)(*args, **kwargs)
+    bodies: list = []
+    _collect_scan_bodies(closed.jaxpr, bodies, set())
+    return [{p: _count(b, p, set()) for p in COLLECTIVE_PRIMITIVES}
+            for b in bodies]
+
+
+def scan_carry_shapes(fn, *args, **kwargs) -> list[list[tuple]]:
+    """Per-scan carry layouts: one list of ``(shape...)`` tuples per scan
+    equation reachable from ``fn``'s jaxpr, in traversal order.
+
+    The in-flight reduction queue lives in the scan carry, so its
+    staging depth is readable here without running anything: a blocking
+    p(l)-CG sweep carries one ``(l, 2l+1)`` payload block, an overlap
+    sweep a ``(d, ceil((2l+1)/nshards))`` scattered-shard block (plus an
+    ``(l-d, 2l+1)`` gathered block when ``d < l``), a ring sweep two
+    ``(l, 2l+1)`` hop buffers.
+    """
+    closed = jax.make_jaxpr(fn)(*args, **kwargs)
+    shapes: list = []
+    _collect_scan_carries(closed.jaxpr, shapes, set())
+    return shapes
+
+
+def _collect_scan_carries(jaxpr, out: list, seen: set) -> None:
+    if id(jaxpr) in seen:
+        return
+    seen.add(id(jaxpr))
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "scan":
+            nc, ncarry = eqn.params["num_consts"], eqn.params["num_carry"]
+            out.append([tuple(v.aval.shape)
+                        for v in eqn.invars[nc:nc + ncarry]])
+        for sub in _sub_jaxprs(eqn.params):
+            _collect_scan_carries(sub, out, seen)
 
 
 def _count(jaxpr, primitive: str, seen: set) -> int:

@@ -51,6 +51,14 @@ def main(argv=None):
                     help="preconditioner ladder: jacobi folds into the "
                     "fused megakernel, blockjacobi/chebyshev run "
                     "shard-local on a mesh (one psum per iteration)")
+    ap.add_argument("--comm", type=str, default=None,
+                    choices=["blocking", "overlap", "ring"],
+                    help="mesh reduction schedule: blocking psum (default), "
+                    "split psum_scatter + delayed all_gather (overlap), or "
+                    "staged ppermute ring (mesh runs only)")
+    ap.add_argument("--comm-depth", type=int, default=None,
+                    help="overlap staging depth d, 1 <= d <= l "
+                    "(--comm overlap only; default l)")
     ap.add_argument("--dryrun", action="store_true",
                     help="lower+compile on the production 16x16 (or 32x16 "
                     "with --multi-pod) mesh and report roofline terms")
@@ -133,6 +141,12 @@ def main(argv=None):
         B = b_flat
     mesh = (make_solver_mesh_for(ndev, ny, nx=args.nx) if ndev > 1
             else None)
+    comm = None
+    if args.comm_depth is not None and args.comm != "overlap":
+        ap.error("--comm-depth requires --comm overlap")
+    if args.comm is not None:
+        from repro.core import CommPolicy
+        comm = CommPolicy(mode=args.comm, depth=args.comm_depth)
     M = None
     if args.prec == "jacobi":
         from repro.operators import jacobi
@@ -151,7 +165,7 @@ def main(argv=None):
         solver = Solver(A, args.method, l=args.l, tol=args.tol,
                         maxiter=args.iters,
                         sigma=None if M is not None else sigma,
-                        M=M, backend=args.backend, mesh=mesh)
+                        M=M, backend=args.backend, mesh=mesh, comm=comm)
         pool = SolverPool(solver, max_batch=args.max_batch)
         setup_s = time.time() - t0
         rng = np.random.default_rng(1)
@@ -192,14 +206,15 @@ def main(argv=None):
     # M.precond_spectrum; the hand-picked (0, 8) sigma is only for M=None
     r = solve(A, B, method=args.method, l=args.l, tol=args.tol,
               maxiter=args.iters, sigma=None if M is not None else sigma,
-              M=M, backend=args.backend, mesh=mesh)
+              M=M, backend=args.backend, mesh=mesh, comm=comm)
     dt = time.time() - t0
     x = np.asarray(r.x).reshape(args.nrhs, -1) if args.nrhs > 1 \
         else np.asarray(r.x).reshape(-1)
     res = np.linalg.norm(b_flat - A @ (x[0] if args.nrhs > 1 else x))
     where = f"{ndev}-device mesh {dict(mesh.shape)}" if mesh else "1 device"
     print(f"{args.method} (l={args.l}, nrhs={args.nrhs}, "
-          f"prec={args.prec}) on {args.nx}x{ny} over {where}: "
+          f"prec={args.prec}, comm={r.info.get('comm', 'n/a')}) "
+          f"on {args.nx}x{ny} over {where}: "
           f"{r.iters} iters, {dt:.2f}s, |b-Ax| = {res:.3e}, "
           f"converged={r.converged}")
     if args.nrhs > 1 and "per_rhs_iters" in r.info:

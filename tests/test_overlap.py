@@ -1,0 +1,386 @@
+"""Communication-hiding tests: the ``comm=`` policy ladder on the mesh.
+
+The contract under test (paper Remark 13 + the reduction-pipelining
+design of arXiv:1905.06850): the per-iteration scalar reduction may be
+split -- ``psum_scatter`` at iteration k, delayed ``all_gather`` at
+k+d -- or staged around a ppermute ring, WITHOUT changing the numbers:
+the total consumption delay stays exactly l in every mode, so overlap
+must match blocking to <= 1e-10 per lane while its scan body contains
+ZERO bare psums (one reduce_scatter + one all_gather instead) and the
+staging depth d is readable off the scan carry.
+
+Structural jaxpr gates and the front-end/option contract run in-process
+on a (1, 1) mesh (the traced program is mesh-size independent up to the
+scattered slot width); live multi-device parity runs in subprocesses
+with 8 forced host devices (``dist_env``), plus an in-process (2, 2)
+parity test that activates under the CI overlap lane
+(``--xla_force_host_platform_device_count=8``)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(code: str, env: dict) -> dict:
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=560)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+# ----------------------- policy normalization errors ----------------------
+
+def test_comm_policy_validation():
+    """CommPolicy is the one normalization point: bad modes, misplaced or
+    out-of-range depths, and unpromotable values fail loudly there."""
+    from repro.core import CommPolicy, as_comm_policy
+
+    assert as_comm_policy(None).is_blocking
+    assert as_comm_policy("overlap").mode == "overlap"
+    p = CommPolicy(mode="overlap", depth=2)
+    assert as_comm_policy(p) is p
+    assert p.resolve_depth(5) == 2
+    assert CommPolicy(mode="overlap").resolve_depth(5) == 5
+    with pytest.raises(ValueError, match="comm mode"):
+        CommPolicy(mode="eager")
+    with pytest.raises(ValueError, match="depth applies to"):
+        CommPolicy(mode="blocking", depth=1)
+    with pytest.raises(ValueError, match="depth applies to"):
+        CommPolicy(mode="ring", depth=2)
+    with pytest.raises(ValueError, match="depth must be >= 1"):
+        CommPolicy(mode="overlap", depth=0)
+    with pytest.raises(TypeError, match="communication"):
+        as_comm_policy(3)
+    # hashable: policies key the weak sweep caches
+    assert hash(CommPolicy()) == hash(CommPolicy(mode="blocking"))
+
+
+def test_comm_runtime_capability_errors():
+    """build_comm_runtime raises the uniform capability errors: operators
+    without the split-phase form reject overlap AND ring with the same
+    no-execution-path wording, and too-shallow pipelines reject staging
+    that could not complete before consumption."""
+    from repro.core.comm import CommPolicy, build_comm_runtime
+
+    class Blocking:                      # minimal protocol: psum only
+        pass
+
+    for mode in ("overlap", "ring"):
+        with pytest.raises(ValueError, match="no execution path"):
+            build_comm_runtime(CommPolicy(mode=mode), Blocking(), l=3)
+
+    class Ring4:                         # a (2,4)-torus worth of hops
+        def ring_schedule(self):
+            return (("r", ((0, 1), (1, 0)), False),) * 1 + \
+                   (("c", ((0, 1), (1, 2), (2, 3), (3, 0)), True),) * 3
+
+    with pytest.raises(ValueError, match="l >= 5"):
+        build_comm_runtime(CommPolicy(mode="ring"), Ring4(), l=3)
+    rt = build_comm_runtime(CommPolicy(mode="ring"), Ring4(), l=5)
+    assert rt.mode == "ring" and len(rt.schedule) == 4
+
+    class Split(Blocking):
+        mesh = type("M", (), {"shape": {"data": 2, "model": 2}})()
+
+        def reduce_scalars_start(self, p):
+            return p
+
+        def reduce_scalars_finish(self, s, w):
+            return s
+
+    with pytest.raises(ValueError, match="1 <= depth <= l"):
+        build_comm_runtime(CommPolicy(mode="overlap", depth=4), Split(), l=3)
+    rt = build_comm_runtime(CommPolicy(mode="overlap"), Split(), l=3)
+    assert rt.depth == 3 and rt.nshards == 4
+    assert build_comm_runtime(CommPolicy(), Split(), l=3) is None
+
+
+def test_front_end_rejects_comm_uniformly(x64):
+    """The engine's knob table rejects comm= up front: on methods without
+    the capability flag, and off-mesh where no split reduction exists --
+    the same error through solve() and Solver."""
+    import numpy as np
+    from repro.core import Solver, solve
+    from repro.launch.mesh import make_mesh_compat
+    from repro.operators import poisson2d
+
+    A = poisson2d(8, 8)
+    b = np.asarray(A @ np.ones(A.n)).reshape(8, 8)
+    mesh = make_mesh_compat((1, 1), ("data", "model"))
+    with pytest.raises(ValueError, match="no single-device execution path"):
+        solve(A, b, method="plcg_scan", comm="overlap")
+    with pytest.raises(ValueError, match="does not support communication"):
+        solve(A, b, method="cg", mesh=mesh, comm="overlap")
+    with pytest.raises(ValueError, match="no single-device execution path"):
+        Solver(A, method="plcg_scan", comm="overlap")
+    with pytest.raises(ValueError, match="does not support communication"):
+        Solver(A, method="cg", mesh=mesh, comm="ring")
+    # comm="blocking" is the normalized default: accepted everywhere,
+    # including off-mesh (it selects nothing)
+    r = solve(A, b.reshape(-1), method="plcg_scan", l=1, tol=1e-8,
+              maxiter=100, spectrum=(0.0, 8.0), comm="blocking")
+    assert r.converged
+    # capability introspection names the comm-capable methods
+    from repro.core import methods_supporting
+    assert set(methods_supporting("comm")) == {"plcg", "plcg_scan"}
+
+
+def test_overlap_depth_validated_at_preparation(x64):
+    """Depth out of range fails at Solver/prepare time (once), not inside
+    the jitted sweep."""
+    import numpy as np
+    from repro.core import CommPolicy, Solver
+    from repro.launch.mesh import make_mesh_compat
+    from repro.operators import poisson2d
+
+    A = poisson2d(8, 8)
+    mesh = make_mesh_compat((1, 1), ("data", "model"))
+    with pytest.raises(ValueError, match="1 <= depth <= l"):
+        Solver(A, method="plcg_scan", l=2, spectrum=(0.0, 8.0), mesh=mesh,
+               comm=CommPolicy(mode="overlap", depth=3))
+
+
+# -------------------- structural: the split is in the jaxpr ---------------
+
+def test_overlap_scan_body_collective_signature(x64):
+    """The traced scan body carries the policy's structural signature:
+    blocking = one bare psum; overlap = one reduce_scatter + one
+    all_gather and ZERO psums; ring = ppermutes only.  Halo exchange is
+    4 ppermutes throughout.  Identical for the batched sweep -- all
+    lanes ride the same split reduction."""
+    import jax.numpy as jnp
+    from repro.core.shifts import chebyshev_shifts
+    from repro.distributed import DistPoisson, plcg_mesh_sweep
+    from repro.kernels.introspect import count_collectives_in_scan_bodies
+    from repro.launch.mesh import make_mesh_compat
+
+    mesh = make_mesh_compat((1, 1), ("data", "model"))
+    op = DistPoisson(16, 16, mesh)
+    sig = tuple(chebyshev_shifts(0, 8, 3))
+    b = jnp.ones((16, 16))
+    b3 = jnp.ones((4, 16, 16))
+
+    def counts(comm, batched=False):
+        f = plcg_mesh_sweep(op, l=3, iters=30, sigma=sig, tol=1e-8,
+                            comm=comm, batched=batched)
+        rhs = b3 if batched else b
+        return count_collectives_in_scan_bodies(f, rhs, rhs * 0, 30)[0]
+
+    assert counts("blocking") == {"psum": 1, "reduce_scatter": 0,
+                                  "all_gather": 0, "ppermute": 4}
+    assert counts("overlap") == {"psum": 0, "reduce_scatter": 1,
+                                 "all_gather": 1, "ppermute": 4}
+    assert counts("overlap", batched=True) == {
+        "psum": 0, "reduce_scatter": 1, "all_gather": 1, "ppermute": 4}
+    ring = counts("ring")
+    assert ring["psum"] == 0 and ring["reduce_scatter"] == 0
+    assert ring["all_gather"] == 0           # no all-reduce primitive at all
+
+
+def test_overlap_staging_depth_in_scan_carry(x64):
+    """The in-flight queue lives in the scan carry, so the staging depth
+    d is verifiable without running: d scattered slots (plus l-d gathered
+    slots when d < l), issued at k and consumed at k+d -- staged exactly
+    d apart."""
+    import jax.numpy as jnp
+    from repro.core import CommPolicy
+    from repro.core.shifts import chebyshev_shifts
+    from repro.distributed import DistPoisson, plcg_mesh_sweep
+    from repro.kernels.introspect import scan_carry_shapes
+    from repro.launch.mesh import make_mesh_compat
+
+    mesh = make_mesh_compat((1, 1), ("data", "model"))
+    op = DistPoisson(16, 16, mesh)
+    l = 3
+    W = 2 * l + 1
+    sig = tuple(chebyshev_shifts(0, 8, l))
+    b = jnp.ones((16, 16))
+
+    def carry(comm):
+        f = plcg_mesh_sweep(op, l=l, iters=30, sigma=sig, tol=1e-8,
+                            comm=comm)
+        return scan_carry_shapes(f, b, b * 0, 30)[0]
+
+    # one shard on (1,1): scattered chunk width C == W
+    assert (l, W) in carry("blocking")
+    full = carry(CommPolicy(mode="overlap"))             # d = l
+    assert (l, W) in full
+    shallow = carry(CommPolicy(mode="overlap", depth=1))
+    assert (1, W) in shallow                             # 1 slot in flight
+    assert (l - 1, W) in shallow                         # rest already full
+    ring = carry("ring")
+    assert ring.count((l, W)) >= 2                       # acc + circ buffers
+
+
+# ------------------------ parity: numbers unchanged -----------------------
+
+def test_overlap_matches_blocking_single_shard(x64):
+    """On one shard the split reduction is algebraically the identity, so
+    overlap (both depths) must be bit-compatible with blocking through
+    the full front-end -- and the SolveResult info reports the policy."""
+    import numpy as np
+    from repro.core import CommPolicy, solve
+    from repro.launch.mesh import make_mesh_compat
+    from repro.operators import poisson2d
+
+    mesh = make_mesh_compat((1, 1), ("data", "model"))
+    nx = ny = 16
+    A = poisson2d(nx, ny)
+    b = np.asarray(A @ np.ones(nx * ny)).reshape(nx, ny)
+    kw = dict(method="plcg_scan", l=2, tol=1e-10, maxiter=200,
+              spectrum=(0.0, 8.0), mesh=mesh)
+    rb = solve(A, b, **kw)
+    assert rb.info["comm"] == "blocking" and rb.info["psums_per_iter"] == 1
+    for comm in ("overlap", CommPolicy(mode="overlap", depth=1), "ring"):
+        r = solve(A, b, comm=comm, **kw)
+        assert r.converged
+        assert np.linalg.norm(np.asarray(r.x) - np.asarray(rb.x)) <= 1e-10
+        assert r.iters == rb.iters
+        assert r.info["psums_per_iter"] == 0
+    r = solve(A, b, comm="overlap", **kw)
+    assert r.info["comm"] == "overlap" and r.info["overlap_depth"] == 2
+
+
+def test_prepared_solver_carries_comm_policy(x64):
+    """The prepared-session path: Solver(comm=...) normalizes once,
+    caches per policy (blocking and overlap sweeps are distinct cache
+    entries), and repeated solves reuse the prepared sweep."""
+    import numpy as np
+    from repro.core import Solver
+    from repro.launch.mesh import make_mesh_compat
+    from repro.operators import poisson2d
+
+    mesh = make_mesh_compat((1, 1), ("data", "model"))
+    nx = ny = 16
+    A = poisson2d(nx, ny)
+    b = np.asarray(A @ np.ones(nx * ny)).reshape(nx, ny)
+    kw = dict(method="plcg_scan", l=2, tol=1e-10, maxiter=200,
+              spectrum=(0.0, 8.0), mesh=mesh)
+    sb = Solver(A, **kw)
+    so = Solver(A, comm="overlap", **kw)
+    assert so.comm.mode == "overlap" and sb.comm.is_blocking
+    rb, ro = sb.solve(b), so.solve(b)
+    assert np.linalg.norm(np.asarray(ro.x) - np.asarray(rb.x)) <= 1e-10
+    assert ro.info["comm"] == "overlap" and ro.info["psums_per_iter"] == 0
+    r2 = so.solve(b * 2.0)               # same prepared sweep, new RHS
+    assert np.linalg.norm(np.asarray(r2.x) - 2 * np.asarray(ro.x)) <= 1e-8
+
+
+def test_overlap_parity_on_available_devices(x64):
+    """In-process multi-device parity: under the CI overlap lane (8
+    forced host devices) the full policy ladder runs on a live (2, 2)
+    mesh -- real psum_scatter/all_gather edges, real ring hops -- and
+    every mode matches blocking to <= 1e-10 per lane.  Skips on
+    single-device hosts (the slow subprocess test covers those)."""
+    import jax
+    import numpy as np
+
+    if len(jax.devices()) < 4:
+        pytest.skip("needs >= 4 host devices (CI overlap lane forces 8)")
+    from repro.core import CommPolicy, solve
+    from repro.launch.mesh import make_mesh_compat
+    from repro.operators import poisson2d
+
+    mesh = make_mesh_compat((2, 2), ("data", "model"))
+    nx = ny = 32
+    A = poisson2d(nx, ny)
+    rng = np.random.default_rng(7)
+    B = np.stack([np.asarray(A @ rng.standard_normal(A.n))
+                  for _ in range(3)]).reshape(3, nx, ny)
+    kw = dict(method="plcg_scan", l=3, tol=1e-10, maxiter=250,
+              spectrum=(0.0, 8.0), mesh=mesh)
+    rb = solve(A, B, **kw)
+    xb = np.asarray(rb.x).reshape(3, -1)
+    for comm in ("overlap", CommPolicy(mode="overlap", depth=1), "ring"):
+        r = solve(A, B, comm=comm, **kw)
+        xm = np.asarray(r.x).reshape(3, -1)
+        for j in range(3):
+            assert (np.linalg.norm(xm[j] - xb[j])
+                    <= 1e-10 * np.linalg.norm(xb[j]))
+        assert list(r.info["per_rhs_iters"]) == list(rb.info["per_rhs_iters"])
+
+
+# ----------------- live multi-device payloads (subprocess) ----------------
+
+@pytest.mark.slow
+def test_overlap_matches_blocking_on_live_mesh(dist_env):
+    """The acceptance gate: on a live (2, 2) mesh (8 forced host devices,
+    subprocess) comm='overlap' reproduces comm='blocking' to <= 1e-10 per
+    lane -- at full depth, at depth=1, and for the ring -- with the split
+    structural signature in the traced body."""
+    res = _run(textwrap.dedent("""
+        import json, jax
+        jax.config.update("jax_enable_x64", True)
+        import jax.numpy as jnp, numpy as np
+        from repro.core import CommPolicy, solve
+        from repro.launch.mesh import make_mesh_compat
+        from repro.operators import poisson2d
+        mesh = make_mesh_compat((2, 2), ("data", "model"))
+        nx = ny = 32
+        A = poisson2d(nx, ny)
+        b = np.asarray(A @ np.ones(nx * ny)).reshape(nx, ny)
+        kw = dict(method="plcg", l=3, tol=1e-10, maxiter=250,
+                  spectrum=(0.0, 8.0), mesh=mesh)
+        rb = solve(A, b, **kw)
+        out = {"conv": bool(rb.converged), "iters": int(rb.iters),
+               "psums_blocking": rb.info["psums_per_iter"], "diff": {}}
+        for name, comm in [("overlap", "overlap"),
+                           ("overlap_d1", CommPolicy(mode="overlap", depth=1)),
+                           ("ring", "ring")]:
+            r = solve(A, b, comm=comm, **kw)
+            out["diff"][name] = float(np.max(np.abs(
+                np.asarray(r.x) - np.asarray(rb.x))))
+            out.setdefault("iters_" + name, int(r.iters))
+        r = solve(A, b, comm="overlap", **kw)
+        out["info"] = {"comm": r.info["comm"],
+                       "psums": r.info["psums_per_iter"],
+                       "depth": r.info["overlap_depth"]}
+        print(json.dumps(out))
+    """), dist_env)
+    assert res["conv"] and res["psums_blocking"] == 1
+    for name, d in res["diff"].items():
+        assert d <= 1e-10, (name, d)
+    assert res["iters_overlap"] == res["iters"]
+    assert res["info"] == {"comm": "overlap", "psums": 0, "depth": 3}
+
+
+@pytest.mark.slow
+def test_overlap_per_rhs_masking_across_shards(dist_env):
+    """Per-RHS convergence masking survives the split reduction: the
+    collectives run unconditionally every iteration (a frozen lane still
+    participates in the scatter/gather), only the state commit is
+    select-gated -- so a smooth lane stops early and a rough lane keeps
+    iterating, exactly as under blocking."""
+    res = _run(textwrap.dedent("""
+        import json, jax
+        jax.config.update("jax_enable_x64", True)
+        import jax.numpy as jnp, numpy as np
+        from repro.core import solve
+        from repro.launch.mesh import make_mesh_compat
+        from repro.operators import poisson2d
+        mesh = make_mesh_compat((2, 4), ("data", "model"))
+        nx = ny = 32
+        A = poisson2d(nx, ny)
+        smooth = np.asarray(A @ np.ones(A.n))
+        rough = np.asarray(
+            A @ np.random.default_rng(3).standard_normal(A.n))
+        B = np.stack([smooth, rough]).reshape(2, nx, ny)
+        kw = dict(method="plcg_scan", l=3, tol=1e-10, maxiter=250,
+                  spectrum=(0.0, 8.0), mesh=mesh)
+        rb = solve(A, B, **kw)
+        ro = solve(A, B, comm="overlap", **kw)
+        print(json.dumps({
+            "conv": [bool(c) for c in ro.info["per_rhs_converged"]],
+            "iters": [int(k) for k in ro.info["per_rhs_iters"]],
+            "iters_blocking": [int(k) for k in rb.info["per_rhs_iters"]],
+            "trace_lens": [len(t) for t in ro.resnorms]}))
+    """), dist_env)
+    assert all(res["conv"])
+    assert res["iters"][0] < res["iters"][1] - 10   # smooth lane stops early
+    assert res["trace_lens"][0] < res["trace_lens"][1]
+    assert res["iters"] == res["iters_blocking"]    # masking identical

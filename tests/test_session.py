@@ -147,10 +147,12 @@ def test_solver_construction_validates_up_front(poisson):
 
 def test_solve_signature_unchanged():
     """engine.solve keeps its public signature (the session redesign must
-    not break any existing caller)."""
+    not break any existing caller) -- extended only by the keyword-only
+    ``comm=`` knob (appended, so positional callers are unaffected)."""
     params = list(inspect.signature(solve).parameters)
     assert params == ["A", "b", "method", "x0", "tol", "maxiter", "M", "l",
-                      "sigma", "spectrum", "backend", "mesh", "options"]
+                      "sigma", "spectrum", "backend", "mesh", "comm",
+                      "options"]
 
 
 def test_unknown_option_rejected_uniformly(poisson):
