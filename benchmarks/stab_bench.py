@@ -1,0 +1,125 @@
+"""Stability-at-depth benchmarks: what the in-scan autopilot costs and
+what it buys.
+
+Three questions, one row group each:
+
+* ``stab/gap_l*`` -- attainable accuracy vs pipeline depth: the
+  residual-gap diagnostic (arXiv:1804.02962) with and without periodic
+  true-residual replacement.  The probative column is ``rel_gap``
+  (recurrence residual vs true ``b - Ax`` decoupling, paper Sec. 4);
+  replacement should pull the deep-``l`` gap back to the ``l=1`` level.
+* ``stab/armed_overhead`` -- what arming ``restart=`` costs when no
+  breakdown ever fires: the stability payload widens the per-iteration
+  reduction by one slot and un-fuses the stencil megakernel, so this is
+  the price of always-on recovery (and why ``restart="auto"`` stays off
+  on the default fast path).
+* ``stab/frozen_lanes`` -- budget utilisation of a batched solve where
+  some lanes hit square-root breakdown: without recovery the broken
+  lanes freeze and their remaining update budget is dead weight; with
+  in-scan restarts the same compiled sweep spends it on re-seeded
+  iterations and converges.
+
+``us_per_call`` is CPU wall time and only indicative.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks._util import timeit_us as _timeit
+
+
+def stab_gap_ladder():
+    """rel_gap and true-residual floor vs l, with/without residual
+    replacement (period 20), at the float32 attainable-accuracy floor
+    (tol below it, fixed budget).
+
+    The rr rows run ``ritz_refresh=False``: benchmarks execute in the
+    default float32, where the committed tridiagonal scalars are too
+    noisy for the eigvalsh shift refresh -- the shift-free re-seed is
+    the robust float32 configuration (float64 prefers the default
+    refresh, see tests/test_stability.py)."""
+    from repro.core import residual_gap, solve
+    from repro.operators import poisson2d
+    nx = ny = 32
+    A = poisson2d(nx, ny)
+    b = np.asarray(A @ np.ones(A.n))
+    base = dict(method="plcg_scan", spectrum=(0.0, 8.0), tol=1e-6,
+                maxiter=300)
+    rows = []
+    for l in (1, 3, 6):
+        for rr in (None, 20):
+            if l == 1 and rr is not None:
+                continue            # nothing to re-sync at depth 1
+            tag = f"stab/gap_l{l}" + ("_rr" if rr else "")
+            kw = dict(base, l=l)
+            if rr is not None:
+                kw.update(residual_replacement=rr, ritz_refresh=False)
+            r = solve(A, b, **kw)
+            us = _timeit(lambda kw=kw: solve(A, b, **kw), reps=1)
+            gap = residual_gap(A, b, r)
+            rows.append((tag, us,
+                         f"iters={r.iters};conv={r.converged};"
+                         f"restarts={r.restarts};repl={r.replacements};"
+                         f"rel_gap={gap['rel_gap']:.1e};"
+                         f"true_res={gap['true_resnorm']:.1e}"))
+    return rows
+
+
+def stab_armed_overhead():
+    """us/iter with restart= armed but never fired vs the default fast
+    path (same problem, same tol): the steady-state cost of carrying the
+    recovery micro-state machine and the one-slot-wider reduction."""
+    from repro.core import solve
+    from repro.operators import poisson2d
+    A = poisson2d(32, 32)
+    b = np.asarray(A @ np.ones(A.n))
+    kw = dict(method="plcg_scan", l=3, spectrum=(0.0, 8.0), tol=1e-4,
+              maxiter=400)
+    r_off = solve(A, b, **kw)
+    us_off = _timeit(lambda: solve(A, b, **kw), reps=3)
+    r_on = solve(A, b, restart=4, **kw)
+    us_on = _timeit(lambda: solve(A, b, restart=4, **kw), reps=3)
+    per_off = us_off / max(r_off.iters, 1)
+    per_on = us_on / max(r_on.iters, 1)
+    return [("stab/armed_overhead", us_on,
+             f"us_per_iter_armed={per_on:.0f};us_per_iter_off={per_off:.0f};"
+             f"overhead_x={per_on / per_off:.2f};"
+             f"restarts_fired={r_on.restarts}")]
+
+
+def stab_frozen_lanes():
+    """Batched budget utilisation: 4 lanes under breakdown-forcing
+    monomial shifts, without vs with in-scan recovery.  Reports the
+    converged-lane fraction and the committed-update fraction of the
+    budget (frozen lanes strand the remainder)."""
+    import jax.numpy as jnp
+
+    from repro.core import solve
+    from repro.core.shifts import monomial_shifts
+    from repro.operators import poisson2d
+    A = poisson2d(16, 16)
+    rng = np.random.default_rng(0)
+    B = jnp.stack([jnp.asarray(A @ rng.standard_normal(A.n))
+                   for _ in range(4)])
+    maxiter = 300
+    kw = dict(method="plcg_scan", l=3, sigma=monomial_shifts(3), tol=2e-4,
+              maxiter=maxiter)
+    rows = []
+    for tag, stab_kw in (("stab/frozen_lanes_before", {}),
+                         ("stab/frozen_lanes_after", {"restart": 4})):
+        r = solve(A, B, **kw, **stab_kw)
+        us = _timeit(lambda skw=stab_kw: solve(A, B, **kw, **skw), reps=1)
+        conv = np.asarray(r.info["per_rhs_converged"])
+        iters = np.asarray(r.info["per_rhs_iters"], dtype=float)
+        # a frozen (broken, unconverged) lane strands maxiter - k updates
+        stranded = float(np.where(conv, 0.0, maxiter - iters).sum())
+        rows.append((tag, us,
+                     f"conv_lanes={int(conv.sum())}/4;"
+                     f"restarts={r.restarts};"
+                     f"stranded_budget_pct="
+                     f"{100.0 * stranded / (4 * maxiter):.0f}"))
+    return rows
+
+
+ALL = [stab_gap_ladder, stab_armed_overhead, stab_frozen_lanes]
+SMOKE = [stab_armed_overhead, stab_frozen_lanes]

@@ -101,6 +101,9 @@ class MethodSpec:
     subset of ``options`` the mesh execution path honors -- the single
     place that restriction lives (checked by ``_prepare_mesh_options``;
     the mesh adapters no longer carry their own allow-lists).
+    ``supports_restart`` marks methods whose scan engine can re-seed
+    broken lanes in-trace (``restart=`` / ``residual_replacement=``, see
+    ``plcg_scan``); only those accept the stability knob pair.
     """
 
     name: str
@@ -110,6 +113,7 @@ class MethodSpec:
     supports_M: bool = True
     supports_mesh: bool = False
     supports_comm: bool = False
+    supports_restart: bool = False
     uses_sigma: bool = False
     options: frozenset = frozenset()
     mesh_options: frozenset = frozenset()
@@ -117,7 +121,8 @@ class MethodSpec:
 
 def register(name: str, *, batched: str = "loop", description: str = "",
              supports_M: bool = True, supports_mesh: bool = False,
-             supports_comm: bool = False, uses_sigma: bool = False,
+             supports_comm: bool = False, supports_restart: bool = False,
+             uses_sigma: bool = False,
              options: Sequence[str] = (), mesh_options: Sequence[str] = ()):
     """Decorator registering a solver adapter under ``name``.
 
@@ -146,6 +151,7 @@ def register(name: str, *, batched: str = "loop", description: str = "",
                                      supports_M=supports_M,
                                      supports_mesh=supports_mesh,
                                      supports_comm=supports_comm,
+                                     supports_restart=supports_restart,
                                      uses_sigma=uses_sigma,
                                      options=frozenset(options),
                                      mesh_options=frozenset(mesh_options))
@@ -175,11 +181,17 @@ def methods() -> tuple[str, ...]:
 #:                                 (warned + ignored on a mesh)
 #:   ``comm=``   ``supports_comm`` ``_prepare_comm``            mesh only
 #:                                 (rejected off-mesh up front)
+#:   ``restart=``            ``supports_restart``
+#:                                 ``_prepare_restart``         all
+#:   ``residual_replacement=``  ``supports_restart``
+#:                                 ``_prepare_restart``         all
 _KNOB_TABLE = {
     "M": "supports_M",
     "mesh": "supports_mesh",
     "backend": None,
     "comm": "supports_comm",
+    "restart": "supports_restart",
+    "residual_replacement": "supports_restart",
 }
 
 
@@ -366,6 +378,58 @@ def _prepare_comm(spec: MethodSpec, comm, on_mesh: bool):
     return policy
 
 
+def _prepare_restart(spec: MethodSpec, restart, residual_replacement,
+                     options: dict):
+    """Normalize the stability knob pair (``restart=`` /
+    ``residual_replacement=``) once per prepared solver.
+
+    ``restart`` is ``"auto" | int | None``: an int caps the number of
+    in-scan per-lane re-seeds on square-root breakdown; ``None`` disables
+    them (a single-RHS solve then falls back to the deprecated host
+    restart loop when the legacy ``max_restarts`` option asks for it).
+    ``"auto"`` (the default) lets the engine pick: it resolves to 5 when
+    ``residual_replacement`` already put the sweep in stability mode
+    (recovery is then free) and to ``None`` otherwise -- the stability
+    machinery widens the reduction payload by one slot and un-fuses the
+    stencil megakernel, so it stays opt-in on the default path.
+
+    ``residual_replacement`` is a period in committed updates (int >= 1)
+    for the in-scan true-residual recompute ``r = b - A x``, or ``None``.
+
+    Returns the normalized ``(restart, residual_replacement)`` pair of
+    ``Optional[int]``s.  Explicit use of either knob on a method without
+    the ``supports_restart`` capability raises up front; combining an
+    explicit ``restart=`` int with the legacy ``max_restarts`` option
+    raises (two restart caps, ONE semantics).
+    """
+    rr = residual_replacement
+    if rr is not None:
+        rr = int(rr)
+        if rr < 1:
+            raise ValueError(
+                f"residual_replacement must be a period >= 1 (committed "
+                f"updates between true-residual recomputes), got "
+                f"{residual_replacement!r}")
+    if restart == "auto":
+        restart = 5 if (spec.supports_restart and rr is not None) else None
+    elif restart is not None:
+        restart = int(restart)
+        if restart < 0:
+            raise ValueError(f"restart must be >= 0, got {restart!r}")
+        if "max_restarts" in options:
+            raise ValueError(
+                "restart= (in-scan recovery) and the legacy max_restarts "
+                "option (host restart loop) are mutually exclusive; drop "
+                "max_restarts -- restart= is the one restart semantics")
+    if (restart is not None or rr is not None) and not spec.supports_restart:
+        raise ValueError(
+            f"method {spec.name!r} does not support in-scan restarts / "
+            f"residual replacement (restart= / residual_replacement=); "
+            f"methods with restart support: "
+            f"{', '.join(methods_supporting('restart'))}")
+    return restart, rr
+
+
 def _prepare_mesh_options(spec: MethodSpec, options: dict) -> None:
     """Reject declared method options the mesh execution path does not
     honor (``MethodSpec.mesh_options``) -- the single validation table
@@ -414,6 +478,8 @@ def solve(
     backend: Optional[str] = None,
     mesh=None,
     comm=None,
+    restart="auto",
+    residual_replacement: Optional[int] = None,
     **options,
 ) -> SolveResult:
     """Solve ``A x = b`` (or a stacked batch ``A X[j] = B[j]``).
@@ -464,6 +530,24 @@ def solve(
         capability, and non-mesh calls, reject non-blocking policies up
         front.  See the ``M=``/``mesh=``/``backend=``/``comm=`` knob
         table in this module (``_KNOB_TABLE``).
+      restart: in-scan breakdown recovery -- ``"auto" | int | None``.
+        An int caps how many times each lane may re-seed its Krylov
+        window from the current iterate after a square-root breakdown,
+        *inside* the compiled sweep (per lane under batched ``vmap``,
+        per shard group on a mesh, zero host round-trips; shifts are
+        Ritz-refreshed from the committed tridiagonal).  ``None``
+        disables in-scan recovery (legacy behavior; single-RHS solves
+        may still use the deprecated host loop via ``max_restarts``).
+        ``"auto"`` (default) enables cap 5 when ``residual_replacement``
+        is set and resolves to ``None`` otherwise (see
+        ``_prepare_restart``).  Methods without the ``supports_restart``
+        capability reject explicit values up front.
+      residual_replacement: period (committed updates) of the in-scan
+        true-residual recompute ``r = b - A x`` countering the residual
+        drift of deep pipelines (paper Sec. 4; arXiv:1706.05988), or
+        ``None`` (default, off).  Compatible with every ``comm=`` policy
+        (the replacement rides the existing per-iteration reduction,
+        widened by one slot).
       **options: method-specific extras (``trace_gaps``, ``record_G``,
         ``max_restarts``, ``exploit_symmetry``, ...); keys outside the
         method's declared option set raise a uniform error naming the
@@ -489,7 +573,9 @@ def solve(
     _prepare_options(get_method(method), options)
     return Solver(A, method=method, tol=tol, maxiter=maxiter, M=M, l=l,
                   sigma=sigma, spectrum=spectrum, backend=backend,
-                  mesh=mesh, comm=comm, **options).solve(b, x0=x0)
+                  mesh=mesh, comm=comm, restart=restart,
+                  residual_replacement=residual_replacement,
+                  **options).solve(b, x0=x0)
 
 
 # --------------------------------------------------------------------------
@@ -498,12 +584,14 @@ def solve(
 
 def _solve_batched(spec: MethodSpec, A: LinearOperator, B, *, x0, tol,
                    maxiter, M, l, sigma, spectrum, backend,
+                   restart=None, rr_period=None,
                    get_engine=None, **options) -> SolveResult:
     nrhs = B.shape[0]
     if spec.batched == "vmap":
         return _solve_batched_vmap(spec, A, B, x0=x0, tol=tol,
                                    maxiter=maxiter, M=M, l=l, sigma=sigma,
                                    spectrum=spectrum, backend=backend,
+                                   restart=restart, rr_period=rr_period,
                                    get_engine=get_engine, **options)
     outs = [
         spec.fn(A, B[j], None if x0 is None else x0[j], tol=tol,
@@ -518,6 +606,7 @@ def _solve_batched(spec: MethodSpec, A: LinearOperator, B, *, x0, tol,
         converged=all(r.converged for r in outs),
         breakdowns=sum(r.breakdowns for r in outs),
         restarts=sum(r.restarts for r in outs),
+        replacements=sum(r.replacements for r in outs),
         info={"method": spec.name, "batched": "loop", "nrhs": nrhs,
               "per_rhs_converged": [r.converged for r in outs],
               "per_rhs_iters": [r.iters for r in outs]},
@@ -531,7 +620,8 @@ _BATCH_CACHE = solver_cache.WeakCallableCache(maxsize=16)
 
 def _batched_engine(method_name: str, matvec, l: int, iters: int, sigma,
                     tol: float, prec, exploit_symmetry: bool, unroll: int,
-                    backend, stencil_hw):
+                    backend, stencil_hw, restart=None, rr_period=None,
+                    ritz_refresh: bool = True, k_budget=None):
     """Jitted vmap(scan) engine, cached per configuration so repeated
     batched solves with the same operator/settings compile only once.
 
@@ -550,7 +640,9 @@ def _batched_engine(method_name: str, matvec, l: int, iters: int, sigma,
             # an array constant (does not pin the preconditioner object)
             prec_diag=getattr(prec, "inv_diag", None),
             exploit_symmetry=exploit_symmetry, unroll=unroll,
-            backend=backend, stencil_hw=stencil_hw)
+            backend=backend, stencil_hw=stencil_hw,
+            restart=restart, rr_period=rr_period,
+            ritz_refresh=ritz_refresh, k_budget=k_budget)
 
         def _batched(Bb, Xb):
             # trace-time side effect: fires once per XLA compilation, so
@@ -564,21 +656,25 @@ def _batched_engine(method_name: str, matvec, l: int, iters: int, sigma,
     return _BATCH_CACHE.get_or_build(
         (matvec, prec),
         (method_name, l, iters, sigma, tol, exploit_symmetry, unroll,
-         backend, stencil_hw),
+         backend, stencil_hw, restart, rr_period, ritz_refresh, k_budget),
         build)
 
 
 def _solve_batched_vmap(spec: MethodSpec, A: LinearOperator, B, *, x0, tol,
                         maxiter, M, l, sigma, spectrum, backend,
+                        restart=None, rr_period=None,
                         exploit_symmetry: bool = True, unroll: int = 1,
+                        ritz_refresh: bool = True,
                         get_engine=None, **options) -> SolveResult:
     """One jitted ``vmap`` of the scan engine over the stacked RHS.
 
     A single XLA compilation covers all ``nrhs`` systems; converged lanes
     freeze via the engine's per-lane commit select while the remaining
-    lanes keep iterating.  Runs one sweep (no data-dependent restarts --
-    restart-on-breakdown needs per-lane host control flow; use the loop
-    path of the reference ``plcg`` when that matters).
+    lanes keep iterating.  Runs ONE sweep always: with ``restart=`` /
+    ``rr_period=`` (normalized by ``_prepare_restart``) each lane
+    re-seeds itself in-trace on breakdown / on the replacement period --
+    recovery is per lane, inside the same compiled program, never a
+    second sweep.
 
     ``get_engine`` (internal) lets a prepared :class:`session.Solver`
     inject its strongly-held jitted engine in place of the weak-key cache
@@ -605,32 +701,57 @@ def _solve_batched_vmap(spec: MethodSpec, A: LinearOperator, B, *, x0, tol,
             "enable jax_enable_x64 or relax tol",
             stacklevel=_stacklevel_outside_engine())
     X0 = jnp.zeros_like(Bj) if x0 is None else jnp.asarray(x0)
+    from .plcg_scan import stab_iter_slack
+    stab = restart is not None or rr_period is not None
+    iters = maxiter + l + 1 + stab_iter_slack(l, restart, rr_period, maxiter)
     build = get_engine if get_engine is not None else _batched_engine
-    fn = build(spec.name, A.matvec, l, maxiter + l + 1, sig, tol,
+    # the stability slack bodies are pipeline re-fill, not extra updates:
+    # an explicit k_budget freezes every lane at maxiter committed updates
+    # (without stab, iters itself caps the count -- keep the graph as-is)
+    fn = build(spec.name, A.matvec, l, iters, sig, tol,
                M, exploit_symmetry, unroll, backend,
-               getattr(A, "stencil2d", None))
+               getattr(A, "stencil2d", None), restart, rr_period,
+               ritz_refresh, maxiter if stab else None)
     out = fn(Bj, X0)
     resn = np.asarray(out.resnorms)                     # (nrhs, iters)
     conv = np.asarray(out.converged)
     brk = np.asarray(out.breakdown)
     k_done = np.asarray(out.k_done)
-    return SolveResult(
-        x=out.x,
+    if stab:
+        # restart / replacement dead bodies interleave with committed
+        # updates, so the in-order residual history is the committed mask
+        # (not a contiguous count slice)
+        committed = np.asarray(out.committed, dtype=bool)
+        resnorms = [[float(r) for r in row[m]]
+                    for row, m in zip(resn, committed)]
+        restarts_pl = np.asarray(out.restarts)
+        repl_pl = np.asarray(out.replacements)
+    else:
         # lane j commits |zeta_k| for k = 0..k_done[j] at trace indices
         # l..l+k_done[j]; slicing by count (not value-filtering) keeps a
         # legitimate exact-zero residual in the trace
-        resnorms=[[float(r) for r in row[l: l + int(k) + 1]]
-                  for row, k in zip(resn, k_done)],
+        resnorms = [[float(r) for r in row[l: l + int(k) + 1]]
+                    for row, k in zip(resn, k_done)]
+        restarts_pl = np.zeros(Bj.shape[0], dtype=int)
+        repl_pl = np.zeros(Bj.shape[0], dtype=int)
+    return SolveResult(
+        x=out.x,
+        resnorms=resnorms,
         iters=int(k_done.max()) + 1,
         converged=bool(conv.all()),
-        breakdowns=int(brk.sum()),
+        breakdowns=int(brk.sum()) + int(restarts_pl.sum()),
+        restarts=int(restarts_pl.sum()),
+        replacements=int(repl_pl.sum()),
         info={"method": f"p({l})-CG[scan,vmap]", "l": l,
               "sigma": list(sig), "backend": backend, "batched": "vmap",
               "prec": getattr(M, "name", None) if M is not None else None,
               "nrhs": int(Bj.shape[0]),
+              "restart": restart, "residual_replacement": rr_period,
               "per_rhs_converged": conv,
               "per_rhs_iters": k_done + 1,
-              "per_rhs_breakdown": brk},
+              "per_rhs_breakdown": brk,
+              "per_rhs_restarts": restarts_pl,
+              "per_rhs_replacements": repl_pl},
     )
 
 
@@ -672,13 +793,17 @@ def _method_plcg(A, b, x0=None, *, tol=1e-8, maxiter=1000, M=None, l=1,
 
 
 def _run_plcg_scan(A, b, x0, *, tol, maxiter, M, l, sigma, spectrum,
-                   backend, sweep=None, **kw) -> SolveResult:
+                   backend, sweep=None, restart=None,
+                   residual_replacement=None, **kw) -> SolveResult:
     """Scan-engine single-RHS run + SolveResult packaging.
 
     Shared by the one-shot adapter below and the prepared session path:
     ``sweep`` (internal) is a pre-built jitted ``(b, x0, k_budget)``
     sweep a :class:`session.Solver` holds strongly -- when given,
     ``plcg_solve`` skips its weak-key cache lookup entirely.
+    ``restart``/``residual_replacement`` arrive normalized (see
+    ``_prepare_restart``); either being set selects the in-scan
+    stability path of ``plcg_solve``.
     """
     sig = _resolve_sigma(sigma, spectrum, l)
     bj = jnp.asarray(b)
@@ -687,21 +812,27 @@ def _run_plcg_scan(A, b, x0, *, tol, maxiter, M, l, sigma, spectrum,
                                    tol=tol, maxiter=maxiter, prec=M,
                                    backend=backend,
                                    stencil_hw=getattr(A, "stencil2d", None),
-                                   sweep=sweep, **kw)
+                                   sweep=sweep, restart=restart,
+                                   residual_replacement=residual_replacement,
+                                   **kw)
     return SolveResult(
         x=x, resnorms=resnorms, iters=info["iterations"],
         converged=info["converged"], breakdowns=info["breakdowns"],
         restarts=info["restarts"],
+        replacements=info.get("replacements", 0),
         info={"method": f"p({l})-CG[scan]", "l": l, "sigma": sig,
               "backend": backend,
+              "restart": restart,
+              "residual_replacement": residual_replacement,
               "prec": getattr(M, "name", None) if M is not None else None},
     )
 
 
 @register("plcg_scan", batched="vmap", supports_mesh=True,
-          supports_comm=True, uses_sigma=True,
-          options=("exploit_symmetry", "max_restarts", "unroll"),
-          mesh_options=("exploit_symmetry", "max_restarts"),
+          supports_comm=True, supports_restart=True, uses_sigma=True,
+          options=("exploit_symmetry", "max_restarts", "unroll",
+                   "ritz_refresh"),
+          mesh_options=("exploit_symmetry", "max_restarts", "ritz_refresh"),
           description="jitted lax.scan p(l)-CG production engine (Alg. 3)")
 def _method_plcg_scan(A, b, x0=None, *, tol=1e-8, maxiter=1000, M=None, l=1,
                       sigma=None, spectrum=None, backend=None, **kw):

@@ -141,8 +141,11 @@ def _plcg_single(
                 s = sum(G[kk, j] * G[kk, c] for kk in range(max(0, c - 2 * l), j))
                 G[j, c] = (G[j, c] - s) / G[j, j]
             arg = G[c, c] - sum(G[kk, c] ** 2 for kk in range(max(0, c - 2 * l), c))
-            if arg <= 0.0:
-                # square-root breakdown (Remark 8)
+            if arg <= 0.0 or not math.isfinite(arg):
+                # square-root breakdown (Remark 8); a non-finite arg is a
+                # NaN/Inf-poisoned recurrence and must break down too --
+                # `arg <= 0.0` alone is False for NaN and would let the
+                # poisoned solve run to maxiter
                 trace.breakdown_iters.append(i)
                 breakdown = True
             else:
@@ -228,7 +231,12 @@ def _plcg_single(
                 gap = tr - zet[k] * v[k]
                 trace.residual_gap_norms.append(dot(gap, gap) ** 0.5)
             # stopping criterion (Remark 11): |zeta_{i-l}| available together
-            # with x_{i-l}
+            # with x_{i-l}; a non-finite zeta is a poisoned lane, not a
+            # non-converged one -- fail fast as breakdown
+            if not math.isfinite(zet[k]):
+                trace.breakdown_iters.append(i)
+                status = "breakdown"
+                break
             if abs(zet[k]) <= tol * bnorm:
                 status = "converged"
                 break

@@ -55,10 +55,24 @@ class PLCGState(NamedTuple):
     p: jax.Array           # (n,) search direction p_{i-l}
     eta: jax.Array         # scalar eta_{i-l}
     zeta: jax.Array        # scalar zeta_{i-l}
-    k_done: jax.Array      # highest solution index committed
+    k_done: jax.Array      # TOTAL solution updates committed minus one
     done: jax.Array        # bool: converged or broken down (frozen)
     converged: jax.Array   # bool
     breakdown: jax.Array   # bool
+    # ---- stability autopilot (in-scan restart / residual replacement) ----
+    # constants when the machinery is disabled (restart/rr_period unset)
+    ph: jax.Array          # int32 phase-local body counter (== loop index i
+    #                        until the first restart re-zeroes it)
+    wait: jax.Array        # int32 restart micro-state: 0 active, l+1 reseed
+    #                        body, l..2 waiting for the reseed reduction,
+    #                        1 seed body
+    beta: jax.Array        # beta0 of the CURRENT phase (||r0||_M at the
+    #                        most recent (re)start)
+    sig_c: jax.Array       # (l,) per-lane shifts, Ritz-refreshed at restart
+    #                        (0-d dummy unless stab && ritz_refresh)
+    restarts: jax.Array    # int32 per-lane in-scan restarts taken
+    repl: jax.Array        # int32 per-lane residual replacements taken
+    since_rr: jax.Array    # int32 committed updates since last (re)seed
 
 
 class PLCGOut(NamedTuple):
@@ -67,6 +81,11 @@ class PLCGOut(NamedTuple):
     k_done: jax.Array
     converged: jax.Array
     breakdown: jax.Array
+    committed: jax.Array   # (iters,) bool: body committed a solution update
+    #                        (resnorms[committed] is the residual history in
+    #                        order; robust to restarts scattering the rows)
+    restarts: jax.Array    # in-scan restarts taken (0 on the legacy path)
+    replacements: jax.Array  # residual replacements taken
 
 
 def _default_dot(a, b):
@@ -92,6 +111,9 @@ def plcg_scan(
     stencil_hw: Optional[tuple] = None,
     k_budget: Optional[jax.Array] = None,
     comm=None,
+    restart: Optional[int] = None,
+    rr_period: Optional[int] = None,
+    ritz_refresh: bool = True,
 ) -> PLCGOut:
     """Run ``iters`` bodies of p(l)-CG (solution index reaches iters-l-1).
 
@@ -145,9 +167,34 @@ def plcg_scan(
     (``dot_local is None``); the distributed shard_map runtime keeps its
     injected local-partial dots and single psum, bypassing every kernel
     tier including ``"fused"``.
+
+    ``restart`` (optional int >= 0) enables IN-SCAN restart-on-breakdown
+    (paper Remark 8 executed in-trace): a lane hitting square-root
+    breakdown re-seeds its Krylov window from the current iterate --
+    ``r = b - A x`` recomputed with the body's own SPMV, its M-norm
+    riding one extra slot of the fused reduction payload, the window
+    re-normalized exactly one queue delay (l bodies) later -- up to
+    ``restart`` times per lane, with zero host round-trips.  Every lane
+    (batched vmap, mesh shard, pooled) restarts independently; the
+    per-iteration collective signature is unchanged (the payload widens
+    from 2l+1 to 2l+2 inside the SAME reduction).  ``restart=0`` turns
+    on the machinery (NaN-safe freeze, widened payload) without taking
+    restarts.  ``rr_period`` (optional int >= 1) adds periodic residual
+    replacement: every ``rr_period`` committed updates the lane re-seeds
+    from the explicitly recomputed true residual through the same
+    mechanism, resetting the rounding-error gap between the recursive
+    and true residuals (arXiv:1706.05988 / 1804.02962).
+    ``ritz_refresh`` (default True, only meaningful with the above)
+    re-derives the l shifts at each re-seed from the Ritz values of the
+    committed gamma/delta tridiagonal (Leja-ordered, Remark 3) instead
+    of reusing the initial shift choice.
     """
     if l < 1:
         raise ValueError("l must be >= 1")
+    if restart is not None and int(restart) < 0:
+        raise ValueError(f"restart must be >= 0, got {restart}")
+    if rr_period is not None and int(rr_period) < 1:
+        raise ValueError(f"rr_period must be >= 1, got {rr_period}")
     if backend == "auto":
         backend = "pallas" if jax.default_backend() == "tpu" else "ref"
     if backend not in BACKENDS:
@@ -171,6 +218,13 @@ def plcg_scan(
     dot = dot_local or _default_dot
     red = reduce_scalars or (lambda p: p)
     W = 2 * l + 1
+    # stability autopilot: in-scan restart / residual replacement enabled?
+    stab = restart is not None or rr_period is not None
+    restart_cap = int(restart) if restart is not None else 0
+    rp = int(rr_period) if rr_period is not None else 0
+    # the reduction payload grows by ONE slot carrying ||r_new||_M^2 of
+    # re-seeding lanes (0 elsewhere) -- same collective, one wider band
+    P = W + 1 if stab else W
 
     # ---- in-flight reduction queue (comm policy) -------------------------
     # queue_pop reads the head (the payload produced exactly l bodies ago)
@@ -181,7 +235,7 @@ def plcg_scan(
     # freeze/convergence select gates the state commit, never the
     # collective), and the head-to-tail distance is l in every mode.
     if comm is None or comm.mode == "blocking":
-        inflight0 = jnp.zeros((l, W), b.dtype)
+        inflight0 = jnp.zeros((l, P), b.dtype)
 
         def queue_pop(q):
             return q[0], None
@@ -195,12 +249,12 @@ def plcg_scan(
         # leaving the scattered stage -- the reduction is structurally in
         # flight for d bodies of local work (arXiv:1905.06850)
         d = comm.depth
-        C = -(-W // comm.nshards)          # zero-padded chunk per shard
+        C = -(-P // comm.nshards)          # zero-padded chunk per shard
 
         def queue_pop(q):
             if d == l:
-                return comm.finish(q[0][0], W), None
-            return q[1][0], comm.finish(q[0][0], W)
+                return comm.finish(q[0][0], P), None
+            return q[1][0], comm.finish(q[0][0], P)
 
         def queue_push(q, payload, aux):
             scat2 = jnp.concatenate([q[0][1:], comm.start(payload)[None]],
@@ -211,7 +265,7 @@ def plcg_scan(
 
         inflight0 = ((jnp.zeros((d, C), b.dtype),) if d == l else
                      (jnp.zeros((d, C), b.dtype),
-                      jnp.zeros((l - d, W), b.dtype)))
+                      jnp.zeros((l - d, P), b.dtype)))
     else:                                   # ring
         # circulate-accumulate all-reduce spread across the queue shifts:
         # the element landing in slot j has completed l-1-j neighbor hops,
@@ -239,8 +293,8 @@ def plcg_scan(
             new_c.append(payload)
             return jnp.stack(new_a), jnp.stack(new_c)
 
-        inflight0 = (jnp.zeros((l, W), b.dtype),
-                     jnp.zeros((l, W), b.dtype))
+        inflight0 = (jnp.zeros((l, P), b.dtype),
+                     jnp.zeros((l, P), b.dtype))
 
     x0 = jnp.zeros_like(b) if x0 is None else x0
     sig = jnp.asarray(list(sigma), dtype=b.dtype)
@@ -253,11 +307,17 @@ def plcg_scan(
     #                   either no prec or a fused diagonal one);
     #   split_stencil-- general prec with a stencil hint: Pallas stencil
     #                   SPMV + megakernel, a 2-launch split.
-    fuse_diag = use_fused and prec is not None and prec_diag is not None
+    # With the stability autopilot the re-seed needs t_hat/t OUTSIDE the
+    # kernel (the SPMV input switches to x on re-seeding lanes and the
+    # true residual is assembled from t), so the fully fused SPMV and the
+    # in-kernel diag apply are disabled: stencil operators take the
+    # 2-launch split (Pallas stencil SPMV + megakernel) for every prec.
+    fuse_diag = (use_fused and prec is not None and prec_diag is not None
+                 and not stab)
     fuse_stencil = (use_fused and stencil_hw is not None
-                    and (prec is None or fuse_diag))
+                    and (prec is None or fuse_diag) and not stab)
     split_stencil = (use_fused and stencil_hw is not None
-                     and prec is not None and not fuse_diag)
+                     and not fuse_stencil)
     if (fuse_stencil or split_stencil) and stencil_hw[0] * stencil_hw[1] != n:
         raise ValueError(f"stencil_hw {stencil_hw} inconsistent with n={n}")
     invd = None
@@ -271,7 +331,8 @@ def plcg_scan(
     # ---- initialization (Alg. 2 lines 1-3) -------------------------------
     rhat0 = b - matvec(x0)
     r0 = prec(rhat0) if prec is not None else rhat0
-    init_pay = jnp.stack([dot(rhat0, r0), dot(b, prec(b) if prec is not None else b)])
+    Mb = prec(b) if prec is not None else b
+    init_pay = jnp.stack([dot(rhat0, r0), dot(b, Mb)])
     init_pay = red(init_pay)
     beta0 = jnp.sqrt(init_pay[0])
     bnorm = jnp.sqrt(init_pay[1])
@@ -282,15 +343,22 @@ def plcg_scan(
     Vw = jnp.zeros((n, W), b.dtype).at[:, 0].set(v0)
     Zhw = (jnp.zeros((n, 3), b.dtype).at[:, 0].set(rhat0 / beta0)
            if prec is not None else jnp.zeros((1, 1), b.dtype))
-    Gb = jnp.zeros((ncols, W), b.dtype).at[0, 2 * l].set(1.0)
+    Gb0 = jnp.zeros((ncols, W), b.dtype).at[0, 2 * l].set(1.0)
+    use_ritz = stab and ritz_refresh
     state = PLCGState(
-        Zw=Zw, Vw=Vw, Zhw=Zhw, Gb=Gb,
+        Zw=Zw, Vw=Vw, Zhw=Zhw, Gb=Gb0,
         gam=jnp.zeros(ncols, b.dtype), dlt=jnp.zeros(ncols, b.dtype),
         inflight=inflight0,
         x=x0, p=jnp.zeros_like(b),
         eta=jnp.asarray(0.0, b.dtype), zeta=jnp.asarray(0.0, b.dtype),
         k_done=jnp.asarray(-1), done=jnp.asarray(False),
         converged=jnp.asarray(False), breakdown=jnp.asarray(False),
+        ph=jnp.asarray(0, jnp.int32), wait=jnp.asarray(0, jnp.int32),
+        beta=beta0,
+        sig_c=(sig if use_ritz else jnp.zeros((), b.dtype)),
+        restarts=jnp.asarray(0, jnp.int32),
+        repl=jnp.asarray(0, jnp.int32),
+        since_rr=jnp.asarray(0, jnp.int32),
     )
 
     def gb_row(Gb, r):
@@ -298,11 +366,11 @@ def plcg_scan(
         row = jax.lax.dynamic_slice_in_dim(Gb, jnp.maximum(r, 0), 1, 0)[0]
         return jnp.where(r >= 0, row, jnp.zeros_like(row))
 
-    def scalar_block(st: PLCGState, i, c, col_in):
+    def scalar_block(st: PLCGState, ph, c, col_in, sig_arr):
         """(K2)+(K3): finalize column c of G from the arrived payload
         ``col_in`` (the queue head popped by the caller) and update the
         gamma/delta recurrences.  O(l^2) scalar work; values are garbage
-        during warmup (i < l) and discarded by the caller's select,
+        during warmup (ph < l) and discarded by the caller's select,
         exactly like the legacy evaluate-both-phases body."""
         # -------- arrived payload = raw band of column c ------------------
         col = col_in
@@ -312,7 +380,7 @@ def plcg_scan(
             for k in range(l):
                 r = c - 2 * l + k
                 src = gb_row(st.Gb, c - l + k)[2 * l - k]
-                use_fill = (i >= 3 * l - 1) & (r >= 0)
+                use_fill = (ph >= 3 * l - 1) & (r >= 0)
                 filled.append(jnp.where(use_fill, src, col[k]))
             col = jnp.concatenate([jnp.stack(filled), col[l:]])
         # -------- (K2) Gram-Schmidt correction (lines 7-8) ----------------
@@ -326,7 +394,10 @@ def plcg_scan(
             corrected = (col_list[k] - s) / denom
             col_list[k] = jnp.where(r >= 0, corrected, col_list[k])
         arg = col_list[2 * l] - sum(col_list[k2] ** 2 for k2 in range(2 * l))
-        brk = arg <= 0.0
+        # non-finite arg (a NaN/Inf-poisoned lane) IS a breakdown: `arg <= 0`
+        # alone is False for NaN, which used to leave the lane neither
+        # converging nor breaking down until the budget ran out
+        brk = (arg <= 0.0) | jnp.logical_not(jnp.isfinite(arg))
         gcc = jnp.sqrt(jnp.maximum(arg, jnp.finfo(b.dtype).tiny))
         col_list[2 * l] = gcc
         col = jnp.stack(col_list)
@@ -337,13 +408,13 @@ def plcg_scan(
         g_cm1_c = col[2 * l - 1]                # g_{c-1,c}
         sub = jnp.where(c >= 2, rowm1[2 * l - 1]
                         * st.dlt[jnp.maximum(c - 2, 0)], 0.0)
-        sig_c = sig[jnp.clip(c - 1, 0, l - 1)]
+        sig_c = sig_arr[jnp.clip(c - 1, 0, l - 1)]
         gam_lo = (g_cm1_c + sig_c * gd - sub) / gd
         dlt_lo = gcc / gd
         idx = jnp.maximum(c - 1 - l, 0)
         gam_hi = (gd * st.gam[idx] + g_cm1_c * st.dlt[idx] - sub) / gd
         dlt_hi = gcc * st.dlt[idx] / gd
-        early = i < 2 * l
+        early = ph < 2 * l
         gam_c1 = jnp.where(early, gam_lo, gam_hi)
         dlt_c1 = jnp.where(early, dlt_lo, dlt_hi)
         gam2 = st.gam.at[jnp.maximum(c - 1, 0)].set(gam_c1)
@@ -351,60 +422,226 @@ def plcg_scan(
         dsub = jnp.where(c >= 2, st.dlt[jnp.maximum(c - 2, 0)], 0.0)
         return col, gcc, brk, Gb2, gam2, dlt2, gam_c1, dlt_c1, dsub
 
-    def solution_update(st: PLCGState, i, gam2, v_k):
-        """(K6) solution update (lines 22-31)."""
-        k = i - l
-        at_first = i == l
+    def solution_update(st: PLCGState, ph, gam2, v_k):
+        """(K6) solution update (lines 22-31).  ``k_done`` counts TOTAL
+        committed updates (minus one) across restart phases, so the
+        committed count -- and the ``k_budget`` contract -- is global
+        while ``k`` indexes the phase-local gamma/delta arrays."""
+        k = ph - l
+        at_first = ph == l
         eta0 = gam2[0]
         lam = jnp.where(at_first, 0.0, st.dlt[jnp.maximum(k - 1, 0)]
                         / jnp.where(st.eta == 0, 1.0, st.eta))
         dkm1 = st.dlt[jnp.maximum(k - 1, 0)]
         eta_k = jnp.where(at_first, eta0, gam2[jnp.maximum(k, 0)] - lam * dkm1)
-        zeta_k = jnp.where(at_first, beta0, -lam * st.zeta)
+        zeta_k = jnp.where(at_first, st.beta if stab else beta0,
+                           -lam * st.zeta)
         x2 = jnp.where(at_first, st.x, st.x + st.zeta * st.p)
         eta_safe = jnp.where(eta_k == 0, 1.0, eta_k)
         p2 = jnp.where(at_first, v_k / eta_safe,
                        (v_k - dkm1 * st.p) / eta_safe)
-        return x2, p2, eta_k, zeta_k, jnp.maximum(k, st.k_done)
+        return x2, p2, eta_k, zeta_k, st.k_done + 1
 
-    def finalize(st: PLCGState, i, payload, q_aux, brk, x2, p2, eta2, zeta2,
-                 k2, Vw2, Zw2, Zhw2, Gb2, gam2, dlt2):
-        """Queue push + convergence/freeze commit, shared by both bodies."""
+    def finalize(st: PLCGState, ph, payload, q_aux, brk, x2, p2, eta2, zeta2,
+                 k2, Vw2, Zw2, Zhw2, Gb2, gam2, dlt2, *, reseed_now=None,
+                 seed_now=None, beta_new=None, seed_ok=None, beta2=None):
+        """Queue push + convergence/freeze commit, shared by both bodies.
+
+        With the stability autopilot the classical commit select is
+        followed by explicit per-lane overlays that drive the restart
+        micro-state machine: a scheduled lane runs one RESEED body (SPMV
+        redirected to x, true residual stashed into the zeroed windows,
+        its M-norm pushed in the extra payload slot), waits l-1 bodies
+        for that reduction to transit the queue, then runs one SEED body
+        (windows normalized by the arrived beta, phase counter back to
+        1) -- after which the lane is bit-for-bit a fresh solve started
+        at x, sharing every collective with its still-active neighbors.
+        """
         inflight2 = queue_push(st.inflight, payload, q_aux)
-        conv_now = ((i >= l) & jnp.logical_not(st.done) & jnp.logical_not(brk)
-                    & (jnp.abs(zeta2) <= tol * bnorm))
+        # NaN/Inf-safe breakdown: a non-finite zeta fails BOTH the old
+        # convergence and breakdown predicates, silently spending the
+        # whole budget -- treat it as a breakdown of this body
+        brk2 = brk | ((ph >= l) & jnp.logical_not(jnp.isfinite(zeta2)))
+        if stab:
+            active = (st.wait == 0) & jnp.logical_not(st.done)
+        else:
+            active = jnp.logical_not(st.done)
+        commit = active & jnp.logical_not(brk2)
+        conv_now = commit & (ph >= l) & (jnp.abs(zeta2) <= tol * bnorm)
         # budget freeze: k2 + 1 updates are committed after this body
         spent = (jnp.asarray(False) if k_budget is None
                  else k2 + 1 >= k_budget)
-        commit = jnp.logical_not(st.done | brk)
+        if stab:
+            can_restart = st.restarts < restart_cap
+            want_restart = brk2 & active & can_restart & ~spent
+            committed_update = commit & (ph >= l)
+            rr_due = (committed_update & (st.since_rr + 1 >= rp)
+                      & ~conv_now & ~spent) if rp > 0 else jnp.asarray(False)
+            schedule = want_restart | rr_due
+            # the seed body's re-seeded residual norm doubles as a
+            # convergence / hard-failure probe: beta == 0 at tolerance
+            # means x is (numerically) exact, non-finite beta means the
+            # lane is unrecoverable
+            seed_conv = (seed_now & jnp.isfinite(beta2)
+                         & (jnp.sqrt(jnp.maximum(beta2, 0.0)) <= tol * bnorm))
+            seed_fail = seed_now & ~seed_ok & ~seed_conv
+            brk_term = brk2 & active & ~want_restart
+            conv_now = conv_now | seed_conv
+        else:
+            want_restart = rr_due = seed_fail = jnp.asarray(False)
+            brk_term = brk2 & active
+            committed_update = commit & (ph >= l)
+        done_o = st.done | brk_term | conv_now | (spent & active) | seed_fail
+        converged_o = st.converged | conv_now
+        breakdown_o = st.breakdown | brk_term | seed_fail
         new = PLCGState(
             Zw=Zw2, Vw=Vw2, Zhw=Zhw2, Gb=Gb2, gam=gam2, dlt=dlt2,
             inflight=inflight2, x=x2, p=p2, eta=eta2, zeta=zeta2,
-            k_done=k2, done=st.done | brk | conv_now | spent,
-            converged=st.converged | conv_now,
-            breakdown=st.breakdown | (brk & jnp.logical_not(st.done)),
+            k_done=k2, done=done_o, converged=converged_o,
+            breakdown=breakdown_o,
+            # stab fields pass through the commit select untouched (same
+            # value on both sides); their real updates are overlaid below
+            ph=st.ph, wait=st.wait, beta=st.beta, sig_c=st.sig_c,
+            restarts=st.restarts, repl=st.repl, since_rr=st.since_rr,
         )
-        out_state = jax.tree.map(
+        out = jax.tree.map(
             lambda a_new, a_old: jnp.where(commit, a_new, a_old), new,
-            st._replace(done=new.done, converged=new.converged,
-                        breakdown=new.breakdown))
-        res = jnp.where(commit & (i >= l), jnp.abs(zeta2), 0.0)
-        return out_state, res
+            st._replace(done=done_o, converged=converged_o,
+                        breakdown=breakdown_o))
+        if stab:
+            reseed_or_seed = reseed_now | seed_now
+            zcol = jnp.zeros(ncols, b.dtype)
+            out = out._replace(
+                # re-seeding lanes bypass the commit mask: the stashed /
+                # seeded windows (already selected in the body) land, the
+                # banded G and the recurrences reset to the init state
+                Zw=jnp.where(reseed_or_seed, Zw2, out.Zw),
+                Vw=jnp.where(reseed_or_seed, Vw2, out.Vw),
+                Zhw=(jnp.where(reseed_or_seed, Zhw2, out.Zhw)
+                     if prec is not None else out.Zhw),
+                Gb=jnp.where(reseed_now, Gb0, out.Gb),
+                gam=jnp.where(reseed_now, zcol, out.gam),
+                dlt=jnp.where(reseed_now, zcol, out.dlt),
+                p=jnp.where(reseed_now, jnp.zeros_like(st.p), out.p),
+                eta=jnp.where(reseed_now, 0.0, out.eta),
+                zeta=jnp.where(reseed_now, 0.0, out.zeta),
+                # the queue ALWAYS shifts: the re-seed reduction must
+                # transit it, and frozen lanes only ever push into it
+                inflight=inflight2,
+                wait=jnp.where(reseed_now, l,
+                               jnp.where(seed_now, 0,
+                                         jnp.where(st.wait > 1, st.wait - 1,
+                                                   jnp.where(schedule, l + 1,
+                                                             0)))
+                               ).astype(st.wait.dtype),
+                # the seed body IS body 0 of the new phase
+                ph=jnp.where(seed_now, 1,
+                             jnp.where(commit, ph + 1, ph)
+                             ).astype(st.ph.dtype),
+                beta=jnp.where(seed_now, beta_new, st.beta),
+                restarts=st.restarts + want_restart.astype(st.restarts.dtype),
+                repl=st.repl + rr_due.astype(st.repl.dtype),
+                since_rr=jnp.where(seed_now, 0,
+                                   st.since_rr
+                                   + committed_update.astype(st.since_rr.dtype)
+                                   ).astype(st.since_rr.dtype),
+            )
+            if use_ritz:
+                # Ritz-refresh the shifts from the tail of the COMMITTED
+                # tridiagonal of the phase that just ended (harvested at
+                # the reseed body, before gamma/delta reset): Leja-ordered
+                # eigenvalues of the MR x MR trailing block (Remark 3)
+                from .shifts import leja_order, ritz_values_from_tridiag
+                MR = min(max(4, 2 * l), ncols)
+                m = ph - l                    # committed columns this phase
+                lo = jnp.clip(m - MR, 0, ncols - MR)
+                gw = jax.lax.dynamic_slice_in_dim(st.gam, lo, MR)
+                dw = jax.lax.dynamic_slice_in_dim(st.dlt, lo, MR)
+                okr = (reseed_now & (m >= MR)
+                       & jnp.all(jnp.isfinite(gw)) & jnp.all(jnp.isfinite(dw)))
+                gw = jnp.where(okr, gw, 1.0)   # sanitized -> T = I
+                dw = jnp.where(okr, dw, 0.0)
+                sig_new = leja_order(ritz_values_from_tridiag(gw, dw), l)
+                out = out._replace(
+                    sig_c=jnp.where(okr, sig_new.astype(b.dtype), st.sig_c))
+        res = jnp.where(committed_update, jnp.abs(zeta2), 0.0)
+        return out, (res, committed_update)
+
+    def stab_ctx(st: PLCGState, i):
+        """Per-body restart micro-state: phase counter, reseed/seed masks,
+        and the SPMV input (redirected to x on the reseed body so the
+        body's ONE operator apply recomputes the true residual)."""
+        if not stab:
+            return (i, jnp.asarray(False), jnp.asarray(False), st.Zw[:, 0],
+                    sig)
+        reseed_now = st.wait == l + 1
+        seed_now = st.wait == 1
+        spmv_in = jnp.where(reseed_now, st.x, st.Zw[:, 0])
+        sig_arr = st.sig_c if use_ritz else sig
+        return st.ph, reseed_now, seed_now, spmv_in, sig_arr
+
+    def stab_seed(st: PLCGState, t, t_hat, col_in_full, reseed_now, seed_now,
+                  sig_arr):
+        """Reseed stash + seed re-normalization values (stab only).
+
+        Reseed body: t_hat = A x, so the true residual is rhat = b - t_hat
+        and its preconditioned twin r = M b - t by linearity -- zero extra
+        operator/preconditioner applies.  The windows are stashed with the
+        UN-normalized residual; its M-norm^2 rides payload slot W through
+        the same reduction as every other dot and arrives -- like any
+        payload -- exactly l bodies later, at the seed body, which
+        normalizes the stash into the init-state windows of a fresh solve
+        started at x.
+        """
+        rhat_new = b - t_hat
+        r_new = (Mb - t) if prec is not None else rhat_new
+        slotW = jnp.where(reseed_now, dot(rhat_new, r_new),
+                          jnp.asarray(0.0, b.dtype))
+        beta2 = col_in_full[W]
+        seed_ok = (beta2 > 0) & jnp.isfinite(beta2)
+        beta_new = jnp.sqrt(jnp.where(seed_ok, beta2, 1.0))
+        inv_b = 1.0 / beta_new
+        # seed body: the stash held r_new in Zw slot 0 (rhat_new in Zhw),
+        # and this body's SPMV ran on it, so t/t_hat are beta * (M)A v0
+        v0n = st.Zw[:, 0] * inv_b
+        s0 = sig_arr[0]
+        zn_seed = t * inv_b - s0 * v0n
+        Zw_sd = jnp.zeros_like(st.Zw).at[:, 0].set(zn_seed).at[:, 1].set(v0n)
+        Vw_sd = jnp.zeros_like(st.Vw).at[:, 0].set(v0n)
+        Zw_st = jnp.zeros_like(st.Zw).at[:, 0].set(r_new)
+        Vw_st = jnp.zeros_like(st.Vw)
+        if prec is not None:
+            zh0n = st.Zhw[:, 0] * inv_b
+            zhn_seed = t_hat * inv_b - s0 * zh0n
+            Zhw_sd = (jnp.zeros_like(st.Zhw).at[:, 0].set(zhn_seed)
+                      .at[:, 1].set(zh0n))
+            Zhw_st = jnp.zeros_like(st.Zhw).at[:, 0].set(rhat_new)
+        else:
+            Zhw_sd = Zhw_st = None
+
+        def sel3(seeded, stash, normal):
+            return jnp.where(seed_now, seeded,
+                             jnp.where(reseed_now, stash, normal))
+
+        return (slotW, beta2, seed_ok, beta_new, sel3,
+                (Vw_sd, Zw_sd, Zhw_sd), (Vw_st, Zw_st, Zhw_st))
 
     def body(st: PLCGState, i):
+        ph, reseed_now, seed_now, spmv_in, sig_arr = stab_ctx(st, i)
         # ---------------- (K1) SPMV --------------------------------------
-        t_hat = matvec(st.Zw[:, 0])
+        t_hat = matvec(spmv_in)
         t = prec(t_hat) if prec is not None else t_hat
         # pop AFTER the SPMV + shard-local preconditioner apply in trace
         # order: with a split comm policy the head-of-queue gather is
         # issued here with no data dependence on t, so the prec apply is
         # free to overlap the in-flight reduction (paper Remark 13)
         col_in, q_aux = queue_pop(st.inflight)
+        col_in_full, col_in = col_in, (col_in[:W] if stab else col_in)
 
-        c = i - l + 1                       # column being finalized
+        c = ph - l + 1                      # column being finalized
 
         def warmup(_):
-            s = sig[jnp.minimum(i, l - 1)]
+            s = sig_arr[jnp.minimum(ph, l - 1)]
             znew = t - s * st.Zw[:, 0]
             zhnew = (t_hat - s * st.Zhw[:, 0]) if prec is not None else None
             return (st.Vw, st.Gb, st.gam, st.dlt, znew, zhnew,
@@ -413,7 +650,7 @@ def plcg_scan(
 
         def steady(_):
             (col, gcc, brk, Gb2, gam2, dlt2, gam_c1, dlt_c1,
-             dsub) = scalar_block(st, i, c, col_in)
+             dsub) = scalar_block(st, ph, c, col_in, sig_arr)
             # -------- (K4) v recurrence (line 17) -------------------------
             # v_c = (z_c - sum_k col[k] v_{c-2l+k}) / gcc ;
             # v_{c-2l+k} = Vw[:, 2l-1-k]
@@ -429,7 +666,7 @@ def plcg_scan(
             zhnew = ((t_hat - gam_c1 * st.Zhw[:, 0] - dsub * st.Zhw[:, 1])
                      / dlt_c1 if prec is not None else None)
             # -------- (K6) solution update (lines 22-31) ------------------
-            x2, p2, eta_k, zeta_k, k2 = solution_update(st, i, gam2,
+            x2, p2, eta_k, zeta_k, k2 = solution_update(st, ph, gam2,
                                                         Vw2[:, 1])
             return (Vw2, Gb2, gam2, dlt2, znew, zhnew, brk,
                     x2, p2, eta_k, zeta_k, k2)
@@ -443,13 +680,30 @@ def plcg_scan(
         # first l iterations) are dropped by the select
         (Vw2, Gb2, gam2, dlt2, znew, zhnew, brk, x2, p2, eta2, zeta2,
          k2) = jax.tree.map(
-            functools.partial(jnp.where, i >= l), steady(None), warmup(None))
+            functools.partial(jnp.where, ph >= l), steady(None), warmup(None))
 
         Zw2 = jnp.concatenate([znew[:, None], st.Zw[:, :-1]], axis=1)
         Zhw2 = (jnp.concatenate([zhnew[:, None], st.Zhw[:, :-1]], axis=1)
                 if prec is not None else st.Zhw)
-        # ---------------- (K5) dot-product payload for column i+1 --------
         lhs = zhnew if prec is not None else znew
+        seed_kw = {}
+        ph_pay = ph
+        if stab:
+            (slotW, beta2, seed_ok, beta_new, sel3, seeded,
+             stash) = stab_seed(st, t, t_hat, col_in_full, reseed_now,
+                                seed_now, sig_arr)
+            # window selection BEFORE the payload dots so re-seeding lanes
+            # push dots of the stashed/seeded windows through the shared
+            # reduction (the seed body's payload IS fresh body 0's)
+            Vw2 = sel3(seeded[0], stash[0], Vw2)
+            Zw2 = sel3(seeded[1], stash[1], Zw2)
+            if prec is not None:
+                Zhw2 = sel3(seeded[2], stash[2], Zhw2)
+            lhs = Zhw2[:, 0] if prec is not None else Zw2[:, 0]
+            ph_pay = jnp.where(seed_now, 0, ph)
+            seed_kw = dict(reseed_now=reseed_now, seed_now=seed_now,
+                           beta_new=beta_new, seed_ok=seed_ok, beta2=beta2)
+        # ---------------- (K5) dot-product payload for column i+1 --------
         if exploit_symmetry:
             def vdots_full(_):
                 if use_kernels:
@@ -460,7 +714,7 @@ def plcg_scan(
                 out = jnp.zeros(l + 1, b.dtype)
                 return out.at[0].set(dot(Vw2[:, 0], lhs))
 
-            vd = jax.lax.cond(i < 2 * l - 1, vdots_full, vdots_one, None)
+            vd = jax.lax.cond(ph_pay < 2 * l - 1, vdots_full, vdots_one, None)
         elif use_kernels:
             vd = _mdot(Vw2[:, :l + 1], lhs)
         else:
@@ -472,35 +726,43 @@ def plcg_scan(
         # mask payload slots whose row index i+1-2l+k is negative (the v
         # window is zero-initialized except v_0, which must not leak into
         # nonexistent rows during warmup)
-        vmask = jnp.arange(l + 1) + (i + 1 - 2 * l) >= 0
+        vmask = jnp.arange(l + 1) + (ph_pay + 1 - 2 * l) >= 0
         payload = jnp.concatenate([vd[::-1] * vmask, zd[::-1]])  # band layout
-        return finalize(st, i, payload, q_aux, brk, x2, p2, eta2, zeta2, k2,
-                        Vw2, Zw2, Zhw2, Gb2, gam2, dlt2)
+        if stab:
+            payload = jnp.concatenate([payload, slotW[None]])
+        return finalize(st, ph, payload, q_aux, brk, x2, p2, eta2, zeta2, k2,
+                        Vw2, Zw2, Zhw2, Gb2, gam2, dlt2, **seed_kw)
 
     def body_fused(st: PLCGState, i):
         """One launch per iteration: the fused_body megakernel computes
         (K1 when the stencil is fused) + (K4) + (K5); only the O(l^2)
-        scalar recurrences (K2/K3/K6) stay in jnp."""
-        c = i - l + 1
+        scalar recurrences (K2/K3/K6) stay in jnp.  With the stability
+        autopilot the SPMV and preconditioner run OUTSIDE the kernel (the
+        re-seed needs t/t_hat to assemble the true residual) and the
+        payload dots are recomputed from the re-seed-selected windows --
+        a documented small overhead of restart-enabled fused sweeps."""
+        ph, reseed_now, seed_now, spmv_in, sig_arr = stab_ctx(st, i)
+        c = ph - l + 1
         col_in, q_aux = queue_pop(st.inflight)
+        col_in_full, col_in = col_in, (col_in[:W] if stab else col_in)
         (col, gcc, brk, Gb2, gam2, dlt2, gam_c1, dlt_c1,
-         dsub) = scalar_block(st, i, c, col_in)
+         dsub) = scalar_block(st, ph, c, col_in, sig_arr)
         if fuse_stencil:
             # in-kernel SPMV (+ in-kernel diag apply when preconditioned)
             t = t_hat = None
         elif split_stencil:
-            # general prec, stencil hint: (K1) as the Pallas stencil
+            # stencil hint without full fusion: (K1) as the Pallas stencil
             # kernel (launch 1 of the 2-launch split), prec applied
             # between the launches
             H2d, W2d = stencil_hw
-            z2d = st.Zw[:, 0].reshape(H2d, W2d)
+            z2d = spmv_in.reshape(H2d, W2d)
             zr = jnp.zeros_like
             t_hat = kops.stencil2d_apply(
                 z2d, zr(z2d[0]), zr(z2d[0]), zr(z2d[:, 0]), zr(z2d[:, 0]),
                 use_pallas=True).reshape(-1)
-            t = prec(t_hat)
+            t = prec(t_hat) if prec is not None else t_hat
         else:
-            t_hat = matvec(st.Zw[:, 0])
+            t_hat = matvec(spmv_in)
             if prec is None:
                 t = t_hat
             elif fuse_diag:
@@ -510,7 +772,7 @@ def plcg_scan(
         Vw2, Zw2, Zhw2k, dots = kops.fused_body_apply(
             st.Vw, st.Zw, st.Zhw if prec is not None else None,
             t, t_hat if prec is not None else None,
-            l=l, steady=i >= l, s_warm=sig[jnp.minimum(i, l - 1)],
+            l=l, steady=ph >= l, s_warm=sig_arr[jnp.minimum(ph, l - 1)],
             gam=gam_c1, dlt=dlt_c1, dsub=dsub, gcc=gcc,
             g=col[:2 * l][::-1], invd=invd,
             stencil_hw=stencil_hw if fuse_stencil else None,
@@ -518,45 +780,87 @@ def plcg_scan(
         Zhw2 = Zhw2k if prec is not None else st.Zhw
         dots = dots.astype(b.dtype)
         vd_full, zd = dots[:l + 1], dots[l + 1:]
-        x2, p2, eta_k, zeta_k, k2 = solution_update(st, i, gam2, Vw2[:, 1])
+        x2, p2, eta_k, zeta_k, k2 = solution_update(st, ph, gam2, Vw2[:, 1])
         # warmup select for the scalar state only -- the vector windows
         # were already phase-selected inside the kernel
         (Gb2, gam2, dlt2, brk, x2, p2, eta2, zeta2, k2) = jax.tree.map(
-            functools.partial(jnp.where, i >= l),
+            functools.partial(jnp.where, ph >= l),
             (Gb2, gam2, dlt2, brk, x2, p2, eta_k, zeta_k, k2),
             (st.Gb, st.gam, st.dlt, jnp.asarray(False), st.x, st.p,
              st.eta, st.zeta, st.k_done))
+        seed_kw = {}
+        ph_pay = ph
+        if stab:
+            (slotW, beta2, seed_ok, beta_new, sel3, seeded,
+             stash) = stab_seed(st, t, t_hat, col_in_full, reseed_now,
+                                seed_now, sig_arr)
+            Vw2 = sel3(seeded[0], stash[0], Vw2)
+            Zw2 = sel3(seeded[1], stash[1], Zw2)
+            if prec is not None:
+                Zhw2 = sel3(seeded[2], stash[2], Zhw2)
+            # recompute the payload from the selected windows: the
+            # in-kernel dots saw the pre-selection windows
+            lhs = Zhw2[:, 0] if prec is not None else Zw2[:, 0]
+            vd_full = lhs @ Vw2[:, :l + 1]
+            zd = lhs @ Zw2[:, :l]
+            ph_pay = jnp.where(seed_now, 0, ph)
+            seed_kw = dict(reseed_now=reseed_now, seed_now=seed_now,
+                           beta_new=beta_new, seed_ok=seed_ok, beta2=beta2)
         if exploit_symmetry:
             # mirror the legacy single-dot branch: beyond the startup
             # phase only <v_{i+1-2l}, z> is new, the rest comes from the
             # symmetric fill of (K2)
-            vd = jnp.where(i < 2 * l - 1, vd_full,
+            vd = jnp.where(ph_pay < 2 * l - 1, vd_full,
                            jnp.zeros_like(vd_full).at[0].set(vd_full[0]))
         else:
             vd = vd_full
-        vmask = jnp.arange(l + 1) + (i + 1 - 2 * l) >= 0
+        vmask = jnp.arange(l + 1) + (ph_pay + 1 - 2 * l) >= 0
         payload = jnp.concatenate([vd[::-1] * vmask, zd[::-1]])
-        return finalize(st, i, payload, q_aux, brk, x2, p2, eta2, zeta2, k2,
-                        Vw2, Zw2, Zhw2, Gb2, gam2, dlt2)
+        if stab:
+            payload = jnp.concatenate([payload, slotW[None]])
+        return finalize(st, ph, payload, q_aux, brk, x2, p2, eta2, zeta2, k2,
+                        Vw2, Zw2, Zhw2, Gb2, gam2, dlt2, **seed_kw)
 
-    final, resnorms = jax.lax.scan(body_fused if use_fused else body, state,
-                                   jnp.arange(iters), unroll=unroll)
+    final, (resnorms, committed) = jax.lax.scan(
+        body_fused if use_fused else body, state,
+        jnp.arange(iters), unroll=unroll)
     return PLCGOut(x=final.x, resnorms=resnorms, k_done=final.k_done,
-                   converged=final.converged, breakdown=final.breakdown)
+                   converged=final.converged, breakdown=final.breakdown,
+                   committed=committed, restarts=final.restarts,
+                   replacements=final.repl)
 
 
 def plcg_jit(matvec, b, x0=None, *, l, iters, sigma, tol=0.0, prec=None,
              prec_diag=None, exploit_symmetry: bool = True, unroll: int = 1,
              backend: Optional[str] = None,
-             stencil_hw: Optional[tuple] = None) -> PLCGOut:
+             stencil_hw: Optional[tuple] = None,
+             restart: Optional[int] = None,
+             rr_period: Optional[int] = None,
+             ritz_refresh: bool = True) -> PLCGOut:
     """Convenience jitted single-device entry point."""
     fn = functools.partial(
         plcg_scan, matvec, l=l, iters=iters, sigma=tuple(sigma), tol=tol,
         prec=prec, prec_diag=prec_diag,
         exploit_symmetry=exploit_symmetry, unroll=unroll,
-        backend=backend, stencil_hw=stencil_hw)
+        backend=backend, stencil_hw=stencil_hw,
+        restart=restart, rr_period=rr_period, ritz_refresh=ritz_refresh)
     return jax.jit(lambda bb, xx: fn(bb, xx))(b, x0 if x0 is not None
                                               else jnp.zeros_like(b))
+
+
+def stab_iter_slack(l: int, restart=None, rr_period=None,
+                    maxiter: int = 0) -> int:
+    """Extra scan bodies needed so a ``maxiter``-update budget stays
+    spendable despite re-seed dead bodies: each restart / residual
+    replacement event costs at most 2l+2 bodies that commit nothing
+    (the triggering body, the reseed body, l-1 waiting bodies, the seed
+    body, and the l-1 new warmup bodies overlap this bound)."""
+    slack = 0
+    if restart:
+        slack += int(restart) * (2 * l + 2)
+    if rr_period and maxiter:
+        slack += (int(maxiter) // int(rr_period)) * (2 * l + 2)
+    return slack
 
 
 #: Jitted single-RHS sweeps, keyed weakly on the operator/preconditioner
@@ -566,7 +870,8 @@ _SWEEP_CACHE = WeakCallableCache(maxsize=16)
 
 
 def _jitted_sweep(matvec, l, iters, sigma, tol, prec, exploit_symmetry,
-                  unroll, backend, stencil_hw):
+                  unroll, backend, stencil_hw, restart=None, rr_period=None,
+                  ritz_refresh=True):
     """Cached jitted single sweep so repeated solves with the same
     operator/settings compile once.  Keyed on ``matvec``/``prec`` object
     identity through weak references: reuse the same callable across calls
@@ -586,29 +891,64 @@ def _jitted_sweep(matvec, l, iters, sigma, tol, prec, exploit_symmetry,
             # callables); the captured array does not pin the object
             prec_diag=getattr(prec, "inv_diag", None),
             exploit_symmetry=exploit_symmetry, unroll=unroll,
-            backend=backend, stencil_hw=stencil_hw)
+            backend=backend, stencil_hw=stencil_hw,
+            restart=restart, rr_period=rr_period, ritz_refresh=ritz_refresh)
         return jax.jit(lambda bb, xx, kb: fn(bb, xx, k_budget=kb))
 
     return _SWEEP_CACHE.get_or_build(
         (matvec, prec),
         (l, iters, sigma, tol, exploit_symmetry, unroll, backend,
-         stencil_hw),
+         stencil_hw, restart, rr_period, ritz_refresh),
         build)
 
 
 def run_restart_driver(sweep, b, x0, *, tol: float, maxiter: int,
-                       max_restarts: int, bnorm: float):
-    """Global-budget restart-on-breakdown loop (paper Remark 8), shared
-    by the single-device and mesh drivers.
+                       max_restarts: int, bnorm: float,
+                       in_scan: bool = False):
+    """Restart-on-breakdown with a global iteration budget (paper
+    Remark 8), shared by the single-device and mesh drivers -- the ONE
+    place restart semantics (budget accounting, happy breakdown,
+    info packaging) is defined.
 
-    ``sweep(b, x, remaining)`` runs one frozen-state sweep capped at
-    ``remaining`` solution updates and returns ``(x, resnorms,
-    converged, breakdown, k_done)``.  Every restart runs with the
-    *remaining* budget, so a breakdown-looping system performs at most
-    ``maxiter`` updates in total (not ``max_restarts x maxiter``);
-    happy breakdown at tolerance counts as convergence.  Returns
+    ``in_scan=True`` (the default execution mode of the engine front
+    ends) runs ONE sweep that was built with ``restart=``/``rr_period=``
+    -- breakdown recovery happens per lane inside the compiled scan
+    (Ritz-refreshed shifts, zero host round-trips) and this wrapper only
+    unpacks the result.  ``sweep(b, x, budget)`` must then return
+    ``(x, resnorms, converged, breakdown, k_done, committed, restarts,
+    replacements)``.
+
+    ``in_scan=False`` is the legacy host loop retained for parity
+    testing and as a compatibility escape hatch: the sweep is re-entered
+    from the host after each breakdown with the *remaining* budget.
+    .. deprecated:: its shift-free re-init (the restarted sweep reuses
+       the original sigma instead of Ritz-refreshing) and its
+       single-RHS-only reach are superseded by the in-scan path.
+    ``sweep`` returns at least ``(x, resnorms, converged, breakdown,
+    k_done)``; extra trailing outputs are ignored.
+
+    Either way a breakdown-looping system performs at most ``maxiter``
+    updates in total (not ``max_restarts x maxiter``); happy breakdown
+    at tolerance counts as convergence.  Returns
     ``(x, resnorms list, info dict)``.
     """
+    if in_scan:
+        (x, resn, conv, brk, k_done, committed, n_restarts,
+         n_repl) = sweep(b, x0, maxiter)
+        mask = np.asarray(committed, dtype=bool)
+        resnorms = [float(r) for r in np.asarray(resn)[mask]]
+        converged = bool(conv)
+        breakdown = bool(brk)
+        if (not converged and breakdown and resnorms
+                and resnorms[-1] <= 4 * tol * bnorm):
+            converged = True              # happy breakdown at tolerance
+        return x, resnorms, {
+            "converged": converged,
+            "breakdowns": int(n_restarts) + int(breakdown),
+            "restarts": int(n_restarts),
+            "replacements": int(n_repl),
+            "iterations": int(k_done) + 1,
+        }
     x = x0
     resnorms: list[float] = []
     restarts = breakdowns = 0
@@ -616,7 +956,7 @@ def run_restart_driver(sweep, b, x0, *, tol: float, maxiter: int,
     converged = False
     while total_k < maxiter:
         remaining = maxiter - total_k
-        x, resn, conv, brk, k_done = sweep(b, x, remaining)
+        x, resn, conv, brk, k_done = sweep(b, x, remaining)[:5]
         resnorms.extend(float(r) for r in np.asarray(resn) if r > 0)
         total_k += max(int(k_done) + 1, 1)
         if bool(conv):
@@ -634,24 +974,35 @@ def run_restart_driver(sweep, b, x0, *, tol: float, maxiter: int,
         break                             # iteration budget exhausted
     return x, resnorms, {
         "converged": converged, "breakdowns": breakdowns,
-        "restarts": restarts, "iterations": total_k,
+        "restarts": restarts, "replacements": 0, "iterations": total_k,
     }
 
 
 def plcg_solve(matvec, b, x0=None, *, l, sigma, tol=1e-8, maxiter=1000,
                prec=None, exploit_symmetry: bool = True, max_restarts: int = 5,
                unroll: int = 1, backend: Optional[str] = None,
-               stencil_hw: Optional[tuple] = None, sweep=None):
+               stencil_hw: Optional[tuple] = None, sweep=None,
+               restart: Optional[int] = None,
+               residual_replacement: Optional[int] = None,
+               ritz_refresh: bool = True):
     """Driver around the jitted engine: explicit restart on square-root
     breakdown (paper Remark 8), happy-breakdown detection, and a GLOBAL
     iteration budget across restart sweeps (via the sweep's ``k_budget``
     operand -- one compiled program regardless of restarts).
 
+    ``restart``/``residual_replacement`` (either not None) switch to the
+    IN-SCAN stability path: one sweep whose lanes re-seed themselves on
+    breakdown (up to ``restart`` times, shifts Ritz-refreshed unless
+    ``ritz_refresh=False``) and/or every ``residual_replacement``
+    committed updates; ``max_restarts`` is ignored there.  With both
+    None the legacy host restart loop runs (see ``run_restart_driver``).
+
     ``sweep`` (optional) is a pre-built jitted ``(b, x0, k_budget)``
     sweep -- a prepared ``repro.core.session.Solver`` passes the one it
     holds strongly, so the per-call weak-cache lookup (and any rebuild)
-    is skipped; it must have been built with ``iters >= maxiter + l + 1``
-    and the same tol/sigma/backend configuration.
+    is skipped; it must have been built with the same
+    tol/sigma/backend/restart configuration and enough ``iters``
+    (``maxiter + l + 1`` plus ``stab_iter_slack`` on the in-scan path).
 
     Returns (x, resnorms, info dict).
     """
@@ -659,13 +1010,20 @@ def plcg_solve(matvec, b, x0=None, *, l, sigma, tol=1e-8, maxiter=1000,
     bnorm = float(jnp.linalg.norm(b))
     if bnorm == 0:
         bnorm = 1.0
+    in_scan = restart is not None or residual_replacement is not None
+    iters = maxiter + l + 1 + stab_iter_slack(
+        l, restart, residual_replacement, maxiter)
     fn = sweep if sweep is not None else _jitted_sweep(
-        matvec, l, maxiter + l + 1, tuple(sigma), tol, prec,
-        exploit_symmetry, unroll, backend, stencil_hw)
+        matvec, l, iters, tuple(sigma), tol, prec,
+        exploit_symmetry, unroll, backend, stencil_hw,
+        restart=restart, rr_period=residual_replacement,
+        ritz_refresh=ritz_refresh)
 
     def run_sweep(bb, xx, remaining):
         out = fn(bb, xx, remaining)
-        return out.x, out.resnorms, out.converged, out.breakdown, out.k_done
+        return (out.x, out.resnorms, out.converged, out.breakdown,
+                out.k_done, out.committed, out.restarts, out.replacements)
 
     return run_restart_driver(run_sweep, b, x0, tol=tol, maxiter=maxiter,
-                              max_restarts=max_restarts, bnorm=bnorm)
+                              max_restarts=max_restarts, bnorm=bnorm,
+                              in_scan=in_scan)

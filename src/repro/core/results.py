@@ -15,6 +15,7 @@ class SolveResult:
     converged: bool
     breakdowns: int = 0           # square-root breakdowns encountered (p(l)-CG)
     restarts: int = 0             # explicit restarts performed after breakdowns
+    replacements: int = 0         # periodic true-residual replacements (r=b-Ax)
     true_resnorms: Optional[list] = None   # ||b - A x_j|| when traced
     info: dict = dataclasses.field(default_factory=dict)
 

@@ -34,10 +34,15 @@ Padding duplicates lane 0 (never zeros: a zero RHS would inject NaNs
 through the ``v0 = r0/||r0||`` normalization; lanes are independent
 under vmap, so a duplicated lane is merely discarded on extraction).
 
-Restart-on-breakdown remains a single-RHS affair (data-dependent host
-control flow): pooled dispatch runs one masked sweep per flush, exactly
-like every batched ``solve()`` today, and ``max_restarts`` /
-``record_G``-style knobs do not apply to pooled lanes.
+Restart-on-breakdown is an in-scan affair (``restart=`` /
+``residual_replacement=``, normalized once by the engine's
+``_prepare_restart``): a session constructed with the stability knobs
+bakes them into every sweep it prepares, so pooled lanes re-seed
+themselves *inside* the one masked sweep per flush -- per lane, zero
+host round-trips, no second sweep.  The legacy host restart loop
+(``max_restarts``) remains a deprecated single-RHS escape hatch, and
+``record_G``-style introspection knobs still do not apply to pooled
+lanes.
 
 Attainable accuracy stays reportable per lane via
 ``repro.core.residual_gap(A, b_j, result)`` on the per-handle results
@@ -97,13 +102,19 @@ def _lane_result(rb: SolveResult, j: int, *, flush_nrhs: int,
     conv = info.get("per_rhs_converged")
     iters = info.get("per_rhs_iters")
     brk = info.get("per_rhs_breakdown")
+    rst = info.get("per_rhs_restarts")
+    repl = info.get("per_rhs_replacements")
+    n_rst = int(np.asarray(rst)[j]) if rst is not None else 0
     return SolveResult(
         x=x,
         resnorms=list(rb.resnorms[j]),
         iters=int(np.asarray(iters)[j]) if iters is not None else rb.iters,
         converged=(bool(np.asarray(conv)[j]) if conv is not None
                    else rb.converged),
-        breakdowns=(int(np.asarray(brk)[j]) if brk is not None else 0),
+        breakdowns=(int(np.asarray(brk)[j]) + n_rst if brk is not None
+                    else 0),
+        restarts=n_rst,
+        replacements=(int(np.asarray(repl)[j]) if repl is not None else 0),
         info={"method": info.get("method"), "l": info.get("l"),
               "prec": info.get("prec"), "batched": info.get("batched"),
               "pooled": True, "lane": j,
@@ -148,16 +159,21 @@ class Solver:
     def __init__(self, A, method: str = "plcg_scan", *, tol: float = 1e-8,
                  maxiter: int = 1000, M=None, l: int = 1, sigma=None,
                  spectrum=None, backend: Optional[str] = None, mesh=None,
-                 comm=None, n: Optional[int] = None, **options):
+                 comm=None, restart="auto",
+                 residual_replacement: Optional[int] = None,
+                 n: Optional[int] = None, **options):
         spec = engine._prepare_method(method)
         engine._prepare_options(spec, options)
         on_mesh = mesh is not None or engine._is_mesh_operator(A)
-        # the cross-cutting knob group (M=/mesh=/backend=/comm=) is
-        # validated and normalized ONCE here, through the engine's single
-        # knob table -- no layer below re-validates per call
+        # the cross-cutting knob group (M=/mesh=/backend=/comm=/restart=/
+        # residual_replacement=) is validated and normalized ONCE here,
+        # through the engine's single knob table -- no layer below
+        # re-validates per call
         M, comm = engine._prepare_knobs(spec, M=M, backend=backend,
                                         mesh=mesh, comm=comm,
                                         on_mesh=on_mesh)
+        restart, residual_replacement = engine._prepare_restart(
+            spec, restart, residual_replacement, options)
         spectrum = engine._prepare_spectrum(spec, M, sigma, spectrum)
         self.method = method
         self.spec = spec
@@ -169,6 +185,8 @@ class Solver:
         self.spectrum = spectrum
         self.backend = backend
         self.comm = comm
+        self.restart = restart
+        self.residual_replacement = residual_replacement
         self.options = dict(options)
         self._pending: list = []
         self._prepared: dict = {}       # strong refs: config -> jitted fn
@@ -182,7 +200,8 @@ class Solver:
             from ..distributed.plcg_dist import prepare_on_mesh
             self._mesh_session = prepare_on_mesh(
                 spec, A, mesh, M=M, l=l, sigma=sigma, spectrum=spectrum,
-                comm=comm, **options)
+                comm=comm, restart=restart,
+                residual_replacement=residual_replacement, **options)
             self._op = self._mesh_session.op
             return
 
@@ -217,14 +236,19 @@ class Solver:
         (tol, maxiter) configuration (plcg_scan only)."""
         key = ("sweep", float(tol), int(maxiter))
         if key not in self._prepared:
-            from .plcg_scan import _jitted_sweep
+            from .plcg_scan import _jitted_sweep, stab_iter_slack
             sig = tuple(engine._resolve_sigma(self.sigma, self.spectrum,
                                               self.l))
+            iters = maxiter + self.l + 1 + stab_iter_slack(
+                self.l, self.restart, self.residual_replacement, maxiter)
             self._prepared[key] = _jitted_sweep(
-                self._op.matvec, self.l, maxiter + self.l + 1, sig, tol,
+                self._op.matvec, self.l, iters, sig, tol,
                 self.M, self.options.get("exploit_symmetry", True),
                 self.options.get("unroll", 1), self.backend,
-                getattr(self._op, "stencil2d", None))
+                getattr(self._op, "stencil2d", None),
+                restart=self.restart,
+                rr_period=self.residual_replacement,
+                ritz_refresh=self.options.get("ritz_refresh", True))
             self.stats["prepared_builds"] += 1
         return self._prepared[key]
 
@@ -286,7 +310,8 @@ class Solver:
             return engine._solve_batched(
                 spec, op, b, x0=x0, tol=tol, maxiter=maxiter, M=self.M,
                 l=self.l, sigma=self.sigma, spectrum=self.spectrum,
-                backend=self.backend,
+                backend=self.backend, restart=self.restart,
+                rr_period=self.residual_replacement,
                 get_engine=(self._batched_engine_getter()
                             if spec.batched == "vmap" else None),
                 **self.options)
@@ -295,6 +320,8 @@ class Solver:
                 op, b, x0, tol=tol, maxiter=maxiter, M=self.M, l=self.l,
                 sigma=self.sigma, spectrum=self.spectrum,
                 backend=self.backend, sweep=self._single_sweep(tol, maxiter),
+                restart=self.restart,
+                residual_replacement=self.residual_replacement,
                 **self.options)
         return spec.fn(op, b, x0, tol=tol, maxiter=maxiter, M=self.M,
                        l=self.l, sigma=self.sigma, spectrum=self.spectrum,
@@ -393,14 +420,17 @@ class Solver:
         return (k, pad)
 
     def _solve_batched_for_pool(self, B, X0) -> SolveResult:
-        """Batched solve for pooled dispatch: restart-style knobs are
-        stripped (batched sweeps have no data-dependent restarts -- the
-        engines would reject them loudly, and a pooled lane's contract
-        is the masked single-sweep one of every batched solve)."""
+        """Batched solve for pooled dispatch: legacy host-driver knobs
+        (``max_restarts``, ``record_G``-style introspection) are stripped
+        -- the batched engines would reject them loudly -- but the
+        normalized in-scan stability knobs (``restart=`` /
+        ``residual_replacement=``) thread through, so each pooled lane
+        re-seeds itself independently inside the one masked sweep per
+        flush."""
         self.stats["calls"] += 1
         if self._mesh_session is not None:
             opts = {key: v for key, v in self.options.items()
-                    if key == "exploit_symmetry"}
+                    if key in ("exploit_symmetry", "ritz_refresh")}
             sess = self._mesh_session
             if sess.spec.name == "cg":
                 from ..distributed.plcg_dist import _mesh_cg
@@ -411,16 +441,18 @@ class Solver:
             return _mesh_plcg(sess.op, B, X0, tol=self.tol,
                               maxiter=self.maxiter, l=sess.l,
                               sigma=sess.sig, prec=sess.prec,
-                              comm=sess.comm,
+                              comm=sess.comm, restart=sess.restart,
+                              residual_replacement=sess.residual_replacement,
                               get_sweep=sess._get_sweep("plcg", self.tol),
                               **opts)
         op = self._ensure_op(B[0])
         opts = {key: v for key, v in self.options.items()
-                if key in ("exploit_symmetry", "unroll")}
+                if key in ("exploit_symmetry", "unroll", "ritz_refresh")}
         return engine._solve_batched(
             self.spec, op, B, x0=X0, tol=self.tol, maxiter=self.maxiter,
             M=self.M, l=self.l, sigma=self.sigma, spectrum=self.spectrum,
-            backend=self.backend,
+            backend=self.backend, restart=self.restart,
+            rr_period=self.residual_replacement,
             get_engine=(self._batched_engine_getter()
                         if self.spec.batched == "vmap" else None),
             **opts)

@@ -37,6 +37,12 @@ def ritz_shifts(ritz_values: Sequence[float], l: int) -> list[float]:
     If more than ``l`` Ritz values are supplied the l extremal-spread
     Leja-ordered values are used, which is the standard choice for Newton
     bases (Hoemmen 2010).
+
+    This is the host-side twin of the traced pair
+    :func:`ritz_values_from_tridiag` + :func:`leja_order` that the scan
+    engine's in-scan restart path runs on the committed ``gam``/``dlt``
+    tridiagonal (``repro.core.plcg_scan``, ``restart=``): same Leja rule,
+    plain floats instead of traced arrays.
     """
     vals = sorted(float(v) for v in ritz_values)
     if len(vals) < l:
@@ -48,4 +54,54 @@ def ritz_shifts(ritz_values: Sequence[float], l: int) -> list[float]:
         nxt = max(remaining, key=lambda v: math.prod(abs(v - c) for c in chosen))
         chosen.append(nxt)
         remaining.remove(nxt)
+    return chosen
+
+
+# --------------------------------------------------------------------------
+# traced variants -- consumed inside the scan engine (restart shift refresh)
+# --------------------------------------------------------------------------
+
+def ritz_values_from_tridiag(gam, dlt):
+    """Ritz values of the (preconditioned) operator from ``m`` committed
+    Lanczos coefficients: eigenvalues of the symmetric tridiagonal
+    ``T = tridiag(dlt, gam, dlt)`` (paper eq. (4) -- the banded T the
+    p(l)-CG recurrences build column by column).
+
+    ``gam`` is the ``(m,)`` diagonal, ``dlt`` the matching ``(m,)``
+    slice whose first ``m-1`` entries are the off-diagonal.  Fully
+    traceable (jittable, vmappable, runs inside ``lax.scan`` bodies).
+    """
+    import jax.numpy as jnp
+
+    gam = jnp.asarray(gam)
+    dlt = jnp.asarray(dlt)
+    T = (jnp.diag(gam) + jnp.diag(dlt[:-1], 1) + jnp.diag(dlt[:-1], -1))
+    return jnp.linalg.eigvalsh(T)
+
+
+def leja_order(vals, l: int):
+    """Traced Leja selection: the ``l`` extremal-spread values of
+    ``vals``, greedily maximizing the product of pairwise distances
+    (log-sum form for stability) -- the same rule as :func:`ritz_shifts`
+    but expressed in jnp so the scan engine can refresh its shifts
+    in-trace at restart time.  Requires ``len(vals) >= l`` (static).
+    """
+    import jax.numpy as jnp
+
+    vals = jnp.asarray(vals)
+    m = vals.shape[0]
+    if m < l:
+        raise ValueError(f"need at least l={l} values, got {m}")
+    tiny = jnp.finfo(vals.dtype).tiny
+    i0 = jnp.argmax(jnp.abs(vals))
+    chosen = jnp.zeros((l,), vals.dtype).at[0].set(vals[i0])
+    taken = jnp.zeros((m,), bool).at[i0].set(True)
+    # running sum of log-distances to every chosen point; a duplicate of
+    # a chosen value scores -inf and is naturally never picked again
+    score = jnp.log(jnp.abs(vals - vals[i0]) + tiny)
+    for j in range(1, l):
+        idx = jnp.argmax(jnp.where(taken, -jnp.inf, score))
+        chosen = chosen.at[j].set(vals[idx])
+        taken = taken.at[idx].set(True)
+        score = score + jnp.log(jnp.abs(vals - vals[idx]) + tiny)
     return chosen

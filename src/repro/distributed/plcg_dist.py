@@ -59,7 +59,8 @@ from jax.sharding import PartitionSpec as P
 from repro.compat import shard_map_compat
 from repro.core import engine as _engine
 from repro.core.comm import as_comm_policy, build_comm_runtime
-from repro.core.plcg_scan import plcg_scan, run_restart_driver
+from repro.core.plcg_scan import (plcg_scan, run_restart_driver,
+                                  stab_iter_slack)
 from repro.core.results import SolveResult
 from repro.core.solver_cache import WeakCallableCache
 
@@ -77,15 +78,16 @@ def _batch_spec(spec: P) -> P:
 
 
 def _shard_jit(op: DistributedOperator, one, *, batched: bool,
-               n_extra: int = 0, trace_event=None):
+               n_extra: int = 0, n_out: int = 4, trace_event=None):
     """Wrap a per-shard local body into the jitted shard_map program.
 
     ``one(b_blk, x_blk, *extra)`` maps one local field block (plus
     ``n_extra`` replicated scalar operands, e.g. an iteration budget) to
-    ``(x_blk, *4 replicated scalar outputs)``; with ``batched`` the RHS
-    lanes are vmapped OUTSIDE the domain decomposition (extras are
-    shared across lanes) and ``trace_event(shape)``, when given, logs a
-    compile event like the single-device batched engine.
+    ``(x_blk, *n_out replicated scalar/trace outputs)``; with
+    ``batched`` the RHS lanes are vmapped OUTSIDE the domain
+    decomposition (extras are shared across lanes) and
+    ``trace_event(shape)``, when given, logs a compile event like the
+    single-device batched engine.
     """
     spec = op.spec()
     if batched:
@@ -102,7 +104,7 @@ def _shard_jit(op: DistributedOperator, one, *, batched: bool,
     fn = shard_map_compat(
         local_run, mesh=op.mesh,
         in_specs=(io_spec, io_spec) + (P(),) * n_extra,
-        out_specs=(io_spec,) + (P(),) * 4,
+        out_specs=(io_spec,) + (P(),) * n_out,
         check=False,
     )
     return jax.jit(fn)
@@ -138,15 +140,23 @@ def _weak_prec_resolver(op, prec):
 def plcg_mesh_sweep(op: DistributedOperator, *, l: int, iters: int,
                     sigma: Sequence[float], tol: float = 0.0,
                     exploit_symmetry: bool = True, batched: bool = False,
-                    prec=None, comm=None):
+                    prec=None, comm=None, restart=None, rr_period=None,
+                    ritz_refresh: bool = True):
     """Build (cached) the jitted p(l)-CG mesh sweep.
 
     Returns a jitted callable ``(b, x0, k_budget) -> (x, resnorms,
-    converged, breakdown, k_done)`` where ``b``/``x0`` are global fields
+    converged, breakdown, k_done, committed, restarts, replacements)``
+    where ``b``/``x0`` are global fields
     of shape ``op.global_shape`` (``(nrhs, *global_shape)`` when
     ``batched``) and ``k_budget`` is the (traced) solution-update budget
     -- the restart driver passes the *remaining* global budget per sweep
-    so every sweep reuses ONE compiled program.  ``prec`` is a structured
+    so every sweep reuses ONE compiled program.  ``restart`` /
+    ``rr_period`` enable the scan engine's in-scan stability path
+    (per-lane re-seed on breakdown / periodic true-residual replacement;
+    see ``plcg_scan``); the widened reduction payload still rides the
+    one per-iteration collective of the selected ``comm`` policy, so the
+    per-iteration collective signature is unchanged.  ``prec`` is a
+    structured
     ``repro.core.precond.Preconditioner`` resolved shard-locally via
     :func:`resolve_prec_local`; its apply is communication-free (or
     neighbor-halo only), so the traced program STILL contains exactly ONE
@@ -184,16 +194,20 @@ def plcg_mesh_sweep(op: DistributedOperator, *, l: int, iters: int,
                 reduce_scalars=opref.reduce_scalars,
                 exploit_symmetry=exploit_symmetry, k_budget=k_budget,
                 comm=runtime,
+                restart=restart, rr_period=rr_period,
+                ritz_refresh=ritz_refresh,
             )
             return (out.x.reshape(b_blk.shape), out.resnorms, out.converged,
-                    out.breakdown, out.k_done)
+                    out.breakdown, out.k_done, out.committed, out.restarts,
+                    out.replacements)
 
-        return _shard_jit(op, one, batched=batched, n_extra=1,
+        return _shard_jit(op, one, batched=batched, n_extra=1, n_out=7,
                           trace_event=lambda shape: ("plcg@mesh", shape, l))
 
     return _MESH_SWEEP_CACHE.get_or_build(
         (op, prec),
-        ("plcg", l, iters, sig, tol, exploit_symmetry, batched, policy),
+        ("plcg", l, iters, sig, tol, exploit_symmetry, batched, policy,
+         restart, rr_period, ritz_refresh),
         build)
 
 
@@ -312,21 +326,34 @@ def _canonicalize_b(op: DistributedOperator, b, x0):
 
 def _mesh_plcg(op, b, x0, *, tol, maxiter, l, sigma, prec=None,
                exploit_symmetry: bool = True,
-               max_restarts=None, comm=None, get_sweep=None) -> SolveResult:
+               max_restarts=None, comm=None, restart=None,
+               residual_replacement=None, ritz_refresh: bool = True,
+               get_sweep=None) -> SolveResult:
     b, x0, batched, orig_shape = _canonicalize_b(op, b, x0)
     sig = tuple(sigma)
     policy = as_comm_policy(comm)
+    # the in-scan stability path (restart= / residual_replacement=,
+    # normalized by engine._prepare_restart) runs ONE sweep whose lanes
+    # re-seed themselves in-trace; the sweep needs stab_iter_slack extra
+    # bodies so the update budget stays spendable through re-seeds
+    stab = restart is not None or residual_replacement is not None
+    slack = stab_iter_slack(l, restart, residual_replacement, maxiter)
     if get_sweep is None:
         def get_sweep(*, iters, batched):
             return plcg_mesh_sweep(op, l=l, iters=iters, sigma=sig,
                                    tol=tol,
                                    exploit_symmetry=exploit_symmetry,
-                                   batched=batched, prec=prec, comm=policy)
+                                   batched=batched, prec=prec, comm=policy,
+                                   restart=restart,
+                                   rr_period=residual_replacement,
+                                   ritz_refresh=ritz_refresh)
     base_info = {"l": l, "sigma": list(sig), "backend": None,
                  "mesh": dict(op.mesh.shape), "comm": policy.mode,
                  # a split/ring policy leaves ZERO blocking psums in the
                  # scan body (the init reduction outside it stays a psum)
                  "psums_per_iter": 1 if policy.is_blocking else 0,
+                 "restart": restart,
+                 "residual_replacement": residual_replacement,
                  "prec": getattr(prec, "name", None)}
     if policy.mode == "overlap":
         base_info["overlap_depth"] = policy.resolve_depth(l)
@@ -334,50 +361,74 @@ def _mesh_plcg(op, b, x0, *, tol, maxiter, l, sigma, prec=None,
     if batched:
         if max_restarts is not None:
             # mirror the single-device batched engine: don't silently
-            # drop a flag the caller believes is active
+            # drop a flag the caller believes is active (the in-scan
+            # restart= knob is the batched-capable replacement)
             raise ValueError(
                 "options ['max_restarts'] are not supported by the "
-                "batched mesh engine (no data-dependent restarts; solve "
-                "each RHS individually for restart control)")
-        # one sweep, per-lane convergence masking inside the scan (no
-        # data-dependent restarts; mirrors the single-device batched
-        # path, so the budget is the non-binding maxiter + 1)
-        fn = get_sweep(iters=maxiter + l + 1, batched=True)
+                "batched mesh engine (the host restart loop is "
+                "single-RHS; use the in-scan restart= knob for per-lane "
+                "recovery)")
+        # one sweep, per-lane convergence masking inside the scan; with
+        # restart=/residual_replacement= lanes also re-seed themselves
+        # in-trace (still ONE compiled sweep, zero host round-trips)
+        fn = get_sweep(iters=maxiter + l + 1 + slack, batched=True)
         out = fn(b, x0, maxiter + 1)
-        x, resn, conv, brk, k_done = out
+        x, resn, conv, brk, k_done, committed, restarts, repl = out
         resn = np.asarray(resn)                         # (nrhs, iters)
         conv = np.asarray(conv)
         brk = np.asarray(brk)
         k_done = np.asarray(k_done)
+        if stab:
+            committed = np.asarray(committed, dtype=bool)
+            resnorms = [[float(r) for r in row[m]]
+                        for row, m in zip(resn, committed)]
+            restarts_pl = np.asarray(restarts)
+            repl_pl = np.asarray(repl)
+        else:
+            # lane j commits |zeta_k| for k = 0..k_done[j] at trace
+            # indices l..l+k_done[j] (count-sliced, as the vmap engine)
+            resnorms = [[float(r) for r in row[l: l + int(k) + 1]]
+                        for row, k in zip(resn, k_done)]
+            restarts_pl = np.zeros(int(b.shape[0]), dtype=int)
+            repl_pl = np.zeros(int(b.shape[0]), dtype=int)
         return SolveResult(
             x=x.reshape(orig_shape),
-            # lane j commits |zeta_k| for k = 0..k_done[j] at trace indices
-            # l..l+k_done[j] (count-sliced, same as the vmap engine)
-            resnorms=[[float(r) for r in row[l: l + int(k) + 1]]
-                      for row, k in zip(resn, k_done)],
+            resnorms=resnorms,
             iters=int(k_done.max()) + 1,
             converged=bool(conv.all()),
-            breakdowns=int(brk.sum()),
+            breakdowns=int(brk.sum()) + int(restarts_pl.sum()),
+            restarts=int(restarts_pl.sum()),
+            replacements=int(repl_pl.sum()),
             info={**base_info, "method": f"p({l})-CG[scan,mesh+vmap]",
                   "batched": "shard_map+vmap", "nrhs": int(b.shape[0]),
                   "per_rhs_converged": conv,
                   "per_rhs_iters": k_done + 1,
-                  "per_rhs_breakdown": brk},
+                  "per_rhs_breakdown": brk,
+                  "per_rhs_restarts": restarts_pl,
+                  "per_rhs_replacements": repl_pl},
         )
 
-    # single RHS: the SAME global-budget restart-on-breakdown driver as
-    # the single-device plcg_solve (run_restart_driver), fed the mesh
-    # sweep -- the budget is a traced operand of ONE fixed-size compiled
-    # program, so restarts never retrace/recompile the shard_map sweep.
-    fn = get_sweep(iters=maxiter + l, batched=False)
+    # single RHS: ONE restart semantics, shared with the single-device
+    # plcg_solve via run_restart_driver.  In-scan mode (restart= /
+    # residual_replacement=) runs one compiled sweep whose re-seeds
+    # happen in-trace; the legacy host loop (deprecated, shift-free
+    # re-init) re-enters the sweep with the remaining budget when only
+    # the max_restarts escape hatch is given.  Either way the budget is
+    # a traced operand of ONE fixed-size compiled program, so restarts
+    # never retrace/recompile the shard_map sweep.
+    if stab:
+        fn = get_sweep(iters=maxiter + l + 1 + slack, batched=False)
+    else:
+        fn = get_sweep(iters=maxiter + l, batched=False)
     x, resnorms, info = run_restart_driver(
         fn, b, x0, tol=tol, maxiter=maxiter,
         max_restarts=5 if max_restarts is None else max_restarts,
-        bnorm=float(jnp.linalg.norm(b)) or 1.0)
+        bnorm=float(jnp.linalg.norm(b)) or 1.0, in_scan=stab)
     return SolveResult(
         x=x.reshape(orig_shape), resnorms=resnorms,
         iters=info["iterations"], converged=info["converged"],
         breakdowns=info["breakdowns"], restarts=info["restarts"],
+        replacements=info.get("replacements", 0),
         info={**base_info, "method": f"p({l})-CG[scan,mesh]"},
     )
 
@@ -454,7 +505,8 @@ class PreparedMeshSolver:
     """
 
     def __init__(self, spec, A, mesh, *, M, l, sigma, spectrum,
-                 comm=None, **options):
+                 comm=None, restart=None, residual_replacement=None,
+                 **options):
         if spec.name not in _MESH_METHODS:
             if getattr(spec, "supports_mesh", False):
                 raise RuntimeError(
@@ -487,6 +539,10 @@ class PreparedMeshSolver:
             # a prepared session never fails at first solve
             build_comm_runtime(self.comm, self.op, l)
         self.l = l
+        # normalized stability knobs (engine._prepare_restart ran in the
+        # session front end); baked into every prepared plcg sweep
+        self.restart = restart
+        self.residual_replacement = residual_replacement
         self.options = dict(options)
         self._sweeps: dict = {}         # strong refs to jitted sweeps
 
@@ -508,6 +564,9 @@ class PreparedMeshSolver:
                         self.op, l=self.l, iters=iters, sigma=self.sig,
                         tol=tol, batched=batched, prec=self.prec,
                         comm=self.comm,
+                        restart=self.restart,
+                        rr_period=self.residual_replacement,
+                        ritz_refresh=self.options.get("ritz_refresh", True),
                         exploit_symmetry=self.options.get(
                             "exploit_symmetry", True))
                 else:
@@ -526,7 +585,14 @@ class PreparedMeshSolver:
         if self.spec.name == "cg":
             self._get_sweep("cg", tol)(iters=maxiter, batched=batched)
         else:
-            iters = maxiter + self.l + (1 if batched else 0)
+            stab = (self.restart is not None
+                    or self.residual_replacement is not None)
+            if stab:
+                iters = maxiter + self.l + 1 + stab_iter_slack(
+                    self.l, self.restart, self.residual_replacement,
+                    maxiter)
+            else:
+                iters = maxiter + self.l + (1 if batched else 0)
             self._get_sweep("plcg", tol)(iters=iters, batched=batched)
 
     def solve(self, b, x0=None, *, tol: float, maxiter: int) -> SolveResult:
@@ -537,26 +603,36 @@ class PreparedMeshSolver:
         return _MESH_METHODS[self.spec.name](
             self.op, b, x0, tol=tol, maxiter=maxiter, l=self.l,
             sigma=self.sig, prec=self.prec, comm=self.comm,
+            restart=self.restart,
+            residual_replacement=self.residual_replacement,
             get_sweep=self._get_sweep("plcg", tol), **self.options)
 
 
 def prepare_on_mesh(spec, A, mesh, *, M, l, sigma, spectrum, backend=None,
-                    comm=None, **options) -> PreparedMeshSolver:
+                    comm=None, restart=None, residual_replacement=None,
+                    **options) -> PreparedMeshSolver:
     """Build the prepared mesh session behind ``session.Solver(mesh=...)``
     (validation / promotion / resolution once; see
     :class:`PreparedMeshSolver`).  ``comm`` selects the reduction policy
-    (``repro.core.comm.CommPolicy`` or mode string)."""
+    (``repro.core.comm.CommPolicy`` or mode string); ``restart`` /
+    ``residual_replacement`` are the engine-normalized in-scan stability
+    knobs baked into every prepared pipelined sweep."""
     del backend     # front-end warned; bypassed by construction here
     return PreparedMeshSolver(spec, A, mesh, M=M, l=l, sigma=sigma,
-                              spectrum=spectrum, comm=comm, **options)
+                              spectrum=spectrum, comm=comm, restart=restart,
+                              residual_replacement=residual_replacement,
+                              **options)
 
 
 def solve_on_mesh(spec, A, b, *, mesh, x0, tol, maxiter, M, l, sigma,
-                  spectrum, backend, comm=None, **options) -> SolveResult:
+                  spectrum, backend, comm=None, restart=None,
+                  residual_replacement=None, **options) -> SolveResult:
     """One-shot mesh-aware dispatch behind ``repro.core.solve(mesh=...)``:
     a thin wrapper preparing a :class:`PreparedMeshSolver` and running it
     on ``b`` (the session API is the primary entry point; this keeps the
     legacy call-per-solve contract)."""
     return prepare_on_mesh(spec, A, mesh, M=M, l=l, sigma=sigma,
                            spectrum=spectrum, backend=backend, comm=comm,
+                           restart=restart,
+                           residual_replacement=residual_replacement,
                            **options).solve(b, x0, tol=tol, maxiter=maxiter)

@@ -89,6 +89,42 @@ def count_collectives_in_scan_bodies(fn, *args, **kwargs) -> list[dict]:
             for b in bodies]
 
 
+def collective_payload_shapes_in_scan_bodies(fn, *args,
+                                             **kwargs) -> list[list[tuple]]:
+    """Per-scan-body ``(primitive, operand shape)`` pairs for every
+    collective equation -- the payload-width signature of the per-
+    iteration reduction.
+
+    The stability path of ``plcg_scan`` (``restart=`` /
+    ``rr_period=``) widens the fused scalar payload by exactly one slot
+    (the re-seed residual M-norm rides along): a blocking mesh sweep
+    shows ``[("psum", (2l+2,))]`` per body instead of ``[("psum",
+    (2l+1,))]`` -- still ONE collective, so the per-iteration collective
+    *count* signature of every ``comm=`` policy is unchanged.  Under
+    batched lanes the lane axis prepends (``(nrhs, 2l+2)``).
+    """
+    closed = jax.make_jaxpr(fn)(*args, **kwargs)
+    bodies: list = []
+    _collect_scan_bodies(closed.jaxpr, bodies, set())
+    out = []
+    for b in bodies:
+        pairs: list = []
+        _collect_collective_shapes(b, pairs, set())
+        out.append(pairs)
+    return out
+
+
+def _collect_collective_shapes(jaxpr, out: list, seen: set) -> None:
+    if id(jaxpr) in seen:
+        return
+    seen.add(id(jaxpr))
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name in COLLECTIVE_PRIMITIVES:
+            out.append((eqn.primitive.name, tuple(eqn.invars[0].aval.shape)))
+        for sub in _sub_jaxprs(eqn.params):
+            _collect_collective_shapes(sub, out, seen)
+
+
 def scan_carry_shapes(fn, *args, **kwargs) -> list[list[tuple]]:
     """Per-scan carry layouts: one list of ``(shape...)`` tuples per scan
     equation reachable from ``fn``'s jaxpr, in traversal order.

@@ -59,6 +59,14 @@ def main(argv=None):
     ap.add_argument("--comm-depth", type=int, default=None,
                     help="overlap staging depth d, 1 <= d <= l "
                     "(--comm overlap only; default l)")
+    ap.add_argument("--restart", type=str, default="auto",
+                    help="in-scan breakdown recovery: auto (default), an "
+                    "int cap of per-lane re-seeds, or none to disable "
+                    "(plcg_scan; see the engine's restart= knob)")
+    ap.add_argument("--residual-replacement", type=int, default=None,
+                    help="period (committed updates) of the in-scan "
+                    "true-residual recompute r = b - Ax (plcg_scan; "
+                    "counters deep-pipeline residual drift)")
     ap.add_argument("--dryrun", action="store_true",
                     help="lower+compile on the production 16x16 (or 32x16 "
                     "with --multi-pod) mesh and report roofline terms")
@@ -147,6 +155,16 @@ def main(argv=None):
     if args.comm is not None:
         from repro.core import CommPolicy
         comm = CommPolicy(mode=args.comm, depth=args.comm_depth)
+    if args.restart == "auto":
+        restart = "auto"
+    elif args.restart.lower() in ("none", "off"):
+        restart = None
+    else:
+        restart = int(args.restart)
+    stab_kw = {}
+    if args.method in ("plcg_scan",):
+        stab_kw = {"restart": restart,
+                   "residual_replacement": args.residual_replacement}
     M = None
     if args.prec == "jacobi":
         from repro.operators import jacobi
@@ -165,7 +183,8 @@ def main(argv=None):
         solver = Solver(A, args.method, l=args.l, tol=args.tol,
                         maxiter=args.iters,
                         sigma=None if M is not None else sigma,
-                        M=M, backend=args.backend, mesh=mesh, comm=comm)
+                        M=M, backend=args.backend, mesh=mesh, comm=comm,
+                        **stab_kw)
         pool = SolverPool(solver, max_batch=args.max_batch)
         setup_s = time.time() - t0
         rng = np.random.default_rng(1)
@@ -206,7 +225,7 @@ def main(argv=None):
     # M.precond_spectrum; the hand-picked (0, 8) sigma is only for M=None
     r = solve(A, B, method=args.method, l=args.l, tol=args.tol,
               maxiter=args.iters, sigma=None if M is not None else sigma,
-              M=M, backend=args.backend, mesh=mesh, comm=comm)
+              M=M, backend=args.backend, mesh=mesh, comm=comm, **stab_kw)
     dt = time.time() - t0
     x = np.asarray(r.x).reshape(args.nrhs, -1) if args.nrhs > 1 \
         else np.asarray(r.x).reshape(-1)
@@ -218,15 +237,24 @@ def main(argv=None):
           f"{r.iters} iters, {dt:.2f}s, |b-Ax| = {res:.3e}, "
           f"converged={r.converged}")
     if args.nrhs > 1 and "per_rhs_iters" in r.info:
-        # a batched lane that hits square-root breakdown freezes (no
-        # in-scan restart yet -- see ROADMAP); make that visible instead
-        # of just reporting converged=False for the whole batch
+        # a batched lane that hits square-root breakdown re-seeds itself
+        # in-scan when restart= is enabled (per-lane counters below);
+        # with restart=None it freezes with breakdown=True -- either way
+        # make the per-lane outcome visible instead of just reporting
+        # converged=False for the whole batch
         print("  per-lane iters:",
               [int(k) for k in r.info["per_rhs_iters"]],
               "converged:",
               [bool(c) for c in r.info["per_rhs_converged"]],
               "breakdown:",
-              [bool(c) for c in r.info.get("per_rhs_breakdown", [])])
+              [bool(c) for c in r.info.get("per_rhs_breakdown", [])],
+              "restarts:",
+              [int(c) for c in r.info.get("per_rhs_restarts", [])],
+              "replacements:",
+              [int(c) for c in r.info.get("per_rhs_replacements", [])])
+    elif r.restarts or r.replacements:
+        print(f"  in-scan recovery: {r.restarts} restart(s), "
+              f"{r.replacements} residual replacement(s)")
     if M is not None and args.nrhs == 1:
         from repro.core import residual_gap
         gap = residual_gap(A, b_flat, r)
