@@ -1,0 +1,148 @@
+"""Mixed-precision benchmarks: what bf16 window storage saves and costs.
+
+The p(l)-CG footprint is dominated by the 3l+3 window vectors
+(``Vw (n, 2l+1)``, ``Zw (n, l+1)``, ``Zhw (n, 3)``) and the fused
+iteration streams all of them through HBM, so the ``precision=`` policy
+(``repro.core.precision``) targets exactly that traffic: windows + SPMV
+stream in a low-precision *storage* dtype, every scalar recurrence, dot
+payload, collective buffer and convergence test in the f32/f64 *compute*
+dtype.  Three row groups:
+
+* ``mp/traffic_{f32,bf16}_l{1,3,5}`` -- bytes each fused iteration moves
+  through the window-dominated path, measured by summing the ``nbytes``
+  of the actual per-iteration operand buffers at each storage dtype (the
+  value column is bytes/iter, not us).  ``run.py`` derives
+  ``mp/traffic_saving`` = f32/bf16 at l=5 from these rows -- the
+  headline HBM-traffic reduction (2x by itemsize on every window path).
+* ``mp/iter_l{l}_{backend}`` -- us/iter of a fixed-budget sweep at f32
+  vs bf16 storage per kernel backend.  CPU interpret-mode wall time is
+  NOT probative of TPU HBM throughput (bf16 is emulated in software
+  here); the traffic rows are the probative ones, these only pin the
+  graphs down end to end.
+* ``mp/gap_{bf16,f32,f64}[_rr]`` -- the attainable-accuracy ladder at
+  depth l=5: ``residual_gap()`` (arXiv:1804.02962) per storage dtype,
+  with and without ``residual_replacement=`` (arXiv:1706.05988) --  the
+  committed numbers for the storage-precision/stability trade-off.
+  bf16 storage stalls at ~eps_bf16-scaled floors; replacement claws part
+  of the drift back but cannot beat the storage rounding of the window
+  recurrences themselves.
+"""
+from __future__ import annotations
+
+import warnings
+
+import numpy as np
+
+from benchmarks._util import timeit_us as _timeit
+
+#: pipeline depths of the traffic/timing sweeps (the paper's deep range)
+DEPTHS = (1, 3, 5)
+
+
+def _window_bytes_per_iter(n: int, l: int, sdt) -> int:
+    """Bytes one fused iteration moves on the window-dominated path,
+    summed from real buffers: read Vw+Zw+SPMV stream, write both shifted
+    windows back (the megakernel's read-modify-write of the whole
+    lane-major state)."""
+    import jax.numpy as jnp
+    Vw = jnp.zeros((n, 2 * l + 1), sdt)
+    Zw = jnp.zeros((n, l + 1), sdt)
+    t = jnp.zeros((n,), sdt)
+    return 2 * (Vw.nbytes + Zw.nbytes) + t.nbytes
+
+
+def mp_traffic():
+    """Measured bytes/iter of the window path per storage dtype and l.
+
+    The value column is bytes (not us): summed ``nbytes`` of the actual
+    jax buffers the fused body streams per iteration, so the itemsize
+    comes from the real storage dtype, not an assumed constant."""
+    import jax.numpy as jnp
+    n = 1 << 16
+    rows = []
+    for l in DEPTHS:
+        per = {}
+        for tag, sdt in (("f32", jnp.float32), ("bf16", jnp.bfloat16)):
+            per[tag] = _window_bytes_per_iter(n, l, sdt)
+            rows.append((f"mp/traffic_{tag}_l{l}", float(per[tag]),
+                         f"value=bytes_per_iter;n={n};window_cols={3*l+2};"
+                         f"itemsize={jnp.dtype(sdt).itemsize}"))
+        rows[-1] = (rows[-1][0], rows[-1][1],
+                    rows[-1][2] + f";saving={per['f32']/per['bf16']:.2f}x")
+    return rows
+
+
+def mp_iter_times():
+    """us/iter at f32 vs bf16 storage per backend (CPU-indicative only;
+    Pallas runs interpret=True here and bf16 is software-emulated, so the
+    probative column is the traffic model, not this wall time)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.plcg_scan import plcg_jit
+    from repro.core.shifts import chebyshev_shifts
+    from repro.operators import poisson2d
+    h = w = 32
+    A = poisson2d(h, w)
+    b = jnp.asarray(A @ np.ones(A.n), jnp.float32)
+    iters = 24
+    rows = []
+    for l in DEPTHS:
+        sig = tuple(chebyshev_shifts(0.0, 8.0, l))
+        for backend in ("fused", "pallas"):
+            us = {}
+            for tag, pol in (("f32", None), ("bf16", "bf16")):
+                fn = lambda pol=pol: plcg_jit(
+                    A.matvec, b, l=l, iters=iters, sigma=sig, tol=0.0,
+                    backend=backend, stencil_hw=(h, w), precision=pol)
+                jax.block_until_ready(fn().x)
+                us[tag] = _timeit(fn, reps=2) / iters
+            rows.append((f"mp/iter_l{l}_{backend}", us["bf16"],
+                         f"us_per_iter_bf16={us['bf16']:.0f};"
+                         f"us_per_iter_f32={us['f32']:.0f};"
+                         "cpu_interpret_indicative"))
+    return rows
+
+
+def mp_gap_ladder():
+    """Attainable accuracy vs storage dtype at l=5, +/- residual
+    replacement: the committed trade-off ladder (value column: solve wall
+    time; probative fields: rel_gap / true_res per storage rung)."""
+    import jax
+
+    from repro.core import residual_gap, solve
+    from repro.operators import poisson2d
+    nx = ny = 32
+    A = poisson2d(nx, ny)
+    b = np.asarray(A @ np.ones(A.n))
+    x64 = bool(jax.config.jax_enable_x64)
+    base = dict(method="plcg_scan", l=5, spectrum=(0.0, 8.0), tol=1e-6,
+                maxiter=300)
+    rows = []
+    for storage in ("bf16", "f32", "f64"):
+        for rr in (None, 20):
+            tag = f"mp/gap_{storage}" + ("_rr" if rr else "")
+            kw = dict(base, precision=storage)
+            if rr is not None:
+                # shift-free re-seed: the robust f32-scalar configuration
+                # (see stab_bench.stab_gap_ladder)
+                kw.update(residual_replacement=rr, ritz_refresh=False)
+            with warnings.catch_warnings():
+                # f64 storage without jax_enable_x64 truncates to f32
+                # with a per-trace UserWarning; the x64 flag in the row
+                # already records the truncation
+                warnings.simplefilter("ignore", UserWarning)
+                r = solve(A, b, **kw)
+                us = _timeit(lambda kw=kw: solve(A, b, **kw), reps=1)
+            gap = residual_gap(A, b, r)
+            rows.append((tag, us,
+                         f"iters={r.iters};conv={r.converged};"
+                         f"restarts={r.restarts};repl={r.replacements};"
+                         f"rel_gap={gap['rel_gap']:.1e};"
+                         f"true_res={gap['true_resnorm']:.1e};"
+                         f"x64={x64}"))
+    return rows
+
+
+ALL = [mp_traffic, mp_iter_times, mp_gap_ladder]
+SMOKE = [mp_traffic, mp_gap_ladder]

@@ -12,7 +12,21 @@ Three questions, one row group each:
   breakdown ever fires: the stability payload widens the per-iteration
   reduction by one slot and un-fuses the stencil megakernel, so this is
   the price of always-on recovery (and why ``restart="auto"`` stays off
-  on the default fast path).
+  on the default fast path).  The un-fused split is STRUCTURAL, not an
+  optimization gap: the fused megakernel's contract is "SPMV of window
+  slot 0, consumed in-kernel", but an armed sweep must (a) switch the
+  SPMV input per lane to the current iterate ``x`` on re-seeding
+  iterations (``spmv_in = where(reseed_now, x, Zw[:, 0])`` -- a
+  non-window vector the kernel never sees) and (b) get the raw SPMV
+  result ``t_hat`` back OUT of the iteration body, because the re-seed
+  residual ``rhat = b - t_hat`` and the replacement residual are
+  assembled host-side of the kernel in compute precision.  Keeping the
+  stencil in-kernel would mean widening the megakernel signature with an
+  extra ``(n,)`` input, a per-lane select and a second output stream --
+  at which point the "fused" kernel IS the 2-launch split it was
+  avoiding.  So stab mode always takes Pallas-stencil-SPMV + megakernel
+  (2 launches) even when ``prec is None``; see the dispatch comment in
+  ``plcg_scan.py`` (``fuse_stencil = ... and not stab``).
 * ``stab/frozen_lanes`` -- budget utilisation of a batched solve where
   some lanes hit square-root breakdown: without recovery the broken
   lanes freeze and their remaining update budget is dead weight; with

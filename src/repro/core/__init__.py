@@ -17,14 +17,20 @@ micro-batch concurrent right-hand sides into one batched sweep;
 On a mesh, ``comm=`` (``repro.core.comm.CommPolicy``) selects how the
 per-iteration reduction runs: blocking psum, split psum_scatter +
 delayed all_gather genuinely overlapped with compute, or a staged
-ppermute ring.  Individual algorithm modules (``cg.py``, ``plcg.py``,
-``plcg_scan.py``, ...) stay importable directly for research use.
+ppermute ring.  ``precision=`` (``repro.core.precision.PrecisionPolicy``)
+splits window *storage* dtype from scalar *compute* dtype -- bf16 window
+arrays halve the dominant HBM traffic while recurrences, collective
+payloads and convergence tests stay f32/f64.  Individual algorithm
+modules (``cg.py``, ``plcg.py``, ``plcg_scan.py``, ...) stay importable
+directly for research use.
 """
 from .comm import CommPolicy, as_comm_policy
 from .engine import (as_operator, clear_batch_trace, describe_methods,
                      get_method, methods, methods_supporting, register,
                      solve)
 from .linop import LinearOperator, dense_operator, identity_preconditioner
+from .precision import (PRECISION_MODES, PrecisionPolicy,
+                        as_precision_policy)
 from .precond import (BlockJacobi, Chebyshev, Identity, Jacobi,
                       Preconditioner, as_preconditioner, residual_gap)
 from .results import SolveResult
@@ -38,6 +44,8 @@ __all__ = [
     "Identity",
     "Jacobi",
     "LinearOperator",
+    "PRECISION_MODES",
+    "PrecisionPolicy",
     "Preconditioner",
     "SolveHandle",
     "SolveResult",
@@ -45,6 +53,7 @@ __all__ = [
     "SolverPool",
     "as_comm_policy",
     "as_operator",
+    "as_precision_policy",
     "as_preconditioner",
     "clear_batch_trace",
     "clear_solver_cache",

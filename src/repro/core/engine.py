@@ -50,6 +50,7 @@ from .dlanczos import d_lanczos
 from .linop import LinearOperator, dense_operator
 from .pcg import ghysels_pcg
 from .plcg import plcg
+from .precision import as_precision_policy
 from .precond import as_preconditioner
 from .plcg_scan import plcg_solve
 from .plcg_scan import plcg_scan as _plcg_scan_engine
@@ -104,6 +105,9 @@ class MethodSpec:
     ``supports_restart`` marks methods whose scan engine can re-seed
     broken lanes in-trace (``restart=`` / ``residual_replacement=``, see
     ``plcg_scan``); only those accept the stability knob pair.
+    ``supports_precision`` marks methods whose engine splits window
+    *storage* dtype from scalar *compute* dtype (``precision=``, see
+    ``repro.core.precision``); only those accept non-default policies.
     """
 
     name: str
@@ -114,6 +118,7 @@ class MethodSpec:
     supports_mesh: bool = False
     supports_comm: bool = False
     supports_restart: bool = False
+    supports_precision: bool = False
     uses_sigma: bool = False
     options: frozenset = frozenset()
     mesh_options: frozenset = frozenset()
@@ -122,7 +127,7 @@ class MethodSpec:
 def register(name: str, *, batched: str = "loop", description: str = "",
              supports_M: bool = True, supports_mesh: bool = False,
              supports_comm: bool = False, supports_restart: bool = False,
-             uses_sigma: bool = False,
+             supports_precision: bool = False, uses_sigma: bool = False,
              options: Sequence[str] = (), mesh_options: Sequence[str] = ()):
     """Decorator registering a solver adapter under ``name``.
 
@@ -152,6 +157,7 @@ def register(name: str, *, batched: str = "loop", description: str = "",
                                      supports_mesh=supports_mesh,
                                      supports_comm=supports_comm,
                                      supports_restart=supports_restart,
+                                     supports_precision=supports_precision,
                                      uses_sigma=uses_sigma,
                                      options=frozenset(options),
                                      mesh_options=frozenset(mesh_options))
@@ -185,6 +191,8 @@ def methods() -> tuple[str, ...]:
 #:                                 ``_prepare_restart``         all
 #:   ``residual_replacement=``  ``supports_restart``
 #:                                 ``_prepare_restart``         all
+#:   ``precision=``  ``supports_precision``
+#:                                 ``_prepare_precision``       all
 _KNOB_TABLE = {
     "M": "supports_M",
     "mesh": "supports_mesh",
@@ -192,12 +200,14 @@ _KNOB_TABLE = {
     "comm": "supports_comm",
     "restart": "supports_restart",
     "residual_replacement": "supports_restart",
+    "precision": "supports_precision",
 }
 
 
 def methods_supporting(capability: str) -> tuple[str, ...]:
     """Registered method names carrying a capability flag
-    ("M" | "mesh" | "comm") -- derived from :data:`_KNOB_TABLE`."""
+    ("M" | "mesh" | "comm" | "restart" | "precision") -- derived from
+    :data:`_KNOB_TABLE`."""
     flag = _KNOB_TABLE[capability]
     if flag is None:
         return methods()
@@ -430,6 +440,22 @@ def _prepare_restart(spec: MethodSpec, restart, residual_replacement,
     return restart, rr
 
 
+def _prepare_precision(spec: MethodSpec, precision):
+    """Normalize ``precision=`` once (string/dtype -> ``PrecisionPolicy``)
+    and gate it on the capability flag: the storage/compute dtype split
+    lives in the scan engine's window handling, so methods without it
+    reject non-default policies up front with the uniform style of the
+    other knobs.  The default policy (None) is accepted everywhere -- it
+    resolves to the legacy uniform-precision graphs bit-identically."""
+    policy = as_precision_policy(precision)
+    if not policy.is_default and not spec.supports_precision:
+        raise ValueError(
+            f"method {spec.name!r} does not support precision policies "
+            f"(precision=); methods with precision= support: "
+            f"{', '.join(methods_supporting('precision'))}")
+    return policy
+
+
 def _prepare_mesh_options(spec: MethodSpec, options: dict) -> None:
     """Reject declared method options the mesh execution path does not
     honor (``MethodSpec.mesh_options``) -- the single validation table
@@ -445,18 +471,20 @@ def _prepare_mesh_options(spec: MethodSpec, options: dict) -> None:
 
 
 def _prepare_knobs(spec: MethodSpec, *, M, backend, mesh, comm,
-                   on_mesh: Optional[bool] = None):
+                   precision=None, on_mesh: Optional[bool] = None):
     """One-stop validation of the cross-cutting knob group (M= / mesh= /
-    backend= / comm= -- see :data:`_KNOB_TABLE`): runs each knob's
-    ``_prepare_*`` helper in table order and returns the normalized
-    ``(M, comm)`` pair.  ``on_mesh`` may be forced when the mesh path is
-    selected by an operator rather than an explicit ``mesh=``."""
+    backend= / comm= / precision= -- see :data:`_KNOB_TABLE`): runs each
+    knob's ``_prepare_*`` helper in table order and returns the
+    normalized ``(M, comm, precision)`` triple.  ``on_mesh`` may be
+    forced when the mesh path is selected by an operator rather than an
+    explicit ``mesh=``."""
     on_mesh = (mesh is not None) if on_mesh is None else on_mesh
     M = _prepare_preconditioner(spec, M)
     if on_mesh:
         _prepare_mesh_check(spec, backend)
     comm = _prepare_comm(spec, comm, on_mesh)
-    return M, comm
+    precision = _prepare_precision(spec, precision)
+    return M, comm, precision
 
 
 # --------------------------------------------------------------------------
@@ -480,6 +508,7 @@ def solve(
     comm=None,
     restart="auto",
     residual_replacement: Optional[int] = None,
+    precision=None,
     **options,
 ) -> SolveResult:
     """Solve ``A x = b`` (or a stacked batch ``A X[j] = B[j]``).
@@ -548,6 +577,19 @@ def solve(
         ``None`` (default, off).  Compatible with every ``comm=`` policy
         (the replacement rides the existing per-iteration reduction,
         widened by one slot).
+      precision: storage/compute precision policy for the scan engine --
+        ``None`` (default: windows and scalars both in ``b.dtype``,
+        bit-identical to the pre-policy engine), a storage dtype name
+        (``"bf16"`` stores the ``Vw``/``Zw``/``Zhw`` window arrays and
+        the SPMV stream in bfloat16 while every scalar recurrence, dot
+        payload, collective buffer and convergence test stays in
+        ``promote_types(b.dtype, float32)``), an explicit compound like
+        ``"bf16x64"`` pinning the compute side, or a
+        :class:`repro.core.precision.PrecisionPolicy`.  Methods without
+        the ``supports_precision`` capability reject non-default
+        policies up front.  See ``repro.core.precision`` and
+        ``benchmarks/mp_bench.py`` for the measured traffic/accuracy
+        ladder.
       **options: method-specific extras (``trace_gaps``, ``record_G``,
         ``max_restarts``, ``exploit_symmetry``, ...); keys outside the
         method's declared option set raise a uniform error naming the
@@ -575,7 +617,7 @@ def solve(
                   sigma=sigma, spectrum=spectrum, backend=backend,
                   mesh=mesh, comm=comm, restart=restart,
                   residual_replacement=residual_replacement,
-                  **options).solve(b, x0=x0)
+                  precision=precision, **options).solve(b, x0=x0)
 
 
 # --------------------------------------------------------------------------
@@ -584,7 +626,7 @@ def solve(
 
 def _solve_batched(spec: MethodSpec, A: LinearOperator, B, *, x0, tol,
                    maxiter, M, l, sigma, spectrum, backend,
-                   restart=None, rr_period=None,
+                   restart=None, rr_period=None, precision=None,
                    get_engine=None, **options) -> SolveResult:
     nrhs = B.shape[0]
     if spec.batched == "vmap":
@@ -592,6 +634,7 @@ def _solve_batched(spec: MethodSpec, A: LinearOperator, B, *, x0, tol,
                                    maxiter=maxiter, M=M, l=l, sigma=sigma,
                                    spectrum=spectrum, backend=backend,
                                    restart=restart, rr_period=rr_period,
+                                   precision=precision,
                                    get_engine=get_engine, **options)
     outs = [
         spec.fn(A, B[j], None if x0 is None else x0[j], tol=tol,
@@ -621,7 +664,8 @@ _BATCH_CACHE = solver_cache.WeakCallableCache(maxsize=16)
 def _batched_engine(method_name: str, matvec, l: int, iters: int, sigma,
                     tol: float, prec, exploit_symmetry: bool, unroll: int,
                     backend, stencil_hw, restart=None, rr_period=None,
-                    ritz_refresh: bool = True, k_budget=None):
+                    ritz_refresh: bool = True, k_budget=None,
+                    precision=None):
     """Jitted vmap(scan) engine, cached per configuration so repeated
     batched solves with the same operator/settings compile only once.
 
@@ -642,7 +686,8 @@ def _batched_engine(method_name: str, matvec, l: int, iters: int, sigma,
             exploit_symmetry=exploit_symmetry, unroll=unroll,
             backend=backend, stencil_hw=stencil_hw,
             restart=restart, rr_period=rr_period,
-            ritz_refresh=ritz_refresh, k_budget=k_budget)
+            ritz_refresh=ritz_refresh, k_budget=k_budget,
+            precision=precision)
 
         def _batched(Bb, Xb):
             # trace-time side effect: fires once per XLA compilation, so
@@ -656,13 +701,14 @@ def _batched_engine(method_name: str, matvec, l: int, iters: int, sigma,
     return _BATCH_CACHE.get_or_build(
         (matvec, prec),
         (method_name, l, iters, sigma, tol, exploit_symmetry, unroll,
-         backend, stencil_hw, restart, rr_period, ritz_refresh, k_budget),
+         backend, stencil_hw, restart, rr_period, ritz_refresh, k_budget,
+         as_precision_policy(precision)),
         build)
 
 
 def _solve_batched_vmap(spec: MethodSpec, A: LinearOperator, B, *, x0, tol,
                         maxiter, M, l, sigma, spectrum, backend,
-                        restart=None, rr_period=None,
+                        restart=None, rr_period=None, precision=None,
                         exploit_symmetry: bool = True, unroll: int = 1,
                         ritz_refresh: bool = True,
                         get_engine=None, **options) -> SolveResult:
@@ -689,15 +735,21 @@ def _solve_batched_vmap(spec: MethodSpec, A: LinearOperator, B, *, x0, tol,
             "use a loop-batched method (cg, pcg, dlanczos, plminres)")
     sig = tuple(_resolve_sigma(sigma, spectrum, l))
     Bj = jnp.asarray(B)
-    if tol and tol < 100 * jnp.finfo(Bj.dtype).eps:
+    precision = as_precision_policy(precision)
+    # the attainable floor is set by the *compute* dtype of the scalar
+    # recurrences and convergence tests, not the storage dtype of b: a
+    # bf16-storage policy over an f32 problem still converges on f32
+    # scalars, and must not spuriously warn at tolerances those reach
+    cdt = precision.compute_dtype(Bj.dtype)
+    if tol and tol < 100 * jnp.finfo(cdt).eps:
         import warnings
 
         # attribute the warning to the caller of solve(), not to a frame
         # inside this module: count the contiguous run of engine frames
         # above us instead of hard-coding the internal call-chain depth
         warnings.warn(
-            f"tol={tol:g} is below ~100*eps of the batched engine dtype "
-            f"{Bj.dtype}; lanes will hit maxiter instead of converging -- "
+            f"tol={tol:g} is below ~100*eps of the batched engine compute "
+            f"dtype {cdt}; lanes will hit maxiter instead of converging -- "
             "enable jax_enable_x64 or relax tol",
             stacklevel=_stacklevel_outside_engine())
     X0 = jnp.zeros_like(Bj) if x0 is None else jnp.asarray(x0)
@@ -711,7 +763,7 @@ def _solve_batched_vmap(spec: MethodSpec, A: LinearOperator, B, *, x0, tol,
     fn = build(spec.name, A.matvec, l, iters, sig, tol,
                M, exploit_symmetry, unroll, backend,
                getattr(A, "stencil2d", None), restart, rr_period,
-               ritz_refresh, maxiter if stab else None)
+               ritz_refresh, maxiter if stab else None, precision)
     out = fn(Bj, X0)
     resn = np.asarray(out.resnorms)                     # (nrhs, iters)
     conv = np.asarray(out.converged)
@@ -747,6 +799,7 @@ def _solve_batched_vmap(spec: MethodSpec, A: LinearOperator, B, *, x0, tol,
               "prec": getattr(M, "name", None) if M is not None else None,
               "nrhs": int(Bj.shape[0]),
               "restart": restart, "residual_replacement": rr_period,
+              "precision": None if precision.is_default else precision,
               "per_rhs_converged": conv,
               "per_rhs_iters": k_done + 1,
               "per_rhs_breakdown": brk,
@@ -794,7 +847,8 @@ def _method_plcg(A, b, x0=None, *, tol=1e-8, maxiter=1000, M=None, l=1,
 
 def _run_plcg_scan(A, b, x0, *, tol, maxiter, M, l, sigma, spectrum,
                    backend, sweep=None, restart=None,
-                   residual_replacement=None, **kw) -> SolveResult:
+                   residual_replacement=None, precision=None,
+                   **kw) -> SolveResult:
     """Scan-engine single-RHS run + SolveResult packaging.
 
     Shared by the one-shot adapter below and the prepared session path:
@@ -806,6 +860,7 @@ def _run_plcg_scan(A, b, x0, *, tol, maxiter, M, l, sigma, spectrum,
     stability path of ``plcg_solve``.
     """
     sig = _resolve_sigma(sigma, spectrum, l)
+    pp = as_precision_policy(precision)
     bj = jnp.asarray(b)
     x0j = None if x0 is None else jnp.asarray(x0)
     x, resnorms, info = plcg_solve(A.matvec, bj, x0j, l=l, sigma=sig,
@@ -814,7 +869,7 @@ def _run_plcg_scan(A, b, x0, *, tol, maxiter, M, l, sigma, spectrum,
                                    stencil_hw=getattr(A, "stencil2d", None),
                                    sweep=sweep, restart=restart,
                                    residual_replacement=residual_replacement,
-                                   **kw)
+                                   precision=precision, **kw)
     return SolveResult(
         x=x, resnorms=resnorms, iters=info["iterations"],
         converged=info["converged"], breakdowns=info["breakdowns"],
@@ -824,12 +879,14 @@ def _run_plcg_scan(A, b, x0, *, tol, maxiter, M, l, sigma, spectrum,
               "backend": backend,
               "restart": restart,
               "residual_replacement": residual_replacement,
+              "precision": (None if pp.is_default else pp),
               "prec": getattr(M, "name", None) if M is not None else None},
     )
 
 
 @register("plcg_scan", batched="vmap", supports_mesh=True,
-          supports_comm=True, supports_restart=True, uses_sigma=True,
+          supports_comm=True, supports_restart=True,
+          supports_precision=True, uses_sigma=True,
           options=("exploit_symmetry", "max_restarts", "unroll",
                    "ritz_refresh"),
           mesh_options=("exploit_symmetry", "max_restarts", "ritz_refresh"),

@@ -34,6 +34,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .precision import as_precision_policy
 from .solver_cache import WeakCallableCache, weakly_callable
 from .solver_cache import clear_solver_cache  # noqa: F401  (re-export)
 
@@ -114,6 +115,7 @@ def plcg_scan(
     restart: Optional[int] = None,
     rr_period: Optional[int] = None,
     ritz_refresh: bool = True,
+    precision=None,
 ) -> PLCGOut:
     """Run ``iters`` bodies of p(l)-CG (solution index reaches iters-l-1).
 
@@ -188,6 +190,18 @@ def plcg_scan(
     re-derives the l shifts at each re-seed from the Ritz values of the
     committed gamma/delta tridiagonal (Leja-ordered, Remark 3) instead
     of reusing the initial shift choice.
+
+    ``precision`` (optional; anything ``as_precision_policy`` accepts)
+    splits the state into a *storage* dtype -- the window arrays
+    ``Zw``/``Vw``/``Zhw`` and the SPMV input/output stream, where the
+    HBM traffic lives -- and a *compute* dtype carrying ALL scalar
+    state: the gamma/delta/eta/zeta recurrences, the banded ``Gb``
+    rows, the dot-product payloads and in-flight queue (hence every
+    mesh collective buffer), ``x``/``p``, and the convergence/breakdown
+    tests.  Casts happen at the window-write boundary only; the kernel
+    tiers already load storage, accumulate in
+    ``promote_types(storage, f32)`` and store back storage.  The
+    default policy is bit-identical to the pre-policy engine.
     """
     if l < 1:
         raise ValueError("l must be >= 1")
@@ -218,6 +232,11 @@ def plcg_scan(
     dot = dot_local or _default_dot
     red = reduce_scalars or (lambda p: p)
     W = 2 * l + 1
+    # precision policy: sdt = window/stream storage dtype, cdt = scalar
+    # compute dtype.  Under the default policy both equal b.dtype and
+    # every astype below is a no-op -- the graph is bit-identical to the
+    # single-dtype engine.
+    sdt, cdt = as_precision_policy(precision).resolve(b.dtype)
     # stability autopilot: in-scan restart / residual replacement enabled?
     stab = restart is not None or rr_period is not None
     restart_cap = int(restart) if restart is not None else 0
@@ -235,7 +254,7 @@ def plcg_scan(
     # freeze/convergence select gates the state commit, never the
     # collective), and the head-to-tail distance is l in every mode.
     if comm is None or comm.mode == "blocking":
-        inflight0 = jnp.zeros((l, P), b.dtype)
+        inflight0 = jnp.zeros((l, P), cdt)
 
         def queue_pop(q):
             return q[0], None
@@ -263,9 +282,9 @@ def plcg_scan(
                 return (scat2,)
             return (scat2, jnp.concatenate([q[1][1:], aux[None]], axis=0))
 
-        inflight0 = ((jnp.zeros((d, C), b.dtype),) if d == l else
-                     (jnp.zeros((d, C), b.dtype),
-                      jnp.zeros((l - d, P), b.dtype)))
+        inflight0 = ((jnp.zeros((d, C), cdt),) if d == l else
+                     (jnp.zeros((d, C), cdt),
+                      jnp.zeros((l - d, P), cdt)))
     else:                                   # ring
         # circulate-accumulate all-reduce spread across the queue shifts:
         # the element landing in slot j has completed l-1-j neighbor hops,
@@ -293,11 +312,13 @@ def plcg_scan(
             new_c.append(payload)
             return jnp.stack(new_a), jnp.stack(new_c)
 
-        inflight0 = (jnp.zeros((l, P), b.dtype),
-                     jnp.zeros((l, P), b.dtype))
+        inflight0 = (jnp.zeros((l, P), cdt),
+                     jnp.zeros((l, P), cdt))
 
     x0 = jnp.zeros_like(b) if x0 is None else x0
-    sig = jnp.asarray(list(sigma), dtype=b.dtype)
+    x0 = x0.astype(cdt)
+    bC = b.astype(cdt)       # scalar-side view of b (init/reseed residuals)
+    sig = jnp.asarray(list(sigma), dtype=cdt)
     ncols = iters + 2 * l + 2
     n = b.shape[0]
     # fused-tier dispatch on the preconditioner structure:
@@ -322,40 +343,42 @@ def plcg_scan(
         raise ValueError(f"stencil_hw {stencil_hw} inconsistent with n={n}")
     invd = None
     if fuse_diag:
-        invd = jnp.asarray(prec_diag, b.dtype)
+        # the fused diag apply rides the storage stream (t = invd * t_hat
+        # inside the kernel, f32 accumulation) -- storage dtype
+        invd = jnp.asarray(prec_diag, sdt)
         if invd.ndim not in (0, 1) or (invd.ndim == 1
                                        and invd.shape[0] != n):
             raise ValueError(
                 f"prec_diag must be a scalar or ({n},), got {invd.shape}")
 
     # ---- initialization (Alg. 2 lines 1-3) -------------------------------
-    rhat0 = b - matvec(x0)
+    rhat0 = bC - matvec(x0).astype(cdt)
     r0 = prec(rhat0) if prec is not None else rhat0
-    Mb = prec(b) if prec is not None else b
-    init_pay = jnp.stack([dot(rhat0, r0), dot(b, Mb)])
+    Mb = prec(bC) if prec is not None else bC
+    init_pay = jnp.stack([dot(rhat0, r0), dot(bC, Mb)]).astype(cdt)
     init_pay = red(init_pay)
     beta0 = jnp.sqrt(init_pay[0])
     bnorm = jnp.sqrt(init_pay[1])
     bnorm = jnp.where(bnorm == 0, 1.0, bnorm)
     v0 = r0 / beta0
 
-    Zw = jnp.zeros((n, l + 1), b.dtype).at[:, 0].set(v0)
-    Vw = jnp.zeros((n, W), b.dtype).at[:, 0].set(v0)
-    Zhw = (jnp.zeros((n, 3), b.dtype).at[:, 0].set(rhat0 / beta0)
-           if prec is not None else jnp.zeros((1, 1), b.dtype))
-    Gb0 = jnp.zeros((ncols, W), b.dtype).at[0, 2 * l].set(1.0)
+    Zw = jnp.zeros((n, l + 1), sdt).at[:, 0].set(v0.astype(sdt))
+    Vw = jnp.zeros((n, W), sdt).at[:, 0].set(v0.astype(sdt))
+    Zhw = (jnp.zeros((n, 3), sdt).at[:, 0].set((rhat0 / beta0).astype(sdt))
+           if prec is not None else jnp.zeros((1, 1), sdt))
+    Gb0 = jnp.zeros((ncols, W), cdt).at[0, 2 * l].set(1.0)
     use_ritz = stab and ritz_refresh
     state = PLCGState(
         Zw=Zw, Vw=Vw, Zhw=Zhw, Gb=Gb0,
-        gam=jnp.zeros(ncols, b.dtype), dlt=jnp.zeros(ncols, b.dtype),
+        gam=jnp.zeros(ncols, cdt), dlt=jnp.zeros(ncols, cdt),
         inflight=inflight0,
-        x=x0, p=jnp.zeros_like(b),
-        eta=jnp.asarray(0.0, b.dtype), zeta=jnp.asarray(0.0, b.dtype),
+        x=x0, p=jnp.zeros_like(x0),
+        eta=jnp.asarray(0.0, cdt), zeta=jnp.asarray(0.0, cdt),
         k_done=jnp.asarray(-1), done=jnp.asarray(False),
         converged=jnp.asarray(False), breakdown=jnp.asarray(False),
         ph=jnp.asarray(0, jnp.int32), wait=jnp.asarray(0, jnp.int32),
         beta=beta0,
-        sig_c=(sig if use_ritz else jnp.zeros((), b.dtype)),
+        sig_c=(sig if use_ritz else jnp.zeros((), cdt)),
         restarts=jnp.asarray(0, jnp.int32),
         repl=jnp.asarray(0, jnp.int32),
         since_rr=jnp.asarray(0, jnp.int32),
@@ -398,7 +421,7 @@ def plcg_scan(
         # alone is False for NaN, which used to leave the lane neither
         # converging nor breaking down until the budget ran out
         brk = (arg <= 0.0) | jnp.logical_not(jnp.isfinite(arg))
-        gcc = jnp.sqrt(jnp.maximum(arg, jnp.finfo(b.dtype).tiny))
+        gcc = jnp.sqrt(jnp.maximum(arg, jnp.finfo(cdt).tiny))
         col_list[2 * l] = gcc
         col = jnp.stack(col_list)
         Gb2 = jax.lax.dynamic_update_slice_in_dim(st.Gb, col[None], c, 0)
@@ -510,7 +533,7 @@ def plcg_scan(
                         breakdown=breakdown_o))
         if stab:
             reseed_or_seed = reseed_now | seed_now
-            zcol = jnp.zeros(ncols, b.dtype)
+            zcol = jnp.zeros(ncols, cdt)
             out = out._replace(
                 # re-seeding lanes bypass the commit mask: the stashed /
                 # seeded windows (already selected in the body) land, the
@@ -563,7 +586,7 @@ def plcg_scan(
                 dw = jnp.where(okr, dw, 0.0)
                 sig_new = leja_order(ritz_values_from_tridiag(gw, dw), l)
                 out = out._replace(
-                    sig_c=jnp.where(okr, sig_new.astype(b.dtype), st.sig_c))
+                    sig_c=jnp.where(okr, sig_new.astype(cdt), st.sig_c))
         res = jnp.where(committed_update, jnp.abs(zeta2), 0.0)
         return out, (res, committed_update)
 
@@ -593,10 +616,10 @@ def plcg_scan(
         normalizes the stash into the init-state windows of a fresh solve
         started at x.
         """
-        rhat_new = b - t_hat
-        r_new = (Mb - t) if prec is not None else rhat_new
-        slotW = jnp.where(reseed_now, dot(rhat_new, r_new),
-                          jnp.asarray(0.0, b.dtype))
+        rhat_new = bC - t_hat.astype(cdt)
+        r_new = (Mb - t.astype(cdt)) if prec is not None else rhat_new
+        slotW = jnp.where(reseed_now, dot(rhat_new, r_new).astype(cdt),
+                          jnp.asarray(0.0, cdt))
         beta2 = col_in_full[W]
         seed_ok = (beta2 > 0) & jnp.isfinite(beta2)
         beta_new = jnp.sqrt(jnp.where(seed_ok, beta2, 1.0))
@@ -606,16 +629,18 @@ def plcg_scan(
         v0n = st.Zw[:, 0] * inv_b
         s0 = sig_arr[0]
         zn_seed = t * inv_b - s0 * v0n
-        Zw_sd = jnp.zeros_like(st.Zw).at[:, 0].set(zn_seed).at[:, 1].set(v0n)
-        Vw_sd = jnp.zeros_like(st.Vw).at[:, 0].set(v0n)
-        Zw_st = jnp.zeros_like(st.Zw).at[:, 0].set(r_new)
+        Zw_sd = (jnp.zeros_like(st.Zw).at[:, 0].set(zn_seed.astype(sdt))
+                 .at[:, 1].set(v0n.astype(sdt)))
+        Vw_sd = jnp.zeros_like(st.Vw).at[:, 0].set(v0n.astype(sdt))
+        Zw_st = jnp.zeros_like(st.Zw).at[:, 0].set(r_new.astype(sdt))
         Vw_st = jnp.zeros_like(st.Vw)
         if prec is not None:
             zh0n = st.Zhw[:, 0] * inv_b
             zhn_seed = t_hat * inv_b - s0 * zh0n
-            Zhw_sd = (jnp.zeros_like(st.Zhw).at[:, 0].set(zhn_seed)
-                      .at[:, 1].set(zh0n))
-            Zhw_st = jnp.zeros_like(st.Zhw).at[:, 0].set(rhat_new)
+            Zhw_sd = (jnp.zeros_like(st.Zhw).at[:, 0]
+                      .set(zhn_seed.astype(sdt))
+                      .at[:, 1].set(zh0n.astype(sdt)))
+            Zhw_st = jnp.zeros_like(st.Zhw).at[:, 0].set(rhat_new.astype(sdt))
         else:
             Zhw_sd = Zhw_st = None
 
@@ -629,8 +654,12 @@ def plcg_scan(
     def body(st: PLCGState, i):
         ph, reseed_now, seed_now, spmv_in, sig_arr = stab_ctx(st, i)
         # ---------------- (K1) SPMV --------------------------------------
-        t_hat = matvec(spmv_in)
-        t = prec(t_hat) if prec is not None else t_hat
+        # SPMV arithmetic runs in the compute dtype (on a mesh this keeps
+        # halo-exchange payloads cdt); the resulting t / t_hat STREAMS
+        # are storage-dtype, rounded once -- exactly what the fused
+        # megakernel tier stores.  Identity casts under the default policy.
+        t_hat = matvec(spmv_in.astype(cdt)).astype(sdt)
+        t = prec(t_hat).astype(sdt) if prec is not None else t_hat
         # pop AFTER the SPMV + shard-local preconditioner apply in trace
         # order: with a split comm policy the head-of-queue gather is
         # issued here with no data dependence on t, so the prec apply is
@@ -660,7 +689,8 @@ def plcg_scan(
             else:
                 vsum = st.Vw[:, :2 * l] @ col[:2 * l][::-1]
                 vnew = (st.Zw[:, l - 1] - vsum) / gcc
-            Vw2 = jnp.concatenate([vnew[:, None], st.Vw[:, :-1]], axis=1)
+            Vw2 = jnp.concatenate([vnew.astype(sdt)[:, None],
+                                   st.Vw[:, :-1]], axis=1)
             # -------- (K4) z recurrence (line 18) -------------------------
             znew = (t - gam_c1 * st.Zw[:, 0] - dsub * st.Zw[:, 1]) / dlt_c1
             zhnew = ((t_hat - gam_c1 * st.Zhw[:, 0] - dsub * st.Zhw[:, 1])
@@ -682,9 +712,13 @@ def plcg_scan(
          k2) = jax.tree.map(
             functools.partial(jnp.where, ph >= l), steady(None), warmup(None))
 
-        Zw2 = jnp.concatenate([znew[:, None], st.Zw[:, :-1]], axis=1)
-        Zhw2 = (jnp.concatenate([zhnew[:, None], st.Zhw[:, :-1]], axis=1)
+        Zw2 = jnp.concatenate([znew.astype(sdt)[:, None],
+                               st.Zw[:, :-1]], axis=1)
+        Zhw2 = (jnp.concatenate([zhnew.astype(sdt)[:, None],
+                                 st.Zhw[:, :-1]], axis=1)
                 if prec is not None else st.Zhw)
+        # payload dots consume the pre-rounding compute-dtype lhs; only
+        # the stored window is quantized to sdt
         lhs = zhnew if prec is not None else znew
         seed_kw = {}
         ph_pay = ph
@@ -699,7 +733,7 @@ def plcg_scan(
             Zw2 = sel3(seeded[1], stash[1], Zw2)
             if prec is not None:
                 Zhw2 = sel3(seeded[2], stash[2], Zhw2)
-            lhs = Zhw2[:, 0] if prec is not None else Zw2[:, 0]
+            lhs = (Zhw2[:, 0] if prec is not None else Zw2[:, 0]).astype(cdt)
             ph_pay = jnp.where(seed_now, 0, ph)
             seed_kw = dict(reseed_now=reseed_now, seed_now=seed_now,
                            beta_new=beta_new, seed_ok=seed_ok, beta2=beta2)
@@ -711,8 +745,8 @@ def plcg_scan(
                 return lhs @ Vw2[:, :l + 1]
 
             def vdots_one(_):
-                out = jnp.zeros(l + 1, b.dtype)
-                return out.at[0].set(dot(Vw2[:, 0], lhs))
+                out = jnp.zeros(l + 1, cdt)
+                return out.at[0].set(dot(Vw2[:, 0], lhs).astype(cdt))
 
             vd = jax.lax.cond(ph_pay < 2 * l - 1, vdots_full, vdots_one, None)
         elif use_kernels:
@@ -760,15 +794,16 @@ def plcg_scan(
             t_hat = kops.stencil2d_apply(
                 z2d, zr(z2d[0]), zr(z2d[0]), zr(z2d[:, 0]), zr(z2d[:, 0]),
                 use_pallas=True).reshape(-1)
-            t = prec(t_hat) if prec is not None else t_hat
+            t = prec(t_hat).astype(sdt) if prec is not None else t_hat
         else:
-            t_hat = matvec(spmv_in)
+            # compute-dtype SPMV, storage-dtype streams (see body())
+            t_hat = matvec(spmv_in.astype(cdt)).astype(sdt)
             if prec is None:
                 t = t_hat
             elif fuse_diag:
                 t = None            # the kernel applies invd to t_hat
             else:
-                t = prec(t_hat)
+                t = prec(t_hat).astype(sdt)
         Vw2, Zw2, Zhw2k, dots = kops.fused_body_apply(
             st.Vw, st.Zw, st.Zhw if prec is not None else None,
             t, t_hat if prec is not None else None,
@@ -778,7 +813,7 @@ def plcg_scan(
             stencil_hw=stencil_hw if fuse_stencil else None,
             use_pallas=True)
         Zhw2 = Zhw2k if prec is not None else st.Zhw
-        dots = dots.astype(b.dtype)
+        dots = dots.astype(cdt)
         vd_full, zd = dots[:l + 1], dots[l + 1:]
         x2, p2, eta_k, zeta_k, k2 = solution_update(st, ph, gam2, Vw2[:, 1])
         # warmup select for the scalar state only -- the vector windows
@@ -800,7 +835,7 @@ def plcg_scan(
                 Zhw2 = sel3(seeded[2], stash[2], Zhw2)
             # recompute the payload from the selected windows: the
             # in-kernel dots saw the pre-selection windows
-            lhs = Zhw2[:, 0] if prec is not None else Zw2[:, 0]
+            lhs = (Zhw2[:, 0] if prec is not None else Zw2[:, 0]).astype(cdt)
             vd_full = lhs @ Vw2[:, :l + 1]
             zd = lhs @ Zw2[:, :l]
             ph_pay = jnp.where(seed_now, 0, ph)
@@ -836,14 +871,15 @@ def plcg_jit(matvec, b, x0=None, *, l, iters, sigma, tol=0.0, prec=None,
              stencil_hw: Optional[tuple] = None,
              restart: Optional[int] = None,
              rr_period: Optional[int] = None,
-             ritz_refresh: bool = True) -> PLCGOut:
+             ritz_refresh: bool = True, precision=None) -> PLCGOut:
     """Convenience jitted single-device entry point."""
     fn = functools.partial(
         plcg_scan, matvec, l=l, iters=iters, sigma=tuple(sigma), tol=tol,
         prec=prec, prec_diag=prec_diag,
         exploit_symmetry=exploit_symmetry, unroll=unroll,
         backend=backend, stencil_hw=stencil_hw,
-        restart=restart, rr_period=rr_period, ritz_refresh=ritz_refresh)
+        restart=restart, rr_period=rr_period, ritz_refresh=ritz_refresh,
+        precision=precision)
     return jax.jit(lambda bb, xx: fn(bb, xx))(b, x0 if x0 is not None
                                               else jnp.zeros_like(b))
 
@@ -871,7 +907,7 @@ _SWEEP_CACHE = WeakCallableCache(maxsize=16)
 
 def _jitted_sweep(matvec, l, iters, sigma, tol, prec, exploit_symmetry,
                   unroll, backend, stencil_hw, restart=None, rr_period=None,
-                  ritz_refresh=True):
+                  ritz_refresh=True, precision=None):
     """Cached jitted single sweep so repeated solves with the same
     operator/settings compile once.  Keyed on ``matvec``/``prec`` object
     identity through weak references: reuse the same callable across calls
@@ -892,13 +928,15 @@ def _jitted_sweep(matvec, l, iters, sigma, tol, prec, exploit_symmetry,
             prec_diag=getattr(prec, "inv_diag", None),
             exploit_symmetry=exploit_symmetry, unroll=unroll,
             backend=backend, stencil_hw=stencil_hw,
-            restart=restart, rr_period=rr_period, ritz_refresh=ritz_refresh)
+            restart=restart, rr_period=rr_period, ritz_refresh=ritz_refresh,
+            precision=precision)
         return jax.jit(lambda bb, xx, kb: fn(bb, xx, k_budget=kb))
 
     return _SWEEP_CACHE.get_or_build(
         (matvec, prec),
         (l, iters, sigma, tol, exploit_symmetry, unroll, backend,
-         stencil_hw, restart, rr_period, ritz_refresh),
+         stencil_hw, restart, rr_period, ritz_refresh,
+         as_precision_policy(precision)),
         build)
 
 
@@ -984,7 +1022,7 @@ def plcg_solve(matvec, b, x0=None, *, l, sigma, tol=1e-8, maxiter=1000,
                stencil_hw: Optional[tuple] = None, sweep=None,
                restart: Optional[int] = None,
                residual_replacement: Optional[int] = None,
-               ritz_refresh: bool = True):
+               ritz_refresh: bool = True, precision=None):
     """Driver around the jitted engine: explicit restart on square-root
     breakdown (paper Remark 8), happy-breakdown detection, and a GLOBAL
     iteration budget across restart sweeps (via the sweep's ``k_budget``
@@ -1017,7 +1055,7 @@ def plcg_solve(matvec, b, x0=None, *, l, sigma, tol=1e-8, maxiter=1000,
         matvec, l, iters, tuple(sigma), tol, prec,
         exploit_symmetry, unroll, backend, stencil_hw,
         restart=restart, rr_period=residual_replacement,
-        ritz_refresh=ritz_refresh)
+        ritz_refresh=ritz_refresh, precision=precision)
 
     def run_sweep(bb, xx, remaining):
         out = fn(bb, xx, remaining)

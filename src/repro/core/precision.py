@@ -1,0 +1,156 @@
+"""Precision policies: window *storage* dtype vs scalar *compute* dtype.
+
+The p(l)-CG memory footprint is dominated by the 3l+3 basis/window
+vectors (paper Table 1; the engine's lane-major ``(n, l+1)`` ``Zw``,
+``(n, 2l+1)`` ``Vw`` and ``(n, 3)`` ``Zhw`` arrays), and every fused
+iteration streams all of them through HBM -- so *storage* precision, not
+compute precision, bounds kernel throughput at depth.  A
+:class:`PrecisionPolicy` splits the two:
+
+  * ``storage`` -- the dtype of the window arrays and the SPMV
+    input/output stream.  ``bfloat16`` halves the dominant HBM traffic;
+    the Pallas kernels and their jnp oracles load it, accumulate in
+    ``promote_types(storage, float32)`` and store back in ``storage``
+    (the accumulator pattern they have had since the fused megakernel
+    landed).
+  * ``compute`` -- the dtype of ALL scalar state: the ``gam``/``dlt``/
+    ``eta``/``zeta`` recurrences, the banded basis-change rows ``Gb``,
+    dot-product payloads, the in-flight reduction queue (and therefore
+    every psum / reduce_scatter / ring collective buffer on a mesh),
+    the solution/search updates ``x``/``p``, and the convergence and
+    breakdown tests.  Never below ``float32``; never below the dtype of
+    ``b`` (an ``float64`` problem keeps ``float64`` scalars under the
+    ``"bf16"`` ladder entry).
+
+The attainable-accuracy cost of low-precision storage grows with
+pipeline depth l (arXiv:1804.02962 framework, surfaced as
+``residual_gap()``); pair deep-l bf16 runs with ``residual_replacement=``
+to claw the gap back (``benchmarks/mp_bench.py`` commits the ladder).
+
+The policy is normalized ONCE by the engine front-end
+(``repro.core.engine._prepare_precision``) via
+:func:`as_precision_policy` -- the same one-normalization-point contract
+as ``as_preconditioner`` for ``M=`` and ``as_comm_policy`` for
+``comm=``.  Execution layers receive a frozen, hashable
+:class:`PrecisionPolicy` (part of every sweep-cache key) and resolve it
+against the right-hand side's dtype with :meth:`PrecisionPolicy.resolve`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+#: dtype spellings accepted for either side of a policy
+_DTYPE_NAMES = {
+    "bf16": "bfloat16", "bfloat16": "bfloat16",
+    "f16": "float16", "fp16": "float16", "float16": "float16",
+    "f32": "float32", "fp32": "float32", "float32": "float32",
+    "f64": "float64", "fp64": "float64", "float64": "float64",
+}
+
+#: the named storage ladder accepted by ``precision=`` (compute side
+#: resolves per problem: promote_types(b.dtype, float32))
+PRECISION_MODES = ("f32", "bf16", "f16", "f64")
+
+
+def _canon(name, *, side):
+    if name is None:
+        return None
+    key = str(name).lower()
+    # accept numpy/jax dtype objects and strings alike
+    key = {"<f4": "float32", "<f8": "float64"}.get(key, key)
+    if key not in _DTYPE_NAMES:
+        hint = ""
+        if key == "tf32":
+            hint = (" (tf32 is a matmul *compute* truncation on NVIDIA "
+                    "hardware, not a storage dtype on this stack; use "
+                    "'bf16' for low-precision storage or 'f32')")
+        raise ValueError(
+            f"unknown precision {side} dtype {name!r}; expected one of "
+            f"{sorted(set(_DTYPE_NAMES))}{hint}")
+    return _DTYPE_NAMES[key]
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionPolicy:
+    """Normalized precision policy (hashable; part of sweep-cache keys).
+
+    ``storage`` / ``compute`` are canonical dtype names or ``None``:
+    ``storage=None`` keeps the windows in ``b.dtype`` (the legacy
+    uniform-precision behaviour); ``compute=None`` resolves to
+    ``promote_types(b.dtype, float32)``.  The default policy (both
+    ``None``) is exactly the pre-policy engine -- bit-identical graphs.
+    """
+
+    storage: Optional[str] = None
+    compute: Optional[str] = None
+
+    def __post_init__(self):
+        object.__setattr__(self, "storage", _canon(self.storage,
+                                                   side="storage"))
+        object.__setattr__(self, "compute", _canon(self.compute,
+                                                   side="compute"))
+        if self.compute in ("bfloat16", "float16"):
+            raise ValueError(
+                f"compute dtype must be float32 or float64 -- the scalar "
+                f"recurrences, collective payloads and convergence tests "
+                f"are what keep low-precision storage usable -- got "
+                f"{self.compute!r}")
+
+    @property
+    def is_default(self) -> bool:
+        return self.storage is None and self.compute is None
+
+    def resolve(self, b_dtype):
+        """``(storage_dtype, compute_dtype)`` for a problem in ``b_dtype``.
+
+        The default policy resolves to ``(b.dtype, b.dtype)`` exactly.
+        Otherwise storage is the declared dtype (or ``b.dtype``) and
+        compute is ``promote_types(b.dtype, declared-or-float32)`` --
+        scalars never drop below the problem's own precision.
+        """
+        import jax.numpy as jnp
+        b_dtype = jnp.dtype(b_dtype)
+        if self.is_default:
+            return b_dtype, b_dtype
+        sdt = jnp.dtype(self.storage) if self.storage else b_dtype
+        cdt = jnp.promote_types(b_dtype, self.compute or "float32")
+        return sdt, jnp.dtype(cdt)
+
+    def compute_dtype(self, b_dtype):
+        """The scalar/convergence dtype for a problem in ``b_dtype`` --
+        what tolerance floors must be validated against (an eps check on
+        the *storage* dtype of ``b`` would spuriously reject tolerances
+        the f32/f64 recurrences can reach)."""
+        return self.resolve(b_dtype)[1]
+
+
+def as_precision_policy(precision) -> PrecisionPolicy:
+    """Promote ``precision`` (None | storage name | ``"<storage>x<bits>"``
+    compound | dtype | PrecisionPolicy) to a :class:`PrecisionPolicy` --
+    the one normalization point, mirroring ``as_comm_policy``.
+
+    String forms: ``"bf16"`` (bf16 windows, f32-or-better scalars),
+    ``"f32"``/``"f64"``/``"f16"`` likewise, and the explicit compounds
+    ``"bf16x32"`` / ``"bf16x64"`` / ``"f32x64"`` pinning the compute
+    side (``x<bits>`` = scalar recurrences in ``float<bits>``).
+    """
+    if precision is None:
+        return PrecisionPolicy()
+    if isinstance(precision, PrecisionPolicy):
+        return precision
+    if isinstance(precision, str):
+        name = precision.lower()
+        if "x" in name and name not in _DTYPE_NAMES:
+            stor, _, bits = name.rpartition("x")
+            return PrecisionPolicy(storage=stor, compute=f"f{bits}")
+        return PrecisionPolicy(storage=name)
+    try:  # numpy/jax dtype-likes name a storage dtype
+        import numpy as np
+        return PrecisionPolicy(storage=np.dtype(precision).name)
+    except TypeError:
+        pass
+    raise TypeError(
+        f"cannot interpret {type(precision).__name__} as a precision "
+        f"policy; pass one of {'|'.join(PRECISION_MODES)}, a compound "
+        "like 'bf16x32', or a repro.core.precision.PrecisionPolicy")

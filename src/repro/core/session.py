@@ -161,17 +161,18 @@ class Solver:
                  spectrum=None, backend: Optional[str] = None, mesh=None,
                  comm=None, restart="auto",
                  residual_replacement: Optional[int] = None,
+                 precision=None,
                  n: Optional[int] = None, **options):
         spec = engine._prepare_method(method)
         engine._prepare_options(spec, options)
         on_mesh = mesh is not None or engine._is_mesh_operator(A)
         # the cross-cutting knob group (M=/mesh=/backend=/comm=/restart=/
-        # residual_replacement=) is validated and normalized ONCE here,
-        # through the engine's single knob table -- no layer below
-        # re-validates per call
-        M, comm = engine._prepare_knobs(spec, M=M, backend=backend,
-                                        mesh=mesh, comm=comm,
-                                        on_mesh=on_mesh)
+        # residual_replacement=/precision=) is validated and normalized
+        # ONCE here, through the engine's single knob table -- no layer
+        # below re-validates per call
+        M, comm, precision = engine._prepare_knobs(
+            spec, M=M, backend=backend, mesh=mesh, comm=comm,
+            precision=precision, on_mesh=on_mesh)
         restart, residual_replacement = engine._prepare_restart(
             spec, restart, residual_replacement, options)
         spectrum = engine._prepare_spectrum(spec, M, sigma, spectrum)
@@ -187,6 +188,7 @@ class Solver:
         self.comm = comm
         self.restart = restart
         self.residual_replacement = residual_replacement
+        self.precision = precision
         self.options = dict(options)
         self._pending: list = []
         self._prepared: dict = {}       # strong refs: config -> jitted fn
@@ -201,7 +203,8 @@ class Solver:
             self._mesh_session = prepare_on_mesh(
                 spec, A, mesh, M=M, l=l, sigma=sigma, spectrum=spectrum,
                 comm=comm, restart=restart,
-                residual_replacement=residual_replacement, **options)
+                residual_replacement=residual_replacement,
+                precision=precision, **options)
             self._op = self._mesh_session.op
             return
 
@@ -248,7 +251,8 @@ class Solver:
                 getattr(self._op, "stencil2d", None),
                 restart=self.restart,
                 rr_period=self.residual_replacement,
-                ritz_refresh=self.options.get("ritz_refresh", True))
+                ritz_refresh=self.options.get("ritz_refresh", True),
+                precision=self.precision)
             self.stats["prepared_builds"] += 1
         return self._prepared[key]
 
@@ -312,6 +316,7 @@ class Solver:
                 l=self.l, sigma=self.sigma, spectrum=self.spectrum,
                 backend=self.backend, restart=self.restart,
                 rr_period=self.residual_replacement,
+                precision=self.precision,
                 get_engine=(self._batched_engine_getter()
                             if spec.batched == "vmap" else None),
                 **self.options)
@@ -322,6 +327,7 @@ class Solver:
                 backend=self.backend, sweep=self._single_sweep(tol, maxiter),
                 restart=self.restart,
                 residual_replacement=self.residual_replacement,
+                precision=self.precision,
                 **self.options)
         return spec.fn(op, b, x0, tol=tol, maxiter=maxiter, M=self.M,
                        l=self.l, sigma=self.sigma, spectrum=self.spectrum,
@@ -443,6 +449,7 @@ class Solver:
                               sigma=sess.sig, prec=sess.prec,
                               comm=sess.comm, restart=sess.restart,
                               residual_replacement=sess.residual_replacement,
+                              precision=sess.precision,
                               get_sweep=sess._get_sweep("plcg", self.tol),
                               **opts)
         op = self._ensure_op(B[0])
@@ -453,6 +460,7 @@ class Solver:
             M=self.M, l=self.l, sigma=self.sigma, spectrum=self.spectrum,
             backend=self.backend, restart=self.restart,
             rr_period=self.residual_replacement,
+            precision=self.precision,
             get_engine=(self._batched_engine_getter()
                         if self.spec.batched == "vmap" else None),
             **opts)

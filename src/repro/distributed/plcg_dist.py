@@ -59,6 +59,7 @@ from jax.sharding import PartitionSpec as P
 from repro.compat import shard_map_compat
 from repro.core import engine as _engine
 from repro.core.comm import as_comm_policy, build_comm_runtime
+from repro.core.precision import as_precision_policy
 from repro.core.plcg_scan import (plcg_scan, run_restart_driver,
                                   stab_iter_slack)
 from repro.core.results import SolveResult
@@ -141,7 +142,7 @@ def plcg_mesh_sweep(op: DistributedOperator, *, l: int, iters: int,
                     sigma: Sequence[float], tol: float = 0.0,
                     exploit_symmetry: bool = True, batched: bool = False,
                     prec=None, comm=None, restart=None, rr_period=None,
-                    ritz_refresh: bool = True):
+                    ritz_refresh: bool = True, precision=None):
     """Build (cached) the jitted p(l)-CG mesh sweep.
 
     Returns a jitted callable ``(b, x0, k_budget) -> (x, resnorms,
@@ -164,6 +165,16 @@ def plcg_mesh_sweep(op: DistributedOperator, *, l: int, iters: int,
     a single ``psum``, the structural acceptance gate verified by
     ``repro.kernels.introspect.count_primitive_in_scan_bodies``.
 
+    ``precision`` (a ``repro.core.precision.PrecisionPolicy`` or spec
+    accepted by ``as_precision_policy``) splits window *storage* dtype
+    from scalar *compute* dtype inside the scan engine.  Every dot
+    payload, in-flight queue slot and therefore every collective buffer
+    (psum / psum_scatter / all_gather / ring ppermute) stays in the
+    compute dtype -- a bf16-storage policy changes the bytes each shard
+    streams locally, never the collective signature or its f32/f64
+    payload dtype (gated structurally by
+    ``collective_payload_dtypes_in_scan_bodies``).
+
     ``comm`` (a ``repro.core.comm.CommPolicy`` or mode string) selects
     how that reduction is realized: ``"overlap"`` splits it into a
     ``psum_scatter`` at issue and an ``all_gather`` ``depth`` iterations
@@ -176,6 +187,7 @@ def plcg_mesh_sweep(op: DistributedOperator, *, l: int, iters: int,
     """
     sig = tuple(sigma)
     policy = as_comm_policy(comm)
+    pp = as_precision_policy(precision)
 
     def build():
         # the cached jitted program must not pin the operator (the cache
@@ -195,7 +207,7 @@ def plcg_mesh_sweep(op: DistributedOperator, *, l: int, iters: int,
                 exploit_symmetry=exploit_symmetry, k_budget=k_budget,
                 comm=runtime,
                 restart=restart, rr_period=rr_period,
-                ritz_refresh=ritz_refresh,
+                ritz_refresh=ritz_refresh, precision=pp,
             )
             return (out.x.reshape(b_blk.shape), out.resnorms, out.converged,
                     out.breakdown, out.k_done, out.committed, out.restarts,
@@ -207,7 +219,7 @@ def plcg_mesh_sweep(op: DistributedOperator, *, l: int, iters: int,
     return _MESH_SWEEP_CACHE.get_or_build(
         (op, prec),
         ("plcg", l, iters, sig, tol, exploit_symmetry, batched, policy,
-         restart, rr_period, ritz_refresh),
+         restart, rr_period, ritz_refresh, pp),
         build)
 
 
@@ -328,10 +340,11 @@ def _mesh_plcg(op, b, x0, *, tol, maxiter, l, sigma, prec=None,
                exploit_symmetry: bool = True,
                max_restarts=None, comm=None, restart=None,
                residual_replacement=None, ritz_refresh: bool = True,
-               get_sweep=None) -> SolveResult:
+               precision=None, get_sweep=None) -> SolveResult:
     b, x0, batched, orig_shape = _canonicalize_b(op, b, x0)
     sig = tuple(sigma)
     policy = as_comm_policy(comm)
+    pp = as_precision_policy(precision)
     # the in-scan stability path (restart= / residual_replacement=,
     # normalized by engine._prepare_restart) runs ONE sweep whose lanes
     # re-seed themselves in-trace; the sweep needs stab_iter_slack extra
@@ -346,9 +359,10 @@ def _mesh_plcg(op, b, x0, *, tol, maxiter, l, sigma, prec=None,
                                    batched=batched, prec=prec, comm=policy,
                                    restart=restart,
                                    rr_period=residual_replacement,
-                                   ritz_refresh=ritz_refresh)
+                                   ritz_refresh=ritz_refresh, precision=pp)
     base_info = {"l": l, "sigma": list(sig), "backend": None,
                  "mesh": dict(op.mesh.shape), "comm": policy.mode,
+                 "precision": None if pp.is_default else pp,
                  # a split/ring policy leaves ZERO blocking psums in the
                  # scan body (the init reduction outside it stays a psum)
                  "psums_per_iter": 1 if policy.is_blocking else 0,
@@ -506,7 +520,7 @@ class PreparedMeshSolver:
 
     def __init__(self, spec, A, mesh, *, M, l, sigma, spectrum,
                  comm=None, restart=None, residual_replacement=None,
-                 **options):
+                 precision=None, **options):
         if spec.name not in _MESH_METHODS:
             if getattr(spec, "supports_mesh", False):
                 raise RuntimeError(
@@ -543,6 +557,10 @@ class PreparedMeshSolver:
         # session front end); baked into every prepared plcg sweep
         self.restart = restart
         self.residual_replacement = residual_replacement
+        # normalized precision policy (engine._prepare_precision gated it
+        # on the capability flag); collective payloads stay in its
+        # compute dtype by construction of the scan engine
+        self.precision = as_precision_policy(precision)
         self.options = dict(options)
         self._sweeps: dict = {}         # strong refs to jitted sweeps
 
@@ -567,6 +585,7 @@ class PreparedMeshSolver:
                         restart=self.restart,
                         rr_period=self.residual_replacement,
                         ritz_refresh=self.options.get("ritz_refresh", True),
+                        precision=self.precision,
                         exploit_symmetry=self.options.get(
                             "exploit_symmetry", True))
                 else:
@@ -605,12 +624,13 @@ class PreparedMeshSolver:
             sigma=self.sig, prec=self.prec, comm=self.comm,
             restart=self.restart,
             residual_replacement=self.residual_replacement,
+            precision=self.precision,
             get_sweep=self._get_sweep("plcg", tol), **self.options)
 
 
 def prepare_on_mesh(spec, A, mesh, *, M, l, sigma, spectrum, backend=None,
                     comm=None, restart=None, residual_replacement=None,
-                    **options) -> PreparedMeshSolver:
+                    precision=None, **options) -> PreparedMeshSolver:
     """Build the prepared mesh session behind ``session.Solver(mesh=...)``
     (validation / promotion / resolution once; see
     :class:`PreparedMeshSolver`).  ``comm`` selects the reduction policy
@@ -621,12 +641,13 @@ def prepare_on_mesh(spec, A, mesh, *, M, l, sigma, spectrum, backend=None,
     return PreparedMeshSolver(spec, A, mesh, M=M, l=l, sigma=sigma,
                               spectrum=spectrum, comm=comm, restart=restart,
                               residual_replacement=residual_replacement,
-                              **options)
+                              precision=precision, **options)
 
 
 def solve_on_mesh(spec, A, b, *, mesh, x0, tol, maxiter, M, l, sigma,
                   spectrum, backend, comm=None, restart=None,
-                  residual_replacement=None, **options) -> SolveResult:
+                  residual_replacement=None, precision=None,
+                  **options) -> SolveResult:
     """One-shot mesh-aware dispatch behind ``repro.core.solve(mesh=...)``:
     a thin wrapper preparing a :class:`PreparedMeshSolver` and running it
     on ``b`` (the session API is the primary entry point; this keeps the
@@ -635,4 +656,5 @@ def solve_on_mesh(spec, A, b, *, mesh, x0, tol, maxiter, M, l, sigma,
                            spectrum=spectrum, backend=backend, comm=comm,
                            restart=restart,
                            residual_replacement=residual_replacement,
+                           precision=precision,
                            **options).solve(b, x0, tol=tol, maxiter=maxiter)

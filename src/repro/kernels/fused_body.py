@@ -102,14 +102,20 @@ def _make_kernel(l: int, has_zh: bool, has_stencil: bool, diag: str,
             left = jnp.concatenate([zc_col, xc[:, :-1]], axis=1)
             right = jnp.concatenate([xc[:, 1:], zc_col], axis=1)
             traw = (4.0 * xc - up - down - left - right).reshape(-1, 1)
+            # the SPMV stream is storage-dtype under the precision
+            # policy: round the in-kernel result exactly like the
+            # streamed-t tiers store it (identity when storage is the
+            # accumulation dtype)
+            traw = traw.astype(zo_ref.dtype).astype(acc)
         elif has_diag:
             traw = th_ref[...].astype(acc)          # (bs, 1)
         if has_diag:
             # in-kernel diagonal preconditioner: t = M^{-1} t_hat
+            # (the preconditioned stream is storage-dtype too)
             th = traw
             iv = (scal[0, 6] if diag == "scalar"
                   else invd_ref[...].astype(acc))
-            t = iv * traw
+            t = (iv * traw).astype(zo_ref.dtype).astype(acc)
         elif has_stencil:
             t = th = traw
         else:
@@ -139,8 +145,14 @@ def _make_kernel(l: int, has_zh: bool, has_stencil: bool, diag: str,
         zo_ref[...] = Z2.astype(zo_ref.dtype)
 
         # ---- (K5) payload dots against the updated windows -------------
-        vd = (V2[:, :l + 1] * lhs).sum(axis=0)      # (l+1,)
-        zd = (Z2[:, :l] * lhs).sum(axis=0)          # (l,)
+        # dot the windows AS STORED: under a low-precision storage dtype
+        # the Gram payload must describe the basis later iterations read
+        # back (and match the per-kernel tier, which dots the rounded
+        # windows); identity casts when storage == accumulation dtype
+        V2s = V2.astype(vo_ref.dtype).astype(acc)
+        Z2s = Z2.astype(zo_ref.dtype).astype(acc)
+        vd = (V2s[:, :l + 1] * lhs).sum(axis=0)     # (l+1,)
+        zd = (Z2s[:, :l] * lhs).sum(axis=0)         # (l,)
 
         @pl.when(i == 0)
         def _init():

@@ -114,15 +114,43 @@ def collective_payload_shapes_in_scan_bodies(fn, *args,
     return out
 
 
-def _collect_collective_shapes(jaxpr, out: list, seen: set) -> None:
+def collective_payload_dtypes_in_scan_bodies(fn, *args,
+                                             **kwargs) -> list[list[tuple]]:
+    """Per-scan-body ``(primitive, operand shape, operand dtype)`` triples
+    for every collective equation -- the full payload signature of the
+    per-iteration reduction.
+
+    The precision-policy acceptance gate: a ``precision="bf16"`` storage
+    policy must change what each shard streams through HBM *locally* and
+    NOTHING about the wire -- same collective primitives, same payload
+    shapes, and payload dtype equal to the policy's f32/f64 *compute*
+    dtype (never bfloat16).  Asserted structurally here, without running
+    the mesh program.
+    """
+    closed = jax.make_jaxpr(fn)(*args, **kwargs)
+    bodies: list = []
+    _collect_scan_bodies(closed.jaxpr, bodies, set())
+    out = []
+    for b in bodies:
+        pairs: list = []
+        _collect_collective_shapes(b, pairs, set(), with_dtype=True)
+        out.append(pairs)
+    return out
+
+
+def _collect_collective_shapes(jaxpr, out: list, seen: set,
+                               with_dtype: bool = False) -> None:
     if id(jaxpr) in seen:
         return
     seen.add(id(jaxpr))
     for eqn in jaxpr.eqns:
         if eqn.primitive.name in COLLECTIVE_PRIMITIVES:
-            out.append((eqn.primitive.name, tuple(eqn.invars[0].aval.shape)))
+            aval = eqn.invars[0].aval
+            out.append((eqn.primitive.name, tuple(aval.shape), aval.dtype)
+                       if with_dtype
+                       else (eqn.primitive.name, tuple(aval.shape)))
         for sub in _sub_jaxprs(eqn.params):
-            _collect_collective_shapes(sub, out, seen)
+            _collect_collective_shapes(sub, out, seen, with_dtype)
 
 
 def scan_carry_shapes(fn, *args, **kwargs) -> list[list[tuple]]:

@@ -11,24 +11,28 @@ import jax.numpy as jnp
 
 
 def stencil2d_ref(x, halo_n, halo_s, halo_w, halo_e):
-    up = jnp.concatenate([halo_n.reshape(1, -1).astype(x.dtype), x[:-1]], 0)
-    down = jnp.concatenate([x[1:], halo_s.reshape(1, -1).astype(x.dtype)], 0)
-    left = jnp.concatenate([halo_w.reshape(-1, 1).astype(x.dtype), x[:, :-1]], 1)
-    right = jnp.concatenate([x[:, 1:], halo_e.reshape(-1, 1).astype(x.dtype)], 1)
-    return 4.0 * x - up - down - left - right
+    acc = jnp.promote_types(x.dtype, jnp.float32)
+    xa = x.astype(acc)
+    up = jnp.concatenate([halo_n.reshape(1, -1).astype(acc), xa[:-1]], 0)
+    down = jnp.concatenate([xa[1:], halo_s.reshape(1, -1).astype(acc)], 0)
+    left = jnp.concatenate([halo_w.reshape(-1, 1).astype(acc), xa[:, :-1]], 1)
+    right = jnp.concatenate([xa[:, 1:], halo_e.reshape(-1, 1).astype(acc)], 1)
+    return (4.0 * xa - up - down - left - right).astype(x.dtype)
 
 
 def stencil2d_batched_ref(x, halo_n, halo_s, halo_w, halo_e):
     """Batched (B, H, W) oracle of ``stencil2d_batched`` (lane-leading)."""
-    hn = halo_n[:, None, :].astype(x.dtype)
-    hs = halo_s[:, None, :].astype(x.dtype)
-    hw = halo_w[:, :, None].astype(x.dtype)
-    he = halo_e[:, :, None].astype(x.dtype)
-    up = jnp.concatenate([hn, x[:, :-1, :]], axis=1)
-    down = jnp.concatenate([x[:, 1:, :], hs], axis=1)
-    left = jnp.concatenate([hw, x[:, :, :-1]], axis=2)
-    right = jnp.concatenate([x[:, :, 1:], he], axis=2)
-    return 4.0 * x - up - down - left - right
+    acc = jnp.promote_types(x.dtype, jnp.float32)
+    xa = x.astype(acc)
+    hn = halo_n[:, None, :].astype(acc)
+    hs = halo_s[:, None, :].astype(acc)
+    hw = halo_w[:, :, None].astype(acc)
+    he = halo_e[:, :, None].astype(acc)
+    up = jnp.concatenate([hn, xa[:, :-1, :]], axis=1)
+    down = jnp.concatenate([xa[:, 1:, :], hs], axis=1)
+    left = jnp.concatenate([hw, xa[:, :, :-1]], axis=2)
+    right = jnp.concatenate([xa[:, :, 1:], he], axis=2)
+    return (4.0 * xa - up - down - left - right).astype(x.dtype)
 
 
 def multidot_ref(W, z):
@@ -63,12 +67,15 @@ def fused_body_ref(Vw, Zw, Zhw, t, t_hat, *, l, steady, s_warm, gam, dlt,
         H, W2d = stencil_hw
         x = Z[:, 0].reshape(H, W2d)
         zr = jnp.zeros_like
+        # the SPMV stream is storage-dtype (see fused_body)
         t_hat = stencil2d_ref(x, zr(x[0]), zr(x[0]), zr(x[:, 0]),
-                              zr(x[:, 0])).reshape(-1)
+                              zr(x[:, 0])).reshape(-1).astype(
+                                  Zw.dtype).astype(acc)
         t = t_hat
     if invd is not None:
         iv = jnp.asarray(invd, acc)
-        t = (iv if iv.ndim == 0 else iv.reshape(-1)) * t_hat.astype(acc)
+        t = ((iv if iv.ndim == 0 else iv.reshape(-1))
+             * t_hat.astype(acc)).astype(Zw.dtype).astype(acc)
     t = t.astype(acc)[:, None]
     vnew = (Z[:, l - 1:l]
             - (V[:, :2 * l] * g.astype(acc)[None, :]).sum(
@@ -88,7 +95,9 @@ def fused_body_ref(Vw, Zw, Zhw, t, t_hat, *, l, steady, s_warm, gam, dlt,
         Zh2 = jnp.concatenate([zhnew, Zh[:, :-1]],
                               axis=1).astype(Zhw.dtype)
         lhs = zhnew
-    vd = (V2[:, :l + 1] * lhs).sum(axis=0)
-    zd = (Z2[:, :l] * lhs).sum(axis=0)
+    # dots consume the windows AS STORED (see fused_body: the payload
+    # must describe the basis later iterations read back)
+    vd = ((V2.astype(Vw.dtype).astype(acc))[:, :l + 1] * lhs).sum(axis=0)
+    zd = ((Z2.astype(Zw.dtype).astype(acc))[:, :l] * lhs).sum(axis=0)
     return (V2.astype(Vw.dtype), Z2.astype(Zw.dtype), Zh2,
             jnp.concatenate([vd, zd]))

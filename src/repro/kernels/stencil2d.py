@@ -31,14 +31,17 @@ from jax.experimental import pallas as pl
 def _kernel(nblocks, xp_ref, xc_ref, xn_ref, hn_ref, hs_ref, hw_ref, he_ref,
             o_ref):
     i = pl.program_id(0)
-    xc = xc_ref[...]
-    top_halo = jnp.where(i == 0, hn_ref[...], xp_ref[-1:, :])
-    bot_halo = jnp.where(i == nblocks - 1, hs_ref[...], xn_ref[:1, :])
+    acc = jnp.promote_types(xc_ref.dtype, jnp.float32)
+    xc = xc_ref[...].astype(acc)
+    top_halo = jnp.where(i == 0, hn_ref[...].astype(acc),
+                         xp_ref[-1:, :].astype(acc))
+    bot_halo = jnp.where(i == nblocks - 1, hs_ref[...].astype(acc),
+                         xn_ref[:1, :].astype(acc))
     up = jnp.concatenate([top_halo, xc[:-1]], axis=0)
     down = jnp.concatenate([xc[1:], bot_halo], axis=0)
-    left = jnp.concatenate([hw_ref[...], xc[:, :-1]], axis=1)
-    right = jnp.concatenate([xc[:, 1:], he_ref[...]], axis=1)
-    o_ref[...] = 4.0 * xc - up - down - left - right
+    left = jnp.concatenate([hw_ref[...].astype(acc), xc[:, :-1]], axis=1)
+    right = jnp.concatenate([xc[:, 1:], he_ref[...].astype(acc)], axis=1)
+    o_ref[...] = (4.0 * xc - up - down - left - right).astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("bh", "interpret"))
@@ -82,14 +85,17 @@ def stencil2d(x, halo_n, halo_s, halo_w, halo_e, *, bh: int = 256,
 def _kernel_batched(nblocks, xp_ref, xc_ref, xn_ref, hn_ref, hs_ref, hw_ref,
                     he_ref, o_ref):
     i = pl.program_id(0)
-    xc = xc_ref[...]                                        # (B, bh, W)
-    top_halo = jnp.where(i == 0, hn_ref[...], xp_ref[:, -1:, :])
-    bot_halo = jnp.where(i == nblocks - 1, hs_ref[...], xn_ref[:, :1, :])
+    acc = jnp.promote_types(xc_ref.dtype, jnp.float32)
+    xc = xc_ref[...].astype(acc)                            # (B, bh, W)
+    top_halo = jnp.where(i == 0, hn_ref[...].astype(acc),
+                         xp_ref[:, -1:, :].astype(acc))
+    bot_halo = jnp.where(i == nblocks - 1, hs_ref[...].astype(acc),
+                         xn_ref[:, :1, :].astype(acc))
     up = jnp.concatenate([top_halo, xc[:, :-1, :]], axis=1)
     down = jnp.concatenate([xc[:, 1:, :], bot_halo], axis=1)
-    left = jnp.concatenate([hw_ref[...], xc[:, :, :-1]], axis=2)
-    right = jnp.concatenate([xc[:, :, 1:], he_ref[...]], axis=2)
-    o_ref[...] = 4.0 * xc - up - down - left - right
+    left = jnp.concatenate([hw_ref[...].astype(acc), xc[:, :, :-1]], axis=2)
+    right = jnp.concatenate([xc[:, :, 1:], he_ref[...].astype(acc)], axis=2)
+    o_ref[...] = (4.0 * xc - up - down - left - right).astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("bh", "interpret"))

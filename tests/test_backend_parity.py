@@ -122,6 +122,46 @@ def test_solve_front_end_fused_tier(problem):
     assert _rel(jnp.asarray(rb.x[0]), jnp.asarray(r0.x)) <= 1e-12
 
 
+# ------------------------- bf16 storage parity ----------------------------
+
+def _run_bf16(A, b, l, backend, iters):
+    return plcg_scan(A.matvec, b, l=l, iters=iters,
+                     sigma=tuple(chebyshev_shifts(0, 8, l)), tol=0.0,
+                     backend=backend, stencil_hw=A.stencil2d,
+                     precision="bf16")
+
+
+@pytest.mark.parametrize("l", [1, 2, 3])
+def test_bf16_storage_tier_parity(problem, l):
+    """Under ``precision="bf16"`` every tier stores the same bf16 windows
+    and streams, so the tiers still track each other: 'pallas' reproduces
+    'ref' bitwise (same kernels, same accumulation order), and the inline
+    and fused tiers differ only by f32-vs-f64 dot accumulation on
+    bf16-rounded data -- orders of magnitude below the bf16 storage eps
+    at a pre-floor horizon."""
+    A, b = problem
+    iters = 30
+    eps = float(jnp.finfo(jnp.bfloat16).eps)
+    ref = _run_bf16(A, b, l, "ref", iters)
+    assert _rel(_run_bf16(A, b, l, "pallas", iters).x, ref.x) <= 1e-10
+    assert _rel(_run_bf16(A, b, l, None, iters).x, ref.x) <= eps / 2
+    assert _rel(_run_bf16(A, b, l, "fused", iters).x, ref.x) <= eps / 2
+
+
+@pytest.mark.parametrize("backend", [None] + BACKENDS)
+def test_bf16_reaches_storage_floor(problem, backend):
+    """At l=1 every tier converges to the bf16 attainable-accuracy floor
+    (~eps_bf16-scaled true residual) without breakdown."""
+    A, b = problem
+    out = plcg_scan(A.matvec, b, l=1, iters=120,
+                    sigma=tuple(chebyshev_shifts(0, 8, 1)), tol=0.1,
+                    backend=backend, stencil_hw=A.stencil2d,
+                    precision="bf16")
+    assert bool(out.converged) and not bool(out.breakdown)
+    true = _rel(jnp.asarray(A @ np.asarray(out.x)), b)
+    assert true <= 0.1
+
+
 # ------------------------- structural launch gates ------------------------
 
 def _launches(A, b, backend, **kw):
@@ -142,6 +182,16 @@ def test_fused_is_one_launch_per_iteration(problem):
     assert n_fused_nostencil == 1
     assert n_pallas >= 3
     assert n_fused < n_pallas
+
+
+def test_bf16_fused_is_still_one_launch(problem):
+    """Acceptance: ``precision="bf16"`` must not un-fuse the megakernel --
+    the storage casts live inside the one launch (and at the scan
+    boundary), never as extra pallas_calls."""
+    A, b = problem
+    assert _launches(A, b, "fused", stencil_hw=A.stencil2d,
+                     precision="bf16") == 1
+    assert _launches(A, b, "fused", precision="bf16") == 1
 
 
 def test_batched_fused_is_still_one_launch(problem):

@@ -1,0 +1,177 @@
+"""Precision-policy tests: the ``precision=`` knob end to end.
+
+Covers the ``as_precision_policy`` one-normalization-point contract
+(mirroring ``as_preconditioner`` / ``as_comm_policy``), the engine's
+capability gating, and the two structural acceptance gates of the
+mixed-precision design:
+
+* a ``precision="bf16"`` storage policy must change what each shard
+  streams through HBM *locally* and NOTHING about the wire -- identical
+  collective ``(primitive, shape)`` signature for all three ``comm=``
+  modes, with every payload in the f32/f64 *compute* dtype (never
+  bfloat16);
+* pooled lanes (``SolverPool``) keep the masked-sweep contract under
+  bf16 storage: lanes converging at different iterations mask exactly
+  as the shape-identical batched one-shot does.
+
+Mesh coverage runs in-process on a (1, 1) mesh (the traced collective
+signature is mesh-size independent); the CI precision lane additionally
+runs this file with 4 forced host devices.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (PRECISION_MODES, PrecisionPolicy, Solver, SolverPool,
+                        as_precision_policy, methods_supporting, solve)
+from repro.operators import poisson2d
+
+
+@pytest.fixture(scope="module", autouse=True)
+def x64():
+    old = jax.config.jax_enable_x64
+    jax.config.update("jax_enable_x64", True)
+    yield
+    jax.config.update("jax_enable_x64", old)
+
+
+# --------------------------- policy normalization --------------------------
+
+def test_policy_promotion_forms():
+    """as_precision_policy is the one normalization point: None, ladder
+    names, explicit compounds, dtype-likes and pass-through policies."""
+    assert as_precision_policy(None).is_default
+    assert as_precision_policy(None) == PrecisionPolicy()
+    p = as_precision_policy("bf16")
+    assert p.storage == "bfloat16" and p.compute is None
+    assert as_precision_policy("F32").storage == "float32"
+    comp = as_precision_policy("bf16x64")
+    assert comp.storage == "bfloat16" and comp.compute == "float64"
+    assert as_precision_policy("f32x64") == PrecisionPolicy("f32", "f64")
+    assert as_precision_policy(jnp.bfloat16).storage == "bfloat16"
+    assert as_precision_policy(np.float64).storage == "float64"
+    q = PrecisionPolicy(storage="bf16")
+    assert as_precision_policy(q) is q
+    # hashable: policies key the weak sweep caches
+    assert hash(PrecisionPolicy("bf16")) == hash(PrecisionPolicy("bfloat16"))
+    assert "bf16" in PRECISION_MODES
+
+
+def test_policy_validation():
+    with pytest.raises(ValueError, match="tf32"):
+        as_precision_policy("tf32")
+    with pytest.raises(ValueError, match="unknown precision"):
+        as_precision_policy("int8")
+    with pytest.raises(ValueError, match="compute dtype must be"):
+        PrecisionPolicy(storage="f32", compute="bf16")
+    with pytest.raises(ValueError, match="compute dtype must be"):
+        as_precision_policy("bf16x16")
+    with pytest.raises(TypeError, match="precision"):
+        as_precision_policy(16)
+
+
+def test_policy_resolution():
+    """The default policy is exactly the pre-policy engine (b.dtype for
+    both sides); declared storage keeps compute at promote(b.dtype, f32)
+    -- scalars never drop below the problem's own precision."""
+    assert PrecisionPolicy().resolve(jnp.float64) == (jnp.float64,
+                                                     jnp.float64)
+    sdt, cdt = as_precision_policy("bf16").resolve(jnp.float32)
+    assert (sdt, cdt) == (jnp.bfloat16, jnp.float32)
+    sdt, cdt = as_precision_policy("bf16").resolve(jnp.float64)
+    assert (sdt, cdt) == (jnp.bfloat16, jnp.float64)
+    sdt, cdt = as_precision_policy("bf16x64").resolve(jnp.float32)
+    assert (sdt, cdt) == (jnp.bfloat16, jnp.float64)
+    assert (as_precision_policy("f16").resolve(jnp.float32)
+            == (jnp.float16, jnp.float32))
+    assert (as_precision_policy("bf16").compute_dtype(jnp.float32)
+            == jnp.float32)
+
+
+# ----------------------------- capability gating ---------------------------
+
+def test_front_end_rejects_precision_uniformly():
+    """Only precision-capable methods accept a non-default policy -- the
+    same knob-table error through solve() and Solver; the default policy
+    is accepted everywhere (it selects nothing)."""
+    assert set(methods_supporting("precision")) == {"plcg_scan"}
+    A = poisson2d(8, 8)
+    b = np.asarray(A @ np.ones(A.n))
+    with pytest.raises(ValueError, match="does not support precision"):
+        solve(A, b, method="cg", precision="bf16")
+    with pytest.raises(ValueError, match="does not support precision"):
+        Solver(A, method="cg", precision="bf16")
+    r = solve(A, b, method="cg", tol=1e-8, maxiter=200, precision=None)
+    assert r.converged
+
+
+# ------------------- structural: nothing changes on the wire ---------------
+
+def test_mesh_collective_signature_unchanged_under_bf16():
+    """Acceptance gate: for every comm mode, bf16 storage leaves the
+    traced scan body's collective (primitive, shape) signature exactly
+    as the default-precision sweep traces it, and every collective
+    payload stays in the f64 compute dtype -- bfloat16 never reaches
+    a psum/reduce_scatter/all_gather/ppermute operand."""
+    from repro.core.shifts import chebyshev_shifts
+    from repro.distributed import DistPoisson, plcg_mesh_sweep
+    from repro.kernels.introspect import (
+        collective_payload_dtypes_in_scan_bodies)
+    from repro.launch.mesh import make_mesh_compat
+
+    mesh = make_mesh_compat((1, 1), ("data", "model"))
+    op = DistPoisson(16, 16, mesh)
+    sig = tuple(chebyshev_shifts(0, 8, 3))
+    b = jnp.ones((16, 16))
+
+    def triples(comm, precision):
+        f = plcg_mesh_sweep(op, l=3, iters=30, sigma=sig, tol=1e-8,
+                            comm=comm, precision=precision)
+        return collective_payload_dtypes_in_scan_bodies(f, b, b * 0, 30)[0]
+
+    for comm in ("blocking", "overlap", "ring"):
+        base = triples(comm, None)
+        bf16 = triples(comm, "bf16")
+        assert [(p, s) for p, s, _ in bf16] == [(p, s) for p, s, _ in base], \
+            comm
+        assert all(dt == jnp.float64 for _, _, dt in bf16), comm
+        assert not any(dt == jnp.bfloat16 for _, _, dt in bf16), comm
+
+
+# ------------------------- pooled lanes under bf16 -------------------------
+
+def test_pool_lane_masking_under_bf16():
+    """Pooled lanes keep the masked-sweep contract at bf16 storage: the
+    flush packs into one batched sweep whose per-lane results are
+    bitwise against the shape-identical batched one-shot, lanes
+    converge at (potentially) different iterations, and every converged
+    lane sits at the bf16 attainable-accuracy floor."""
+    A = poisson2d(20, 20)
+    rng = np.random.default_rng(7)
+    B = np.stack([np.asarray(A @ np.ones(A.n)),
+                  np.asarray(A @ rng.standard_normal(A.n)),
+                  0.01 * np.asarray(A @ np.ones(A.n))])
+    kw = dict(l=1, tol=5e-2, maxiter=200, spectrum=(0.0, 8.0),
+              precision="bf16")
+    solver = Solver(A, "plcg_scan", **kw)
+    assert solver.precision == PrecisionPolicy("bf16")
+    pool = SolverPool(solver, max_batch=4)
+    handles = [pool.submit(B[j]) for j in range(3)]
+    pool.flush()
+    rb = solve(A, B, method="plcg_scan", **kw)          # one-shot batched
+    iters = []
+    for j, h in enumerate(handles):
+        r = h.result()
+        assert r.info["pooled"] and r.info["lane"] == j
+        assert np.array_equal(np.asarray(r.x), np.asarray(rb.x)[j])
+        assert bool(r.converged) == bool(np.asarray(rb.info
+                                                    ["per_rhs_converged"])[j])
+        iters.append(int(np.asarray(rb.info["per_rhs_iters"])[j]))
+        if r.converged:
+            true = np.linalg.norm(np.asarray(A @ np.asarray(r.x)) - B[j])
+            assert true / np.linalg.norm(B[j]) <= 0.2
+    assert any(r.converged for r in (h.result() for h in handles))
+    # different RHS really do stop at different iterations -- the mask
+    # (not a shared early-exit) is what froze the finished lanes
+    assert len(set(iters)) > 1

@@ -149,11 +149,13 @@ def test_solve_signature_unchanged():
     """engine.solve keeps its public signature (the session redesign must
     not break any existing caller) -- extended only by appended
     keyword-only knobs (``comm=``, then the stability pair ``restart=`` /
-    ``residual_replacement=``), so positional callers are unaffected."""
+    ``residual_replacement=``, then ``precision=``), so positional
+    callers are unaffected."""
     params = list(inspect.signature(solve).parameters)
     assert params == ["A", "b", "method", "x0", "tol", "maxiter", "M", "l",
                       "sigma", "spectrum", "backend", "mesh", "comm",
-                      "restart", "residual_replacement", "options"]
+                      "restart", "residual_replacement", "precision",
+                      "options"]
 
 
 def test_unknown_option_rejected_uniformly(poisson):
