@@ -51,20 +51,21 @@ def main(argv=None) -> None:
                              "falling back to BENCH_local.json]\n")
         args.json = f"BENCH_{rev}.json"
 
-    from benchmarks import (dist_bench, engine_bench, kernels_bench,
-                            mp_bench, paper_figs, prec_bench, roofline,
-                            serve_bench, stab_bench)
+    from benchmarks import (auto_bench, dist_bench, engine_bench,
+                            kernels_bench, mp_bench, paper_figs, prec_bench,
+                            roofline, serve_bench, stab_bench)
     if args.smoke:
         groups = (list(engine_bench.SMOKE) + list(kernels_bench.ALL)
                   + [paper_figs.table1_cost_model] + list(dist_bench.SMOKE)
                   + list(prec_bench.SMOKE) + list(serve_bench.SMOKE)
-                  + list(stab_bench.SMOKE) + list(mp_bench.SMOKE))
+                  + list(stab_bench.SMOKE) + list(mp_bench.SMOKE)
+                  + list(auto_bench.SMOKE))
     else:
         groups = (list(paper_figs.ALL) + list(kernels_bench.ALL)
                   + list(engine_bench.ALL) + list(dist_bench.ALL)
                   + list(prec_bench.ALL) + list(serve_bench.ALL)
                   + list(stab_bench.ALL) + list(mp_bench.ALL)
-                  + list(roofline.ALL))
+                  + list(auto_bench.ALL) + list(roofline.ALL))
     print("name,us_per_call,derived")
     failures = 0
     all_rows: list[tuple] = []
@@ -98,7 +99,8 @@ def main(argv=None) -> None:
     if us.get("dist/overlap_overlap_8dev"):
         ratio = us["dist/overlap_blocking_8dev"] / us["dist/overlap_overlap_8dev"]
         row = ("dist/overlap_hiding_ratio", ratio,
-               "blocking_us/overlap_us on forced 8-device mesh")
+               f"ratio={ratio:.2f};blocking_us/overlap_us on forced "
+               "8-device mesh")
         print(f"{row[0]},{row[1]:.2f},{row[2]}")
         all_rows.append(row)
     # the mixed-precision win tracked across PRs: HBM bytes/iter of the

@@ -20,10 +20,15 @@ delayed all_gather genuinely overlapped with compute, or a staged
 ppermute ring.  ``precision=`` (``repro.core.precision.PrecisionPolicy``)
 splits window *storage* dtype from scalar *compute* dtype -- bf16 window
 arrays halve the dominant HBM traffic while recurrences, collective
-payloads and convergence tests stay f32/f64.  Individual algorithm
-modules (``cg.py``, ``plcg.py``, ``plcg_scan.py``, ...) stay importable
-directly for research use.
+payloads and convergence tests stay f32/f64.  ``l="auto"`` /
+``comm="auto"`` (``repro.core.autotune``) calibrate the pipeline depth
+and reduction policy from measured on-device latencies, clamped so the
+storage-precision residual-gap floor never misses the requested ``tol``.
+Individual algorithm modules (``cg.py``, ``plcg.py``, ``plcg_scan.py``,
+...) stay importable directly for research use.
 """
+from .autotune import (AutoDecision, clear_calibration_events, decide,
+                       depth_budget, override_latencies, resolve_auto)
 from .comm import CommPolicy, as_comm_policy
 from .engine import (as_operator, clear_batch_trace, describe_methods,
                      get_method, methods, methods_supporting, register,
@@ -38,6 +43,7 @@ from .session import SolveHandle, Solver, SolverPool
 from .solver_cache import clear_solver_cache
 
 __all__ = [
+    "AutoDecision",
     "BlockJacobi",
     "Chebyshev",
     "CommPolicy",
@@ -56,14 +62,19 @@ __all__ = [
     "as_precision_policy",
     "as_preconditioner",
     "clear_batch_trace",
+    "clear_calibration_events",
     "clear_solver_cache",
+    "decide",
     "dense_operator",
+    "depth_budget",
     "describe_methods",
     "get_method",
     "identity_preconditioner",
     "methods",
     "methods_supporting",
+    "override_latencies",
     "register",
     "residual_gap",
+    "resolve_auto",
     "solve",
 ]

@@ -1,0 +1,475 @@
+"""Measured-latency autotuner: ``l="auto"`` depth + ``comm="auto"`` policy.
+
+The paper's whole performance argument is a latency-ratio model -- per
+iteration the pipelined engine costs ``max(glred / l, spmv)`` while
+classic CG pays ``2 glred + spmv`` (Figs. 3/4; reproduced structurally in
+the ``fig3/`` bench rows).  Every knob that model depends on is
+measurable on the actual device/mesh, so this module closes the loop:
+instead of hand-picking ``l``, the ``comm=`` reduction schedule and the
+overlap staging depth ``d``, a prepared solver calibrates ONCE --
+
+  (a) one local SPMV (``matvec_local`` including its halo ``ppermute``
+      exchanges) under ``jit(shard_map(...))`` on the live mesh;
+  (b) one stacked global reduction per ``comm=`` mode: the blocking
+      ``psum``, the split ``psum_scatter``/``all_gather`` pair, and the
+      circulate-accumulate ``ppermute`` ring hops;
+  (c) the per-depth sweep cost: a short fixed-budget p(l)-CG sweep per
+      candidate depth, whose per-iteration time captures the window-
+      recurrence flop growth Table 1 predicts (``6l+10`` FLOPS x n);
+
+-- and solves the model for the fastest admissible ``(l, comm, d)``.
+
+Stability clamps the search: the attainable-accuracy floor of the
+storage precision grows with the basis width (arXiv:1804.02962, measured
+in the committed ``mp/gap_*`` ladder of ``benchmarks/mp_bench.py``), so
+:func:`depth_budget` caps the candidate depths at the largest ``l``
+whose modeled ``residual_gap`` floor still reaches the requested
+``tol`` -- auto never picks a depth whose bf16/f32 floor misses the
+target (the measured counterpart is ``repro.core.residual_gap``).
+
+Calibration results are cached in the weak-key solver-cache layer
+(:class:`~repro.core.solver_cache.WeakCallableCache`) keyed on the
+operator plus ``(shape, mesh, backend, precision, dtype)``: a session
+measures once, and repeated same-shape solves stay zero-retrace and
+zero-re-measure.  Tests pin the choice with :func:`override_latencies`
+(the injection hook -- fake tables make the decision reproducible in CI
+and are never written into the measurement cache) and audit the
+measure-exactly-once contract via :data:`CALIBRATION_EVENTS`.
+
+Entry points: ``solve(A, b, l="auto", comm="auto")`` /
+``Solver(A, l="auto", ...)`` / ``prepare_on_mesh(..., l="auto")``; the
+chosen depth/policy and the latencies that justified it are reported in
+``SolveResult.info["auto"]``.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import time
+import warnings
+from typing import Optional
+
+from .comm import CommPolicy, as_comm_policy, ring_hop
+from .precision import as_precision_policy
+from .solver_cache import WeakCallableCache
+
+#: Candidate pipeline depths of the auto search (the paper's deep range;
+#: clamped per problem by :func:`depth_budget`).
+DEPTH_LADDER = (1, 2, 3, 5, 8)
+
+#: Gap-model coefficient: the committed ``mp/gap_*`` ladder fits
+#: ``rel_gap ~ eps_storage * (2l+1)`` to within its own noise, so the
+#: modeled floor at depth l is ``GAP_COEFF * eps * (2l+1)`` with the
+#: coefficient at its measured order of magnitude, 1.
+GAP_COEFF = 1.0
+
+#: Iterations of each per-depth probe sweep (small: the probe measures
+#: per-iteration cost, not convergence).
+PROBE_ITERS = 8
+
+#: Preference order on equal model scores: shallower pipelines are more
+#: stable, simpler reduction schedules are cheaper to reason about.
+_MODE_RANK = {"blocking": 0, "overlap": 1, "ring": 2}
+
+#: Audit log of calibrations: one ``(source, kind, shape, mesh)`` entry
+#: per actual measurement (or per injected resolution) -- NEVER per cache
+#: hit, so tests can assert a prepared Solver calibrates exactly once.
+CALIBRATION_EVENTS: list[tuple] = []
+
+#: Measured latency tables, keyed weakly on the operator (matvec /
+#: DistributedOperator) plus the (shape, mesh, backend, precision,
+#: dtype) configuration; cleared by ``repro.core.clear_solver_cache``.
+_CALIB_CACHE = WeakCallableCache(maxsize=16)
+
+_OVERRIDE: Optional[dict] = None
+
+
+def clear_calibration_events() -> None:
+    """Reset :data:`CALIBRATION_EVENTS` (test helper; cleared in place
+    like ``clear_batch_trace``)."""
+    CALIBRATION_EVENTS.clear()
+
+
+def set_latency_override(table: Optional[dict]) -> None:
+    """Install (or with ``None`` clear) a fake latency table.
+
+    ``table`` must carry ``spmv_us`` (float) and ``glred_us`` (dict
+    mode -> float); ``iter_us`` (dict depth -> float) and ``ring_hops``
+    (int) are optional.  While installed, :func:`resolve_auto` uses the
+    table instead of measuring -- and bypasses the measurement cache, so
+    a later real calibration is never poisoned by injected numbers.
+    """
+    global _OVERRIDE
+    if table is not None:
+        missing = {"spmv_us", "glred_us"} - set(table)
+        if missing:
+            raise ValueError(
+                f"latency override table is missing {sorted(missing)}; "
+                "required keys: spmv_us (float), glred_us (mode -> us)")
+    _OVERRIDE = table
+
+
+@contextlib.contextmanager
+def override_latencies(table: dict):
+    """Context manager form of :func:`set_latency_override` (restores
+    the previous override on exit)."""
+    prev = _OVERRIDE
+    set_latency_override(table)
+    try:
+        yield
+    finally:
+        set_latency_override(prev)
+
+
+@dataclasses.dataclass(frozen=True)
+class AutoDecision:
+    """The resolved ``(l, comm, d)`` plus the evidence behind it.
+
+    ``latencies`` holds the calibration inputs (``spmv_us``,
+    ``glred_us`` per mode, ``iter_us`` per probed depth) and the model
+    score of the winner; ``budget`` is the precision-clamped maximum
+    depth; ``source`` is ``"measured"`` or ``"injected"``.
+    """
+
+    l: int
+    comm: CommPolicy
+    depth: Optional[int]
+    budget: int
+    score_us: float
+    latencies: dict
+    source: str
+
+    def as_info(self) -> dict:
+        """The dict reported as ``SolveResult.info["auto"]``."""
+        return {"l": self.l, "comm": self.comm.mode, "depth": self.depth,
+                "budget": self.budget, "score_us": self.score_us,
+                "source": self.source,
+                "latencies": {k: (dict(v) if isinstance(v, dict) else v)
+                              for k, v in self.latencies.items()}}
+
+
+# --------------------------------------------------------------------------
+# the stability clamp
+# --------------------------------------------------------------------------
+
+def attainable_floor(l: int, storage_dtype) -> float:
+    """Modeled residual-gap floor of a depth-``l`` pipeline whose windows
+    are stored in ``storage_dtype``.
+
+    The ``mp/gap_*`` ladder (``residual_gap()`` per storage rung at
+    depth 5) sits at ``~eps_storage``-scaled floors growing with the
+    auxiliary basis width ``2l+1`` -- the linear fit
+    ``GAP_COEFF * eps * (2l+1)`` is the clamp model (the measured
+    counterpart for a finished solve is ``repro.core.residual_gap``).
+    """
+    import jax.numpy as jnp
+    eps = float(jnp.finfo(jnp.dtype(storage_dtype)).eps)
+    return GAP_COEFF * eps * (2 * l + 1)
+
+
+def depth_budget(tol: float, b_dtype, precision=None) -> int:
+    """Largest candidate depth whose modeled precision floor still
+    reaches ``tol`` (always >= 1: there is nothing shallower than l=1).
+
+    ``tol=0`` disables early stopping, so no accuracy target constrains
+    the depth -- the full ladder stays admissible.  The storage dtype
+    comes from resolving the ``precision=`` policy against ``b_dtype``
+    (a bf16-storage policy over an f32 problem clamps on eps(bf16)).
+    """
+    if not tol or tol <= 0:
+        return DEPTH_LADDER[-1]
+    sdt, _ = as_precision_policy(precision).resolve(b_dtype)
+    budget = 1
+    for cand in range(1, DEPTH_LADDER[-1] + 1):
+        if attainable_floor(cand, sdt) <= tol:
+            budget = cand
+        else:
+            break
+    return budget
+
+
+# --------------------------------------------------------------------------
+# measurement
+# --------------------------------------------------------------------------
+
+def _time_us(fn, *args, reps: int = 3) -> float:
+    """Mean wall time of ``fn(*args)`` in us (one untimed warmup call
+    absorbs the jit compile; the last result is blocked on)."""
+    import jax
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def _is_mesh_target(target) -> bool:
+    return hasattr(target, "matvec_local") and hasattr(target, "mesh")
+
+
+def _mesh_key(mesh) -> tuple:
+    return tuple(mesh.shape.items())
+
+
+def _nshards(mesh) -> int:
+    import numpy as np
+    return int(np.prod(list(mesh.shape.values())))
+
+
+def _measure_mesh(op, *, dtype, width: int, depths: tuple,
+                  precision) -> dict:
+    """Calibrate on the live mesh: local SPMV + halos, one stacked
+    reduction per supported ``comm=`` mode, and a short per-depth sweep.
+
+    The probe jits are local throwaways (they capture the operator only
+    for the duration of the calibration); the per-depth sweeps go
+    through ``plcg_mesh_sweep``'s weak cache like any other sweep.
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map_compat
+
+    from .shifts import chebyshev_shifts
+
+    spec = op.spec()
+    x = jnp.ones(tuple(op.global_shape), dtype)
+    spmv_fn = jax.jit(shard_map_compat(
+        lambda blk: op.matvec_local(blk.reshape(-1)).reshape(blk.shape),
+        mesh=op.mesh, in_specs=(spec,), out_specs=spec, check=False))
+    spmv_us = _time_us(spmv_fn, x)
+
+    nshards = _nshards(op.mesh)
+    sched = (tuple(op.ring_schedule())
+             if getattr(op, "ring_schedule", None) is not None else None)
+    ring_hops = len(sched) if sched is not None else 0
+    payload = jnp.ones((width,), jnp.promote_types(dtype, jnp.float32))
+
+    def reduce_fn(body):
+        return jax.jit(shard_map_compat(body, mesh=op.mesh,
+                                        in_specs=(P(),), out_specs=P(),
+                                        check=False))
+
+    glred = {"blocking": _time_us(reduce_fn(op.reduce_scalars), payload)}
+    if nshards > 1:
+        if (getattr(op, "reduce_scalars_start", None) is not None
+                and getattr(op, "reduce_scalars_finish", None) is not None):
+            glred["overlap"] = _time_us(reduce_fn(
+                lambda p: op.reduce_scalars_finish(
+                    op.reduce_scalars_start(p), width)), payload)
+        if ring_hops >= 1:
+            def ring_body(p):
+                acc, circ = p, p
+                for hop in sched:
+                    acc, circ = ring_hop(hop, acc, circ)
+                return acc
+            glred["ring"] = _time_us(reduce_fn(ring_body), payload)
+
+    from repro.distributed.plcg_dist import plcg_mesh_sweep
+    b = jnp.ones(tuple(op.global_shape), dtype)
+    x0 = jnp.zeros_like(b)
+    iter_us = {}
+    for cand in depths:
+        sweep = plcg_mesh_sweep(
+            op, l=cand, iters=PROBE_ITERS + cand + 1,
+            sigma=tuple(chebyshev_shifts(0.0, 8.0, cand)), tol=0.0,
+            precision=precision)
+        iter_us[cand] = _time_us(sweep, b, x0, PROBE_ITERS,
+                                 reps=2) / PROBE_ITERS
+    return {"spmv_us": spmv_us, "glred_us": glred, "iter_us": iter_us,
+            "ring_hops": ring_hops, "nshards": nshards, "width": width}
+
+
+def _measure_single(op, *, dtype, width: int, depths: tuple, backend,
+                    precision) -> dict:
+    """Single-device calibration: the jitted SPMV, the stacked dot
+    payload standing in for the (collective-free) reduction, and the
+    per-depth probe sweeps through ``_jitted_sweep``'s weak cache."""
+    import jax
+    import jax.numpy as jnp
+
+    from .plcg_scan import _jitted_sweep
+    from .shifts import chebyshev_shifts
+
+    n = int(op.n)
+    x = jnp.ones((n,), dtype)
+    spmv_us = _time_us(jax.jit(op.matvec), x)
+    W = jnp.ones((n, width), dtype)
+    glred = {"blocking": _time_us(jax.jit(lambda Wm, t: t @ Wm), W, x)}
+
+    b = jnp.ones((n,), dtype)
+    x0 = jnp.zeros_like(b)
+    iter_us = {}
+    for cand in depths:
+        sweep = _jitted_sweep(
+            op.matvec, cand, PROBE_ITERS + cand + 1,
+            tuple(chebyshev_shifts(0.0, 8.0, cand)), 0.0, None, True, 1,
+            backend, getattr(op, "stencil2d", None), precision=precision)
+        iter_us[cand] = _time_us(sweep, b, x0, PROBE_ITERS,
+                                 reps=2) / PROBE_ITERS
+    return {"spmv_us": spmv_us, "glred_us": glred, "iter_us": iter_us,
+            "ring_hops": 0, "nshards": 1, "width": width}
+
+
+def measured_latencies(target, *, dtype, backend=None, precision=None,
+                       depths: tuple = DEPTH_LADDER) -> tuple:
+    """The calibration table for ``target`` -- measured once, then served
+    from the weak-key cache.
+
+    ``target`` is a ``DistributedOperator`` (mesh calibration) or a
+    ``LinearOperator`` (single device).  Returns ``(table, source)``;
+    with :func:`override_latencies` active the injected table is
+    returned verbatim (normalized) and the cache is bypassed.  Each
+    actual measurement -- and each injected resolution -- appends one
+    entry to :data:`CALIBRATION_EVENTS`.
+    """
+    on_mesh = _is_mesh_target(target)
+    kind = "mesh" if on_mesh else "single"
+    shape = tuple(target.global_shape) if on_mesh else (int(target.n),)
+    meshkey = _mesh_key(target.mesh) if on_mesh else None
+    if _OVERRIDE is not None:
+        table = {"spmv_us": float(_OVERRIDE["spmv_us"]),
+                 "glred_us": {m: float(v)
+                              for m, v in _OVERRIDE["glred_us"].items()},
+                 "iter_us": {int(k): float(v)
+                             for k, v in _OVERRIDE.get("iter_us",
+                                                       {}).items()},
+                 "ring_hops": int(_OVERRIDE.get("ring_hops", 0)),
+                 "nshards": (_nshards(target.mesh) if on_mesh else 1),
+                 "width": 2 * max(depths) + 2}
+        CALIBRATION_EVENTS.append(("injected", kind, shape, meshkey))
+        return table, "injected"
+    import jax.numpy as jnp
+    pp = as_precision_policy(precision)
+    dtype = jnp.dtype(dtype)
+    depths = tuple(sorted(set(int(d) for d in depths)))
+    width = 2 * max(depths) + 2    # deepest payload + the stability slot
+    key = (kind, shape, meshkey, backend, pp, str(dtype), depths)
+    anchor = target if on_mesh else target.matvec
+
+    def build():
+        CALIBRATION_EVENTS.append(("measured", kind, shape, meshkey))
+        measure = _measure_mesh if on_mesh else _measure_single
+        kw = {} if on_mesh else {"backend": backend}
+        return measure(target, dtype=dtype, width=width, depths=depths,
+                       precision=pp, **kw)
+
+    return _CALIB_CACHE.get_or_build((anchor,), key, build), "measured"
+
+
+# --------------------------------------------------------------------------
+# the model solve
+# --------------------------------------------------------------------------
+
+def _local_us(lat: dict, l: int) -> float:
+    """Measured per-iteration local-compute time at depth ``l``: the
+    probe sweep minus its blocking reduction, floored by the bare SPMV
+    (the paper's constant-spmv model is the fallback when no probe for
+    this depth exists, e.g. under an injected table)."""
+    spmv = float(lat["spmv_us"])
+    iter_us = lat.get("iter_us") or {}
+    if l not in iter_us:
+        return spmv
+    return max(float(iter_us[l]) - float(lat["glred_us"]["blocking"]), spmv)
+
+
+def model_score_us(lat: dict, l: int, mode: str) -> float:
+    """The paper's per-iteration latency model with measured inputs:
+    ``max(glred(mode) / l, local(l))`` -- the reduction has l iterations
+    of slack to hide under the local compute."""
+    return max(float(lat["glred_us"][mode]) / l, _local_us(lat, l))
+
+
+def decide(lat: dict, *, l, comm, tol: float, dtype, precision=None,
+           source: str = "measured") -> AutoDecision:
+    """Solve the model over the admissible ``(l, comm)`` grid.
+
+    ``l`` is ``"auto"`` or a pinned int (then only ``comm`` is searched);
+    ``comm`` is ``"auto"``, a mode string or a ``CommPolicy`` (then only
+    the depth is searched).  Admissibility: depths pass the
+    :func:`depth_budget` precision clamp (pinned depths are the user's
+    choice and bypass it), ``ring`` needs ``l >= hops + 1``, an explicit
+    overlap staging depth needs ``l >= depth``, and non-blocking modes
+    need the operator to have measured them (split-phase capability and
+    more than one shard).
+    """
+    pp = as_precision_policy(precision)
+    budget = DEPTH_LADDER[-1]
+    if l == "auto":
+        budget = depth_budget(tol, dtype, pp)
+        if tol and tol > 0:
+            sdt, _ = pp.resolve(dtype)
+            if attainable_floor(1, sdt) > tol:
+                warnings.warn(
+                    f"tol={tol:g} is below the modeled depth-1 precision "
+                    f"floor {attainable_floor(1, sdt):.1e} of storage "
+                    f"dtype {sdt}; l='auto' clamps to l=1 but the solve "
+                    "may stall above tol -- relax tol or raise the "
+                    "storage precision", stacklevel=2)
+        depths = tuple(d for d in DEPTH_LADDER if d <= budget) or (1,)
+    else:
+        depths = (int(l),)
+
+    if comm == "auto":
+        pinned = None
+        modes = tuple(m for m in ("blocking", "overlap", "ring")
+                      if m in lat["glred_us"])
+    else:
+        pinned = as_comm_policy(comm)
+        modes = (pinned.mode,)
+        if pinned.mode not in lat["glred_us"]:
+            # pinned by the user: score it on the blocking measurement
+            # rather than rejecting (capability errors stay with
+            # build_comm_runtime, the one validation point)
+            lat = dict(lat)
+            lat["glred_us"] = dict(lat["glred_us"])
+            lat["glred_us"][pinned.mode] = lat["glred_us"]["blocking"]
+
+    hops = int(lat.get("ring_hops", 0))
+    candidates = []
+    for mode in modes:
+        for d in depths:
+            if mode == "ring" and d < hops + 1:
+                continue
+            if (pinned is not None and pinned.mode == "overlap"
+                    and pinned.depth is not None and d < pinned.depth):
+                continue
+            candidates.append((model_score_us(lat, d, mode), d,
+                               _MODE_RANK[mode], mode))
+    if not candidates:
+        raise ValueError(
+            f"no admissible (l, comm) candidate: depths {depths} "
+            f"(precision budget {budget}) cannot satisfy the pinned "
+            f"comm={modes[0]!r} constraints (ring needs l >= {hops + 1} "
+            "on this mesh); relax tol, raise the storage precision, or "
+            "pin a compatible l")
+    score, l_star, _, mode_star = min(candidates)
+    policy = pinned if pinned is not None else CommPolicy(mode=mode_star)
+    depth = policy.resolve_depth(l_star) if policy.mode == "overlap" else None
+    return AutoDecision(l=l_star, comm=policy, depth=depth, budget=budget,
+                        score_us=float(score), latencies=lat, source=source)
+
+
+def resolve_auto(target, *, l="auto", comm="auto", tol: float = 1e-8,
+                 precision=None, dtype=None, backend=None) -> AutoDecision:
+    """Calibrate ``target`` (cached) and solve the model -- the one entry
+    point the session layer calls when ``l`` and/or ``comm`` is
+    ``"auto"``.
+
+    ``dtype`` defaults to the session float dtype (f64 under
+    ``jax_enable_x64``, else f32) -- a prepared solver has no right-hand
+    side yet; the dtype only scales the probe fields and the precision
+    clamp, both of which are conservative under the default.
+    """
+    import jax
+    import jax.numpy as jnp
+    if dtype is None:
+        dtype = (jnp.float64 if jax.config.jax_enable_x64
+                 else jnp.float32)
+    lat, source = measured_latencies(target, dtype=dtype, backend=backend,
+                                     precision=precision)
+    return decide(lat, l=l, comm=comm, tol=tol, dtype=dtype,
+                  precision=precision, source=source)

@@ -186,7 +186,12 @@ def methods() -> tuple[str, ...]:
 #:   ``backend=``  --              ``plcg_scan`` BACKENDS       single-dev
 #:                                 (warned + ignored on a mesh)
 #:   ``comm=``   ``supports_comm`` ``_prepare_comm``            mesh only
-#:                                 (rejected off-mesh up front)
+#:                                 (rejected off-mesh up front;
+#:                                 ``"auto"`` = calibrated pick)
+#:   ``l=``      ``uses_sigma``    ``_prepare_depth``           pipelined
+#:                                 (``"auto"`` = calibrated pick,
+#:                                 resolved at session construction
+#:                                 via ``repro.core.autotune``)
 #:   ``restart=``            ``supports_restart``
 #:                                 ``_prepare_restart``         all
 #:   ``residual_replacement=``  ``supports_restart``
@@ -197,6 +202,7 @@ _KNOB_TABLE = {
     "M": "supports_M",
     "mesh": "supports_mesh",
     "backend": None,
+    "l": "uses_sigma",
     "comm": "supports_comm",
     "restart": "supports_restart",
     "residual_replacement": "supports_restart",
@@ -366,12 +372,48 @@ def _prepare_mesh_check(spec: MethodSpec, backend) -> None:
             stacklevel=_stacklevel_outside_engine())
 
 
+def _prepare_depth(spec: MethodSpec, l):
+    """Normalize the pipeline depth ``l`` once: a positive int, or the
+    ``"auto"`` sentinel selecting measured-latency calibration
+    (``repro.core.autotune``).  ``"auto"`` is resolved where the operator
+    is known -- session construction (``Solver`` / ``prepare_on_mesh``)
+    -- so this helper only validates; methods that do not consume a
+    pipeline depth (``uses_sigma`` is the capability that moves with it)
+    reject the sentinel up front with the uniform knob style."""
+    if l == "auto":
+        if not spec.uses_sigma:
+            raise ValueError(
+                f"method {spec.name!r} has no pipeline depth to tune "
+                "(l='auto' calibrates the depth of the pipelined "
+                "methods); methods with a depth knob: "
+                f"{', '.join(m for m in methods() if _REGISTRY[m].uses_sigma)}")
+        return "auto"
+    l = int(l)
+    if l < 1:
+        raise ValueError(f"pipeline depth l must be >= 1 (or 'auto'), "
+                         f"got {l}")
+    return l
+
+
 def _prepare_comm(spec: MethodSpec, comm, on_mesh: bool):
     """Normalize ``comm=`` once (string -> ``CommPolicy``) and gate it on
     the capability flag and the execution path -- non-blocking policies
     select the *mesh* reduction schedule, so off-mesh uses are rejected
-    up front with the same uniform style as ``M=`` / ``mesh=``."""
+    up front with the same uniform style as ``M=`` / ``mesh=``.
+
+    ``comm="auto"`` is a *sentinel*, not a policy mode: on a mesh with a
+    ``supports_comm`` method it passes through as the string for the
+    session layer to resolve against measured reduction latencies
+    (``repro.core.autotune``); anywhere else only the blocking reduction
+    exists, so auto degrades to it silently (asking for "the fastest
+    available schedule" where exactly one is available is not an error).
+    """
     from .comm import as_comm_policy
+    if comm == "auto":
+        if on_mesh and spec.supports_comm:
+            return "auto"
+        from .comm import CommPolicy
+        return CommPolicy()
     policy = as_comm_policy(comm)
     if policy.is_blocking:
         return policy
@@ -500,7 +542,7 @@ def solve(
     tol: float = 1e-8,
     maxiter: int = 1000,
     M: Optional[Callable] = None,
-    l: int = 1,
+    l=1,
     sigma: Optional[Sequence[float]] = None,
     spectrum: Optional[tuple] = None,
     backend: Optional[str] = None,
@@ -533,7 +575,15 @@ def solve(
         :func:`repro.core.precond.as_preconditioner`).  ``Identity``
         collapses to the unpreconditioned pipeline.  Methods without the
         ``supports_M`` capability flag reject it up front.
-      l: pipeline depth (pipelined methods only).
+      l: pipeline depth (pipelined methods only), or ``"auto"`` to pick
+        it from on-device calibration: the session layer measures one
+        local SPMV, one stacked reduction per ``comm=`` mode and the
+        per-depth sweep cost, then solves the paper's latency model
+        ``t_iter ~ max(glred/l, spmv)`` for the fastest depth whose
+        storage-precision residual-gap floor still reaches ``tol`` (see
+        ``repro.core.autotune``; the decision and the measured
+        latencies are reported in ``SolveResult.info["auto"]``).
+        Passing a manual int pins the depth and bypasses calibration.
       sigma: l auxiliary-basis shifts; default Chebyshev roots on
         ``spectrum`` (itself defaulting to the Poisson interval (0, 8)).
       backend: kernel tier for the scan engine
@@ -555,10 +605,13 @@ def solve(
         compute), ``"ring"`` (circulate-accumulate ppermute hops staged
         across iterations; needs ``l >= hops + 1``), or a
         :class:`repro.core.comm.CommPolicy` (e.g. with an explicit
-        overlap ``depth``).  Methods without the ``supports_comm``
-        capability, and non-mesh calls, reject non-blocking policies up
-        front.  See the ``M=``/``mesh=``/``backend=``/``comm=`` knob
-        table in this module (``_KNOB_TABLE``).
+        overlap ``depth``).  ``"auto"`` picks the policy from measured
+        reduction latencies on the live mesh (``repro.core.autotune``;
+        off-mesh it degrades to blocking, the only schedule there).
+        Methods without the ``supports_comm`` capability, and non-mesh
+        calls, reject non-blocking policies up front.  See the
+        ``M=``/``mesh=``/``backend=``/``comm=`` knob table in this
+        module (``_KNOB_TABLE``).
       restart: in-scan breakdown recovery -- ``"auto" | int | None``.
         An int caps how many times each lane may re-seed its Krylov
         window from the current iterate after a square-root breakdown,

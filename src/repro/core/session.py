@@ -157,7 +157,7 @@ class Solver:
     """
 
     def __init__(self, A, method: str = "plcg_scan", *, tol: float = 1e-8,
-                 maxiter: int = 1000, M=None, l: int = 1, sigma=None,
+                 maxiter: int = 1000, M=None, l=1, sigma=None,
                  spectrum=None, backend: Optional[str] = None, mesh=None,
                  comm=None, restart="auto",
                  residual_replacement: Optional[int] = None,
@@ -173,6 +173,7 @@ class Solver:
         M, comm, precision = engine._prepare_knobs(
             spec, M=M, backend=backend, mesh=mesh, comm=comm,
             precision=precision, on_mesh=on_mesh)
+        l = engine._prepare_depth(spec, l)
         restart, residual_replacement = engine._prepare_restart(
             spec, restart, residual_replacement, options)
         spectrum = engine._prepare_spectrum(spec, M, sigma, spectrum)
@@ -189,6 +190,7 @@ class Solver:
         self.restart = restart
         self.residual_replacement = residual_replacement
         self.precision = precision
+        self.auto = None            # AutoDecision once l/comm calibrated
         self.options = dict(options)
         self._pending: list = []
         self._prepared: dict = {}       # strong refs: config -> jitted fn
@@ -204,8 +206,14 @@ class Solver:
                 spec, A, mesh, M=M, l=l, sigma=sigma, spectrum=spectrum,
                 comm=comm, restart=restart,
                 residual_replacement=residual_replacement,
-                precision=precision, **options)
+                precision=precision, tol=tol, **options)
             self._op = self._mesh_session.op
+            # auto sentinels resolve at mesh-session construction, where
+            # the operator and its mesh are known; mirror the concrete
+            # choice so session attributes always read as resolved
+            self.l = self._mesh_session.l
+            self.comm = self._mesh_session.comm
+            self.auto = self._mesh_session.auto
             return
 
         # single-device operator promotion (deferred only for a bare
@@ -220,6 +228,19 @@ class Solver:
         else:
             raise TypeError(f"cannot interpret {type(A).__name__} as a "
                             "linear operator")
+        if self.l == "auto":
+            # calibration needs an operator to probe NOW (a prepared
+            # session measures once, at construction -- never per call)
+            if self._op is None:
+                raise ValueError(
+                    "l='auto' calibrates against the operator at session "
+                    "construction, but a bare matvec callable has no "
+                    "dimension yet; pass n= (or pin an integer l)")
+            from .autotune import resolve_auto
+            self.auto = resolve_auto(self._op, l="auto", comm=self.comm,
+                                     tol=tol, precision=precision,
+                                     backend=backend)
+            self.l = self.auto.l
         # sweep building is lazy-once: the first call of each entry
         # point (single-RHS / batched / tol override) builds its jitted
         # sweep through the memoizing getters and holds it forever --
@@ -307,31 +328,38 @@ class Solver:
         maxiter = self.maxiter if maxiter is None else maxiter
         self.stats["calls"] += 1
         if self._mesh_session is not None:
-            return self._mesh_session.solve(b, x0, tol=tol, maxiter=maxiter)
-        op = self._ensure_op(b)
-        spec = self.spec
-        if getattr(b, "ndim", 1) == 2:
-            return engine._solve_batched(
-                spec, op, b, x0=x0, tol=tol, maxiter=maxiter, M=self.M,
-                l=self.l, sigma=self.sigma, spectrum=self.spectrum,
-                backend=self.backend, restart=self.restart,
-                rr_period=self.residual_replacement,
-                precision=self.precision,
-                get_engine=(self._batched_engine_getter()
-                            if spec.batched == "vmap" else None),
-                **self.options)
-        if spec.name == "plcg_scan":
-            return engine._run_plcg_scan(
-                op, b, x0, tol=tol, maxiter=maxiter, M=self.M, l=self.l,
-                sigma=self.sigma, spectrum=self.spectrum,
-                backend=self.backend, sweep=self._single_sweep(tol, maxiter),
-                restart=self.restart,
-                residual_replacement=self.residual_replacement,
-                precision=self.precision,
-                **self.options)
-        return spec.fn(op, b, x0, tol=tol, maxiter=maxiter, M=self.M,
-                       l=self.l, sigma=self.sigma, spectrum=self.spectrum,
-                       backend=self.backend, **self.options)
+            r = self._mesh_session.solve(b, x0, tol=tol, maxiter=maxiter)
+        else:
+            op = self._ensure_op(b)
+            spec = self.spec
+            if getattr(b, "ndim", 1) == 2:
+                r = engine._solve_batched(
+                    spec, op, b, x0=x0, tol=tol, maxiter=maxiter, M=self.M,
+                    l=self.l, sigma=self.sigma, spectrum=self.spectrum,
+                    backend=self.backend, restart=self.restart,
+                    rr_period=self.residual_replacement,
+                    precision=self.precision,
+                    get_engine=(self._batched_engine_getter()
+                                if spec.batched == "vmap" else None),
+                    **self.options)
+            elif spec.name == "plcg_scan":
+                r = engine._run_plcg_scan(
+                    op, b, x0, tol=tol, maxiter=maxiter, M=self.M, l=self.l,
+                    sigma=self.sigma, spectrum=self.spectrum,
+                    backend=self.backend,
+                    sweep=self._single_sweep(tol, maxiter),
+                    restart=self.restart,
+                    residual_replacement=self.residual_replacement,
+                    precision=self.precision,
+                    **self.options)
+            else:
+                r = spec.fn(op, b, x0, tol=tol, maxiter=maxiter, M=self.M,
+                            l=self.l, sigma=self.sigma,
+                            spectrum=self.spectrum,
+                            backend=self.backend, **self.options)
+        if self.auto is not None:
+            r.info["auto"] = self.auto.as_info()
+        return r
 
     __call__ = solve
 

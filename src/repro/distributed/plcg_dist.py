@@ -521,6 +521,15 @@ class PreparedMeshSolver:
     def __init__(self, spec, A, mesh, *, M, l, sigma, spectrum,
                  comm=None, restart=None, residual_replacement=None,
                  precision=None, **options):
+        if l == "auto" or comm == "auto":
+            # the sentinels are resolved by prepare_on_mesh (which owns
+            # the tol the calibration clamps against); reaching this
+            # constructor with one is a wiring error, not a user error
+            raise ValueError(
+                "l='auto' / comm='auto' must be resolved before "
+                "PreparedMeshSolver construction; build the session via "
+                "prepare_on_mesh(...) (or session.Solver), which "
+                "calibrates and passes the concrete depth/policy")
         if spec.name not in _MESH_METHODS:
             if getattr(spec, "supports_mesh", False):
                 raise RuntimeError(
@@ -561,7 +570,8 @@ class PreparedMeshSolver:
         # on the capability flag); collective payloads stay in its
         # compute dtype by construction of the scan engine
         self.precision = as_precision_policy(precision)
-        self.options = dict(options)
+        self.auto = None            # AutoDecision when prepare_on_mesh
+        self.options = dict(options)    # calibrated l/comm
         self._sweeps: dict = {}         # strong refs to jitted sweeps
 
     @property
@@ -630,18 +640,40 @@ class PreparedMeshSolver:
 
 def prepare_on_mesh(spec, A, mesh, *, M, l, sigma, spectrum, backend=None,
                     comm=None, restart=None, residual_replacement=None,
-                    precision=None, **options) -> PreparedMeshSolver:
+                    precision=None, tol: float = 1e-8,
+                    **options) -> PreparedMeshSolver:
     """Build the prepared mesh session behind ``session.Solver(mesh=...)``
     (validation / promotion / resolution once; see
     :class:`PreparedMeshSolver`).  ``comm`` selects the reduction policy
     (``repro.core.comm.CommPolicy`` or mode string); ``restart`` /
     ``residual_replacement`` are the engine-normalized in-scan stability
-    knobs baked into every prepared pipelined sweep."""
+    knobs baked into every prepared pipelined sweep.
+
+    ``l="auto"`` / ``comm="auto"`` (the sentinels ``engine._prepare_depth``
+    / ``engine._prepare_comm`` pass through) are resolved HERE, once: the
+    operator is promoted early and ``repro.core.autotune.resolve_auto``
+    measures its SPMV / per-mode reduction / per-depth sweep latencies on
+    the live mesh (cached weakly per operator+config, so same-shape
+    sessions re-measure nothing), then solves the paper's latency model
+    for the fastest ``(l, comm, d)`` whose precision floor still reaches
+    ``tol`` -- which is why this entry point takes the session ``tol``.
+    The decision lands on ``session.auto`` (reported per solve as
+    ``SolveResult.info["auto"]``)."""
     del backend     # front-end warned; bypassed by construction here
-    return PreparedMeshSolver(spec, A, mesh, M=M, l=l, sigma=sigma,
+    decision = None
+    if l == "auto" or comm == "auto":
+        from repro.core.autotune import resolve_auto
+        op = as_dist_operator(A, mesh)      # cached; the session reuses it
+        decision = resolve_auto(op, l=l, comm=comm, tol=tol,
+                                precision=precision)
+        l, comm = decision.l, decision.comm
+        A, mesh = op, None                  # already bound to its mesh
+    sess = PreparedMeshSolver(spec, A, mesh, M=M, l=l, sigma=sigma,
                               spectrum=spectrum, comm=comm, restart=restart,
                               residual_replacement=residual_replacement,
                               precision=precision, **options)
+    sess.auto = decision
+    return sess
 
 
 def solve_on_mesh(spec, A, b, *, mesh, x0, tol, maxiter, M, l, sigma,
@@ -656,5 +688,5 @@ def solve_on_mesh(spec, A, b, *, mesh, x0, tol, maxiter, M, l, sigma,
                            spectrum=spectrum, backend=backend, comm=comm,
                            restart=restart,
                            residual_replacement=residual_replacement,
-                           precision=precision,
+                           precision=precision, tol=tol,
                            **options).solve(b, x0, tol=tol, maxiter=maxiter)

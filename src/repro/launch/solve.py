@@ -8,6 +8,7 @@ vmap RHS batching outside, one fused psum per iteration).
 
   PYTHONPATH=src python -m repro.launch.solve --nx 200 --l 2 --tol 1e-5
   PYTHONPATH=src python -m repro.launch.solve --method plcg_scan --nrhs 8
+  PYTHONPATH=src python -m repro.launch.solve --l auto --comm auto  # calibrated
   PYTHONPATH=src python -m repro.launch.solve --dryrun            # 16x16 mesh
 
 ``--serve --requests N`` switches to the prepared-solver serving mode:
@@ -28,11 +29,27 @@ import pathlib
 import time
 
 
+def _print_auto(info: dict) -> None:
+    """One line per calibrated decision: the chosen (l, comm, budget)
+    and the measured latencies that justified it (SolveResult.info["auto"],
+    see repro.core.autotune)."""
+    lat = info["latencies"]
+    glred = " ".join(f"{m}={v:.0f}us"
+                     for m, v in sorted(lat["glred_us"].items()))
+    print(f"  auto: l={info['l']} comm={info['comm']} "
+          f"budget={info['budget']} ({info['source']}; "
+          f"spmv={lat['spmv_us']:.0f}us glred {glred}; "
+          f"model score {info['score_us']:.0f}us/iter)")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--nx", type=int, default=200)
     ap.add_argument("--ny", type=int, default=0)
-    ap.add_argument("--l", type=int, default=2)
+    ap.add_argument("--l", type=str, default="2",
+                    help="pipeline depth: an int, or auto to calibrate the "
+                    "depth from measured latencies at session construction "
+                    "(repro.core.autotune; the decision is reported)")
     ap.add_argument("--iters", type=int, default=1500)
     ap.add_argument("--tol", type=float, default=1e-5)
     ap.add_argument("--method", type=str, default="plcg_scan",
@@ -52,10 +69,11 @@ def main(argv=None):
                     "fused megakernel, blockjacobi/chebyshev run "
                     "shard-local on a mesh (one psum per iteration)")
     ap.add_argument("--comm", type=str, default=None,
-                    choices=["blocking", "overlap", "ring"],
+                    choices=["blocking", "overlap", "ring", "auto"],
                     help="mesh reduction schedule: blocking psum (default), "
-                    "split psum_scatter + delayed all_gather (overlap), or "
-                    "staged ppermute ring (mesh runs only)")
+                    "split psum_scatter + delayed all_gather (overlap), "
+                    "staged ppermute ring (mesh runs only), or auto to pick "
+                    "the measured-fastest schedule at session construction")
     ap.add_argument("--comm-depth", type=int, default=None,
                     help="overlap staging depth d, 1 <= d <= l "
                     "(--comm overlap only; default l)")
@@ -91,7 +109,12 @@ def main(argv=None):
     from repro.launch.mesh import make_solver_mesh, make_solver_mesh_for
 
     ny = args.ny or args.nx
-    sigma = chebyshev_shifts(0.0, 8.0, args.l)
+    l = args.l if args.l == "auto" else int(args.l)
+    if l == "auto" and args.dryrun:
+        ap.error("--dryrun lowers one fixed-depth sweep; pass an int --l")
+    # with l="auto" the depth is unknown until the session calibrates, so
+    # the engine derives sigma from the (default) spectrum after resolution
+    sigma = None if l == "auto" else chebyshev_shifts(0.0, 8.0, l)
 
     if args.dryrun:
         from repro.distributed import DistPoisson, plcg_mesh_sweep
@@ -102,7 +125,7 @@ def main(argv=None):
         nx = max(args.nx, px * 128)       # production-scale local blocks
         nyy = max(ny, py * 128)
         op = DistPoisson(nx, nyy, mesh)
-        fn = plcg_mesh_sweep(op, l=args.l, iters=args.iters,
+        fn = plcg_mesh_sweep(op, l=l, iters=args.iters,
                              sigma=tuple(sigma), tol=args.tol)
         b = jax.ShapeDtypeStruct((nx, nyy), jnp.float32)
         t0 = time.time()
@@ -112,7 +135,7 @@ def main(argv=None):
         st = hlo_analysis.analyze(compiled.as_text())
         rec = {
             "arch": "poisson2d", "mesh": "multi" if args.multi_pod else "single",
-            "grid": [nx, nyy], "l": args.l, "iters": args.iters,
+            "grid": [nx, nyy], "l": l, "iters": args.iters,
             "compile_s": round(time.time() - t0, 1),
             "memory": {"peak_per_device":
                        ma.argument_size_in_bytes + ma.temp_size_in_bytes},
@@ -128,7 +151,7 @@ def main(argv=None):
         }
         out = pathlib.Path("experiments/dryrun/solver")
         out.mkdir(parents=True, exist_ok=True)
-        name = f"poisson2d__{'multi' if args.multi_pod else 'single'}__l{args.l}.json"
+        name = f"poisson2d__{'multi' if args.multi_pod else 'single'}__l{l}.json"
         (out / name).write_text(json.dumps(rec, indent=1))
         print(json.dumps(rec["roofline"], indent=1))
         print("memory/device GB:",
@@ -152,7 +175,9 @@ def main(argv=None):
     comm = None
     if args.comm_depth is not None and args.comm != "overlap":
         ap.error("--comm-depth requires --comm overlap")
-    if args.comm is not None:
+    if args.comm == "auto":
+        comm = "auto"       # sentinel, resolved at session construction
+    elif args.comm is not None:
         from repro.core import CommPolicy
         comm = CommPolicy(mode=args.comm, depth=args.comm_depth)
     if args.restart == "auto":
@@ -180,7 +205,7 @@ def main(argv=None):
         # prepared-solver serving mode: setup once, micro-batch requests
         from repro.core.session import Solver, SolverPool
         t0 = time.time()
-        solver = Solver(A, args.method, l=args.l, tol=args.tol,
+        solver = Solver(A, args.method, l=l, tol=args.tol,
                         maxiter=args.iters,
                         sigma=None if M is not None else sigma,
                         M=M, backend=args.backend, mesh=mesh, comm=comm,
@@ -199,11 +224,13 @@ def main(argv=None):
         nconv = sum(1 for r in results if r.converged)
         where = (f"{ndev}-device mesh {dict(mesh.shape)}" if mesh
                  else "1 device")
-        print(f"served {args.requests} requests ({args.method}, l={args.l}, "
+        print(f"served {args.requests} requests ({args.method}, l={solver.l}, "
               f"prec={args.prec}) on {args.nx}x{ny} over {where}: "
               f"setup {setup_s:.2f}s, drain {dt:.2f}s "
               f"({args.requests / max(dt, 1e-9):.1f} req/s), "
               f"{nconv}/{args.requests} converged")
+        if solver.auto is not None:
+            _print_auto(solver.auto.as_info())
         print(f"  batches={pool.stats['batches']} "
               f"occupancy={pool.occupancy:.3f} "
               f"lanes={pool.stats['lanes_real']}/"
@@ -223,7 +250,7 @@ def main(argv=None):
     t0 = time.time()
     # with a preconditioner the engine derives the shift interval from
     # M.precond_spectrum; the hand-picked (0, 8) sigma is only for M=None
-    r = solve(A, B, method=args.method, l=args.l, tol=args.tol,
+    r = solve(A, B, method=args.method, l=l, tol=args.tol,
               maxiter=args.iters, sigma=None if M is not None else sigma,
               M=M, backend=args.backend, mesh=mesh, comm=comm, **stab_kw)
     dt = time.time() - t0
@@ -231,11 +258,13 @@ def main(argv=None):
         else np.asarray(r.x).reshape(-1)
     res = np.linalg.norm(b_flat - A @ (x[0] if args.nrhs > 1 else x))
     where = f"{ndev}-device mesh {dict(mesh.shape)}" if mesh else "1 device"
-    print(f"{args.method} (l={args.l}, nrhs={args.nrhs}, "
+    print(f"{args.method} (l={r.info.get('l', l)}, nrhs={args.nrhs}, "
           f"prec={args.prec}, comm={r.info.get('comm', 'n/a')}) "
           f"on {args.nx}x{ny} over {where}: "
           f"{r.iters} iters, {dt:.2f}s, |b-Ax| = {res:.3e}, "
           f"converged={r.converged}")
+    if "auto" in r.info:
+        _print_auto(r.info["auto"])
     if args.nrhs > 1 and "per_rhs_iters" in r.info:
         # a batched lane that hits square-root breakdown re-seeds itself
         # in-scan when restart= is enabled (per-lane counters below);

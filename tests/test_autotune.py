@@ -1,0 +1,447 @@
+"""Autotuner tests: calibration caching, decision determinism, clamps.
+
+The contract under test (``repro.core.autotune``): ``l="auto"`` /
+``comm="auto"`` solve the paper's per-iteration latency model
+``t_iter ~ max(glred / l, spmv)`` over measured (or injected) latencies,
+clamped so the storage-precision residual-gap floor
+``~ eps_storage * (2l+1)`` never misses the requested ``tol`` -- and a
+prepared Solver calibrates exactly ONCE (audited via
+``CALIBRATION_EVENTS``), with repeated same-shape solves staying
+zero-retrace (``compile_counts``) and same-config sessions zero-
+re-measure (the weak-key calibration cache).
+
+Deterministic decision tests pin the latency table with
+``override_latencies`` (the injection hook; it bypasses the measurement
+cache, so fakes never leak into real calibrations).  Mesh-path tests run
+in-process on a (1, 1) mesh; live multi-device behaviour activates under
+the CI ``auto`` lane (8 forced host devices) and in a ``dist_env``
+subprocess for single-device hosts.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(code: str, env: dict) -> dict:
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=560)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+@pytest.fixture
+def events():
+    """Clean calibration-event log around one test."""
+    from repro.core import clear_calibration_events
+    from repro.core.autotune import CALIBRATION_EVENTS
+    clear_calibration_events()
+    yield CALIBRATION_EVENTS
+    clear_calibration_events()
+
+
+# ----------------------------- the clamp ----------------------------------
+
+def test_attainable_floor_grows_with_depth_and_storage_eps():
+    import jax.numpy as jnp
+
+    from repro.core.autotune import attainable_floor
+    floors = [attainable_floor(l, jnp.float32) for l in (1, 2, 3, 5, 8)]
+    assert floors == sorted(floors)                 # monotone in l
+    assert (attainable_floor(5, jnp.bfloat16)
+            > attainable_floor(5, jnp.float32)
+            > attainable_floor(5, jnp.float64))
+
+
+def test_depth_budget_per_precision_rung():
+    import jax.numpy as jnp
+
+    from repro.core import depth_budget
+    # f32 storage at tol=1e-6: eps*(2l+1) <= 1e-6 holds through l=3
+    assert depth_budget(1e-6, jnp.float32) == 3
+    # f64 storage is effectively unbounded at practical tolerances
+    assert depth_budget(1e-10, jnp.float64) == 8
+    # bf16 storage cannot reach 1e-6 at ANY depth: floor clamps to 1
+    assert depth_budget(1e-6, jnp.float32, precision="bf16") == 1
+    # tol=0 disables early stopping: no accuracy target, no clamp
+    assert depth_budget(0.0, jnp.float32) == 8
+    assert depth_budget(0.0, jnp.float32, precision="bf16") == 8
+    # the policy's *storage* side is what clamps: bf16x64 still eps(bf16)
+    assert depth_budget(1e-6, jnp.float64, precision="bf16x64") == 1
+
+
+# --------------------- deterministic model decisions ----------------------
+
+def _lat(spmv=100.0, blocking=300.0, **modes):
+    glred = {"blocking": blocking}
+    glred.update(modes)
+    return {"spmv_us": spmv, "glred_us": glred}
+
+
+def test_decide_solves_latency_model():
+    """max(glred/l, spmv) over the ladder: glred=300/spmv=100 breaks even
+    at l=3; a reduction-free problem stays at l=1 (shallowest tie)."""
+    import jax.numpy as jnp
+
+    from repro.core import decide
+    d = decide(_lat(100.0, 300.0), l="auto", comm="blocking", tol=0.0,
+               dtype=jnp.float64)
+    assert (d.l, d.comm.mode) == (3, "blocking")
+    assert d.score_us == pytest.approx(100.0)
+    # glred negligible: every depth scores spmv, ties break shallow
+    assert decide(_lat(100.0, 1.0), l="auto", comm="blocking", tol=0.0,
+                  dtype=jnp.float64).l == 1
+    # glred enormous: deepest admissible pipeline wins
+    assert decide(_lat(100.0, 10000.0), l="auto", comm="blocking", tol=0.0,
+                  dtype=jnp.float64).l == 8
+
+
+def test_decide_comm_auto_prefers_measured_cheapest():
+    import jax.numpy as jnp
+
+    from repro.core import decide
+    lat = _lat(100.0, 800.0, overlap=300.0)
+    d = decide(lat, l="auto", comm="auto", tol=0.0, dtype=jnp.float64)
+    # overlap's cheaper reduction hides at l=3 (300/3=100); blocking
+    # would need l=8 and ties at the same score -- deeper, so it loses
+    assert (d.l, d.comm.mode) == (3, "overlap")
+    assert d.depth == 3                     # overlap staging depth = l
+    # ring needs l >= hops+1: with 5 hops only l=8 qualifies, and its
+    # cheap hops beat blocking's 800/8 there
+    lat = dict(_lat(10.0, 800.0, ring=100.0), ring_hops=5)
+    d = decide(lat, l="auto", comm="auto", tol=0.0, dtype=jnp.float64)
+    assert (d.l, d.comm.mode) == (8, "ring")
+
+
+def test_decide_pinned_knobs_restrict_the_search():
+    import jax.numpy as jnp
+
+    from repro.core import CommPolicy, decide
+    # pinned l: only the comm axis is searched
+    d = decide(_lat(100.0, 800.0, overlap=200.0), l=2, comm="auto",
+               tol=0.0, dtype=jnp.float64)
+    assert d.l == 2 and d.comm.mode == "overlap"
+    # pinned comm policy object passes through verbatim (explicit depth)
+    pol = CommPolicy(mode="overlap", depth=2)
+    d = decide(_lat(100.0, 300.0, overlap=300.0), l="auto", comm=pol,
+               tol=0.0, dtype=jnp.float64)
+    assert d.comm is pol
+    assert d.l >= 2                         # staging depth needs l >= 2
+    # infeasible pin: ring over 5 hops with pinned shallow l
+    with pytest.raises(ValueError, match="no admissible"):
+        decide(dict(_lat(), ring_hops=5), l=2, comm="ring",
+               tol=0.0, dtype=jnp.float64)
+
+
+def test_decide_clamps_to_precision_budget():
+    """A glred-dominated table wants l=8, but bf16 storage at 2e-2 only
+    affords the floor through l=1 -- the clamp wins over the model."""
+    import jax.numpy as jnp
+
+    from repro.core import decide
+    from repro.core.autotune import attainable_floor
+    lat = _lat(100.0, 10000.0)
+    tol = 2.5e-2
+    d = decide(lat, l="auto", comm="blocking", tol=tol, dtype=jnp.float32,
+               precision="bf16")
+    assert d.l == 1 and d.budget == 1
+    assert attainable_floor(d.l, jnp.bfloat16) <= tol
+    # same table unclamped picks the deep pipeline
+    assert decide(lat, l="auto", comm="blocking", tol=tol,
+                  dtype=jnp.float64).l == 8
+
+
+def test_decide_warns_when_tol_below_depth1_floor():
+    import jax.numpy as jnp
+
+    from repro.core import decide
+    with pytest.warns(UserWarning, match="depth-1 precision floor"):
+        d = decide(_lat(), l="auto", comm="blocking", tol=1e-6,
+                   dtype=jnp.float32, precision="bf16")
+    assert d.l == 1                         # nothing shallower exists
+
+
+# ------------------------- front-end validation ---------------------------
+
+def test_prepare_depth_front_end_validation():
+    from repro.core import engine
+    spec = engine.get_method("plcg_scan")
+    assert engine._prepare_depth(spec, "auto") == "auto"
+    assert engine._prepare_depth(spec, 3) == 3
+    with pytest.raises(ValueError, match="l must be >= 1"):
+        engine._prepare_depth(spec, 0)
+    # methods without a pipeline depth reject the sentinel up front
+    with pytest.raises(ValueError, match="no pipeline depth"):
+        engine._prepare_depth(engine.get_method("cg"), "auto")
+
+
+def test_comm_auto_off_mesh_degrades_to_blocking(x64):
+    """comm='auto' means "fastest available schedule": off-mesh only the
+    blocking reduction exists, so auto resolves to it silently (explicit
+    comm='overlap' off-mesh still raises)."""
+    from repro.core import Solver, engine
+    from repro.operators import poisson2d
+    spec = engine.get_method("plcg_scan")
+    assert engine._prepare_comm(spec, "auto", on_mesh=False).is_blocking
+    assert engine._prepare_comm(spec, "auto", on_mesh=True) == "auto"
+    s = Solver(poisson2d(8, 8), method="plcg_scan", l=2, comm="auto")
+    assert s.comm.is_blocking and s.auto is None
+
+
+def test_auto_requires_operator_at_construction():
+    from repro.core import Solver
+    with pytest.raises(ValueError, match="pass n="):
+        Solver(lambda v: 2.0 * v, method="plcg_scan", l="auto")
+
+
+def test_override_table_validated():
+    from repro.core import override_latencies
+    with pytest.raises(ValueError, match="missing"):
+        with override_latencies({"spmv_us": 1.0}):
+            pass
+
+
+# ------------------ prepared sessions: the measure-once gate --------------
+
+def test_solver_auto_injected_deterministic_and_reported(x64, events):
+    """The CI-reproducible path: a fake latency table pins the decision
+    (glred=300/spmv=100 -> l=3), the session reports it in
+    SolveResult.info['auto'], and repeated same-shape solves neither
+    re-measure nor retrace."""
+    from repro.core import Solver, override_latencies
+    from repro.operators import poisson2d
+
+    A = poisson2d(16, 16)
+    b = np.asarray(A @ np.ones(A.n))
+    with override_latencies(_lat(100.0, 300.0)):
+        s = Solver(A, method="plcg_scan", l="auto", tol=1e-8, maxiter=200)
+    assert s.l == 3 and s.auto.source == "injected"
+    assert len(events) == 1                 # calibrated ONCE, at prepare
+    r1 = s.solve(b)
+    r2 = s.solve(b)
+    assert len(events) == 1                 # solves never re-calibrate
+    assert r1.converged and r2.converged
+    info = r1.info["auto"]
+    assert info["l"] == 3 and info["comm"] == "blocking"
+    assert info["source"] == "injected"
+    assert info["latencies"]["glred_us"]["blocking"] == 300.0
+    counts = s.compile_counts()
+    s.solve(b)
+    assert s.compile_counts() == counts     # zero retraces, same shape
+    # a different table changes the choice -- the decision is data-driven
+    with override_latencies(_lat(100.0, 10000.0)):
+        assert Solver(A, method="plcg_scan", l="auto", tol=1e-8,
+                      maxiter=200).l == 8
+    assert len(events) == 2
+
+
+def test_solver_auto_measured_once_per_operator_config(x64, events):
+    """Without injection the session measures REAL latencies -- exactly
+    once: a second same-config session hits the weak-key calibration
+    cache (zero new events) and reaches the same decision."""
+    from repro.core import Solver
+    from repro.operators import poisson2d
+
+    A = poisson2d(8, 8)
+    b = np.asarray(A @ np.ones(A.n))
+    s1 = Solver(A, method="plcg_scan", l="auto", tol=1e-6, maxiter=200)
+    assert len(events) == 1 and events[0][0] == "measured"
+    assert s1.auto.source == "measured"
+    lat = s1.auto.latencies
+    assert lat["spmv_us"] > 0
+    assert set(lat["iter_us"]) == {1, 2, 3, 5, 8}
+    s2 = Solver(A, method="plcg_scan", l="auto", tol=1e-6, maxiter=200)
+    assert len(events) == 1                 # cache hit: zero re-measure
+    assert s2.l == s1.l
+    assert s1.solve(b).converged
+
+
+def test_one_shot_solve_accepts_auto(x64, events):
+    from repro.core import override_latencies, solve
+    from repro.operators import poisson2d
+
+    A = poisson2d(16, 16)
+    b = np.asarray(A @ np.ones(A.n))
+    with override_latencies(_lat(100.0, 300.0)):
+        r = solve(A, b, method="plcg_scan", l="auto", tol=1e-8, maxiter=200)
+    assert r.converged and r.info["auto"]["l"] == 3
+    assert r.info["l"] == 3                 # the engine ran the choice
+
+
+# ----------------------- mesh path (in-process, (1,1)) --------------------
+
+def test_mesh_auto_resolved_at_preparation(x64, events):
+    """On a mesh the sentinels resolve inside prepare_on_mesh: the
+    prepared session carries the concrete (l, comm), validated against
+    the operator exactly like pinned values, and reports the decision."""
+    from repro.core import Solver, override_latencies
+    from repro.launch.mesh import make_mesh_compat
+    from repro.operators import poisson2d
+
+    mesh = make_mesh_compat((1, 1), ("data", "model"))
+    A = poisson2d(16, 16)
+    b = np.asarray(A @ np.ones(A.n)).reshape(16, 16)
+    with override_latencies(_lat(100.0, 300.0, overlap=100.0)):
+        s = Solver(A, method="plcg_scan", mesh=mesh, l="auto", comm="auto",
+                   tol=1e-8, maxiter=200)
+    assert len(events) == 1
+    assert (s.l, s.comm.mode) == (1, "overlap")     # 100/1 ties spmv=100
+    assert s._mesh_session.l == s.l
+    assert s._mesh_session.comm is s.comm
+    r = s.solve(b)
+    assert r.converged
+    assert r.info["auto"]["comm"] == "overlap"
+    assert r.info["comm"] == "overlap"
+
+
+def test_mesh_prepared_solver_rejects_unresolved_sentinels(x64):
+    from repro.core import engine
+    from repro.distributed.plcg_dist import PreparedMeshSolver
+    from repro.launch.mesh import make_mesh_compat
+    from repro.operators import poisson2d
+
+    mesh = make_mesh_compat((1, 1), ("data", "model"))
+    spec = engine.get_method("plcg_scan")
+    with pytest.raises(ValueError, match="resolved before"):
+        PreparedMeshSolver(spec, poisson2d(8, 8), mesh, M=None, l="auto",
+                           sigma=None, spectrum=None)
+
+
+def test_mesh_auto_never_exceeds_precision_budget(x64, events):
+    """The acceptance clamp: a deep-favoring injected table under bf16
+    storage must still respect depth_budget -- auto never picks a depth
+    whose precision floor misses tol."""
+    import jax.numpy as jnp
+
+    from repro.core import Solver, depth_budget, override_latencies
+    from repro.core.autotune import attainable_floor
+    from repro.launch.mesh import make_mesh_compat
+    from repro.operators import poisson2d
+
+    mesh = make_mesh_compat((1, 1), ("data", "model"))
+    A = poisson2d(16, 16)
+    tol = 2.5e-2
+    with override_latencies(_lat(100.0, 10000.0)):
+        s = Solver(A, method="plcg_scan", mesh=mesh, l="auto",
+                   precision="bf16", tol=tol, maxiter=200)
+    budget = depth_budget(tol, jnp.float64, precision="bf16")
+    assert s.l <= budget == 1
+    assert attainable_floor(s.l, jnp.bfloat16) <= tol
+    assert s.auto.budget == budget
+
+
+def test_mesh_measured_collective_signature_unchanged(x64, events):
+    """Measured calibration on the (1, 1) mesh: one shard means only the
+    blocking reduction is measurable, auto picks it, and the prepared
+    sweep's scan body keeps the ONE-psum signature."""
+    from repro.core import Solver
+    from repro.kernels.introspect import count_collectives_in_scan_bodies
+    from repro.launch.mesh import make_mesh_compat
+    from repro.operators import poisson2d
+
+    mesh = make_mesh_compat((1, 1), ("data", "model"))
+    A = poisson2d(16, 16)
+    b = np.asarray(A @ np.ones(A.n)).reshape(16, 16)
+    s = Solver(A, method="plcg_scan", mesh=mesh, l="auto", comm="auto",
+               tol=1e-6, maxiter=200)
+    assert len(events) == 1 and events[0][0] == "measured"
+    assert s.comm.is_blocking               # nshards == 1: only schedule
+    assert set(s.auto.latencies["glred_us"]) == {"blocking"}
+    r = s.solve(b)
+    assert r.converged
+    fn = s._mesh_session._get_sweep("plcg", 1e-6)(
+        iters=40, batched=False)
+    cc = count_collectives_in_scan_bodies(fn, b, b * 0, 20)[0]
+    assert cc["psum"] == 1 and cc["reduce_scatter"] == 0
+
+
+# ------------------- live multi-device (CI auto lane) ---------------------
+
+def test_auto_live_mesh_in_process(x64, events):
+    """Under the CI auto lane (8 forced host devices): measured
+    calibration on a live (2, 4) mesh sees all three reduction modes,
+    decides within the budget, solves correctly, and the chosen policy's
+    collective signature is structurally intact.  Skips on single-device
+    hosts (the subprocess test below covers those)."""
+    import jax
+
+    if len(jax.devices()) < 8:
+        pytest.skip("needs >= 8 host devices (CI auto lane forces 8)")
+    from repro.core import Solver
+    from repro.kernels.introspect import count_collectives_in_scan_bodies
+    from repro.launch.mesh import make_mesh_compat
+    from repro.operators import poisson2d
+
+    mesh = make_mesh_compat((2, 4), ("data", "model"))
+    nx = ny = 64
+    A = poisson2d(nx, ny)
+    b = np.asarray(A @ np.ones(A.n)).reshape(nx, ny)
+    s = Solver(A, method="plcg_scan", mesh=mesh, l="auto", comm="auto",
+               tol=1e-6, maxiter=400)
+    assert len(events) == 1 and events[0][0] == "measured"
+    lat = s.auto.latencies
+    # a real multi-shard mesh measures every mode; the (2, 4) torus
+    # rings over (2-1) + (4-1) = 4 neighbor hops
+    assert set(lat["glred_us"]) == {"blocking", "overlap", "ring"}
+    assert lat["ring_hops"] == 4 and lat["nshards"] == 8
+    assert 1 <= s.l <= s.auto.budget
+    r = s.solve(b)
+    assert r.converged and r.info["auto"]["source"] == "measured"
+    # chosen policy's structural signature: exactly one reduction path
+    fn = s._mesh_session._get_sweep("plcg", 1e-6)(iters=40, batched=False)
+    cc = count_collectives_in_scan_bodies(fn, b, b * 0, 20)[0]
+    if s.comm.mode == "blocking":
+        assert cc["psum"] == 1 and cc["reduce_scatter"] == 0
+    elif s.comm.mode == "overlap":
+        assert (cc["psum"], cc["reduce_scatter"], cc["all_gather"]) \
+            == (0, 1, 1)
+    else:                                   # ring: ppermutes only
+        assert cc["psum"] == 0 and cc["reduce_scatter"] == 0
+    # same-config session: zero re-measure through the weak-key cache
+    s2 = Solver(A, method="plcg_scan", mesh=mesh, l="auto", comm="auto",
+                tol=1e-6, maxiter=400)
+    assert len(events) == 1 and s2.l == s.l
+    counts = s.compile_counts()
+    s.solve(b)
+    assert s.compile_counts() == counts     # zero retraces
+
+
+@pytest.mark.slow
+def test_auto_live_mesh_subprocess(dist_env):
+    """Single-device-host coverage of the live path: the same (2, 4)
+    measured calibration in a subprocess with 8 forced host devices."""
+    res = _run(textwrap.dedent("""
+        import json, jax
+        jax.config.update("jax_enable_x64", True)
+        import numpy as np
+        from repro.core import Solver
+        from repro.core.autotune import CALIBRATION_EVENTS
+        from repro.launch.mesh import make_mesh_compat
+        from repro.operators import poisson2d
+        mesh = make_mesh_compat((2, 4), ("data", "model"))
+        nx = ny = 64
+        A = poisson2d(nx, ny)
+        b = np.asarray(A @ np.ones(A.n)).reshape(nx, ny)
+        s = Solver(A, method="plcg_scan", mesh=mesh, l="auto",
+                   comm="auto", tol=1e-6, maxiter=400)
+        r = s.solve(b)
+        s2 = Solver(A, method="plcg_scan", mesh=mesh, l="auto",
+                    comm="auto", tol=1e-6, maxiter=400)
+        print(json.dumps({
+            "events": len(CALIBRATION_EVENTS),
+            "modes": sorted(s.auto.latencies["glred_us"]),
+            "l": s.l, "budget": s.auto.budget, "l2": s2.l,
+            "comm": s.comm.mode, "conv": bool(r.converged),
+            "auto_info": r.info["auto"]["l"]}))
+    """), dist_env)
+    assert res["events"] == 1               # calibrated once, cached
+    assert res["modes"] == ["blocking", "overlap", "ring"]
+    assert 1 <= res["l"] <= res["budget"]
+    assert res["l2"] == res["l"]
+    assert res["conv"] and res["auto_info"] == res["l"]
