@@ -53,19 +53,20 @@ def main(argv=None) -> None:
 
     from benchmarks import (auto_bench, dist_bench, engine_bench,
                             kernels_bench, mp_bench, paper_figs, prec_bench,
-                            roofline, serve_bench, stab_bench)
+                            roofline, serve_bench, stab_bench, train_bench)
     if args.smoke:
         groups = (list(engine_bench.SMOKE) + list(kernels_bench.ALL)
                   + [paper_figs.table1_cost_model] + list(dist_bench.SMOKE)
                   + list(prec_bench.SMOKE) + list(serve_bench.SMOKE)
                   + list(stab_bench.SMOKE) + list(mp_bench.SMOKE)
-                  + list(auto_bench.SMOKE))
+                  + list(auto_bench.SMOKE) + list(train_bench.SMOKE))
     else:
         groups = (list(paper_figs.ALL) + list(kernels_bench.ALL)
                   + list(engine_bench.ALL) + list(dist_bench.ALL)
                   + list(prec_bench.ALL) + list(serve_bench.ALL)
                   + list(stab_bench.ALL) + list(mp_bench.ALL)
-                  + list(auto_bench.ALL) + list(roofline.ALL))
+                  + list(auto_bench.ALL) + list(train_bench.ALL)
+                  + list(roofline.ALL))
     print("name,us_per_call,derived")
     failures = 0
     all_rows: list[tuple] = []

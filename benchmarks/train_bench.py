@@ -1,0 +1,107 @@
+"""Newton-CG training benchmarks: the deep-pipelined HVP inner loop as
+the optimizer of an end-to-end training step.
+
+Same subprocess pattern as ``dist_bench``: the payload runs on a FORCED
+4-device host platform so the (2, 2) mesh trainer's collectives are a
+real schedule, and the structural rows are counted in the traced sweep
+(wall-clock on a forced CPU mesh is NOT a perf claim -- the structural
+columns are the probative metric, exactly like ``dist/``).  Rows:
+
+* ``train/newton_step_us_4dev`` -- mean end-to-end outer-step time of
+  the prepared mesh ``NewtonPCGTrainer`` on the reduced LM config
+  (post-warmup, so zero-retrace serving is what is measured; the
+  derived column carries the compile count per sweep, which must be 1);
+* ``train/inner_solve_us_4dev`` -- the inner ``(GGN+lambda I)d=-g``
+  solve alone; derived carries ``psums_per_iter`` counted in the traced
+  sweep body -- the paper's ONE stacked reduction per p(l)-CG
+  iteration, now with HVPs as the overlapped SPMV;
+* ``train/hvp_vs_glred_us_4dev`` -- the autotuner's measured HVP
+  latency (value) against its per-mode reduction latencies (derived),
+  i.e. the actual inputs ``l="auto"`` solved ``max(glred/l, hvp)``
+  over, plus the chosen ``(l, comm)``.
+"""
+from __future__ import annotations
+
+from benchmarks.dist_bench import _rows_forced
+
+_TRAIN_PAYLOAD = r"""
+import json, time
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+from repro.configs import get_reduced
+from repro.kernels.introspect import count_primitive_in_scan_bodies
+from repro.models import init_params, loss_fn
+from repro.training import NewtonPCGConfig, NewtonPCGTrainer
+from repro.training.data import synth_batch
+
+mesh = Mesh(np.array(jax.devices()[:4]).reshape(2, 2), ("data", "model"))
+cfg = get_reduced("qwen3-14b")
+lf = lambda p, b: loss_fn(cfg, p, b)
+rows = []
+
+ncfg = NewtonPCGConfig(l=2, cg_iters=8, lr=0.5)
+tr = NewtonPCGTrainer(lf, ncfg, mesh=mesh)
+params = init_params(cfg, jax.random.PRNGKey(0))
+params, stats = tr.step(params, synth_batch(cfg, 0, 2, 64, seed=0))
+
+steps = 2
+t0 = time.perf_counter()
+for i in range(1, 1 + steps):
+    params, stats = tr.step(params, synth_batch(cfg, i, 2, 64, seed=0))
+step_us = (time.perf_counter() - t0) / steps * 1e6
+compiles = max(tr.compile_counts().values())
+rows.append(["train/newton_step_us_4dev", step_us,
+             f"l={ncfg.l};cg_iters={ncfg.cg_iters};"
+             f"inner_iters={stats['cg_iters']};"
+             f"loss={float(stats['loss']):.3f};compiles_per_sweep={compiles};"
+             f"zero_retrace={compiles == 1}"])
+
+op = tr.op
+from jax.flatten_util import ravel_pytree
+p_flat = tr._replicate(ravel_pytree(params)[0])
+batch = synth_batch(cfg, 9, 2, 64, seed=0)
+loss, g = tr._val_grad(p_flat, batch)
+op.bind(p_flat, batch)
+bb = tr._replicate(op.pad(-g))
+jax.block_until_ready(tr.solver.solve(bb).x)
+t0 = time.perf_counter()
+r = tr.solver.solve(bb)
+jax.block_until_ready(r.x)
+solve_us = (time.perf_counter() - t0) * 1e6
+raw = next(iter(tr.solver._mesh_session._sweeps.values()))
+b0 = jnp.zeros((op.n_pad,), jnp.float32)
+# the HVP itself scans over the LM's layers, so the traced program nests
+# scan bodies -- the gate is the TOTAL bare-psum count across them
+psums = sum(count_primitive_in_scan_bodies(
+    raw, "psum", op.context, b0, jnp.zeros_like(b0), ncfg.cg_iters))
+rows.append(["train/inner_solve_us_4dev", solve_us,
+             f"psums_per_iter={psums};gate=1;n={op.n};"
+             f"inner_iters={int(r.iters)};"
+             f"hvps_hidden_per_reduction={ncfg.l}"])
+
+acfg = NewtonPCGConfig(l="auto", cg_iters=8, lr=0.5)
+tra = NewtonPCGTrainer(lf, acfg, mesh=mesh, comm="auto")
+p2 = init_params(cfg, jax.random.PRNGKey(1))
+p2, astats = tra.step(p2, synth_batch(cfg, 0, 2, 64, seed=1))
+info = astats["auto"]
+lat = info["latencies"]
+glred = ";".join(f"glred_{m}_us={v:.0f}"
+                 for m, v in sorted(lat["glred_us"].items()))
+rows.append(["train/hvp_vs_glred_us_4dev", lat["spmv_us"],
+             f"hvp_us={lat['spmv_us']:.0f};{glred};chosen_l={info['l']};"
+             f"comm={info['comm']};source={info['source']}"])
+print(json.dumps(rows))
+"""
+
+
+def train_rows():
+    """train/ row family: end-to-end Newton step time, the inner solve's
+    collective signature, and the measured HVP-vs-reduction latencies,
+    all on a forced 4-device (2, 2) mesh."""
+    return _rows_forced(_TRAIN_PAYLOAD, 4)
+
+
+ALL = [train_rows]
+SMOKE = [train_rows]

@@ -2,23 +2,79 @@
 inner solver of a second-order optimizer (HVP = the overlapped 'SPMV').
 
     PYTHONPATH=src python examples/newton_cg_training.py
+    PYTHONPATH=src python examples/newton_cg_training.py --l auto
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 PYTHONPATH=src \
+        python examples/newton_cg_training.py --mesh 2x2 --comm overlap
+
+The prepared NewtonPCGTrainer compiles its sweeps at step 1 and rebinds
+fresh (params, batch) into them afterwards -- watch the reported compile
+counts stay at 1 while the loss falls.
 """
+import argparse
+
 import jax
+import numpy as np
 
 from repro.configs import get_reduced
 from repro.models import init_params, loss_fn
-from repro.training import NewtonPCGConfig, newton_pcg_step
+from repro.training import NewtonPCGConfig, NewtonPCGTrainer
 from repro.training.data import synth_batch
 
-cfg = get_reduced("qwen3-14b")
-params = init_params(cfg, jax.random.PRNGKey(0))
-ncfg = NewtonPCGConfig(l=2, cg_iters=8, lr=0.5)
-lf = lambda p, b: loss_fn(cfg, p, b)  # noqa: E731
-step = jax.jit(lambda p, b: newton_pcg_step(lf, p, b, ncfg))
 
-for i in range(5):
-    batch = synth_batch(cfg, i, batch=4, seq=64)
-    params, stats = step(params, batch)
-    print(f"step {i}: loss {float(stats['loss']):.4f} "
-          f"|g| {float(stats['grad_norm']):.3f} "
-          f"cg_breakdown={bool(stats['cg_breakdown'])}")
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-14b")
+    ap.add_argument("--steps", type=int, default=5)
+    ap.add_argument("--l", default="2",
+                    help="pipeline depth: an int, or 'auto' to calibrate "
+                         "against the measured HVP latency")
+    ap.add_argument("--cg-iters", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=0.5)
+    ap.add_argument("--mesh", default=None, metavar="RxC",
+                    help="force a (data, model) mesh, e.g. 2x2 (needs "
+                         "enough devices: XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=4)")
+    ap.add_argument("--comm", default=None,
+                    choices=["blocking", "overlap", "ring", "auto"],
+                    help="reduction policy of the inner solve on a mesh")
+    ap.add_argument("--precision", default=None, choices=["bf16"],
+                    help="inner-solve window storage precision")
+    args = ap.parse_args(argv)
+
+    mesh = None
+    if args.mesh:
+        r, c = (int(x) for x in args.mesh.lower().split("x"))
+        if len(jax.devices()) < r * c:
+            raise SystemExit(
+                f"--mesh {args.mesh} needs {r * c} devices, have "
+                f"{len(jax.devices())} (set XLA_FLAGS="
+                f"--xla_force_host_platform_device_count={r * c})")
+        mesh = jax.sharding.Mesh(
+            np.array(jax.devices()[:r * c]).reshape(r, c),
+            ("data", "model"))
+
+    cfg = get_reduced(args.arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    depth = args.l if args.l == "auto" else int(args.l)
+    ncfg = NewtonPCGConfig(l=depth, cg_iters=args.cg_iters, lr=args.lr)
+    lf = lambda p, b: loss_fn(cfg, p, b)  # noqa: E731
+    trainer = NewtonPCGTrainer(lf, ncfg, mesh=mesh, comm=args.comm,
+                               precision=args.precision)
+
+    for i in range(args.steps):
+        batch = synth_batch(cfg, i, batch=4, seq=64)
+        params, stats = trainer.step(params, batch)
+        compiles = max(trainer.compile_counts().values(), default=0)
+        line = (f"step {i}: loss {float(stats['loss']):.4f} "
+                f"|g| {float(stats['grad_norm']):.3f} "
+                f"cg_iters={stats['cg_iters']} "
+                f"converged={stats['cg_converged']} compiles={compiles}")
+        if i == 0 and stats.get("auto"):
+            line += (f"  [auto: l={stats['auto']['l']} "
+                     f"comm={stats['auto']['comm']}]")
+        print(line, flush=True)
+    return params
+
+
+if __name__ == "__main__":
+    main()

@@ -33,7 +33,8 @@ from .comm import CommPolicy, as_comm_policy
 from .engine import (as_operator, clear_batch_trace, describe_methods,
                      get_method, methods, methods_supporting, register,
                      solve)
-from .linop import LinearOperator, dense_operator, identity_preconditioner
+from .linop import (BindableOperator, LinearOperator, dense_operator,
+                    identity_preconditioner, is_bindable)
 from .precision import (PRECISION_MODES, PrecisionPolicy,
                         as_precision_policy)
 from .precond import (BlockJacobi, Chebyshev, Identity, Jacobi,
@@ -44,6 +45,7 @@ from .solver_cache import clear_solver_cache
 
 __all__ = [
     "AutoDecision",
+    "BindableOperator",
     "BlockJacobi",
     "Chebyshev",
     "CommPolicy",
@@ -70,6 +72,7 @@ __all__ = [
     "describe_methods",
     "get_method",
     "identity_preconditioner",
+    "is_bindable",
     "methods",
     "methods_supporting",
     "override_latencies",

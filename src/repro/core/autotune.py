@@ -268,16 +268,20 @@ def _measure_mesh(op, *, dtype, width: int, depths: tuple,
                 return acc
             glred["ring"] = _time_us(reduce_fn(ring_body), payload)
 
-    from repro.distributed.plcg_dist import plcg_mesh_sweep
+    from repro.distributed.plcg_dist import (_is_bindable_dist,
+                                             plcg_mesh_sweep)
     b = jnp.ones(tuple(op.global_shape), dtype)
     x0 = jnp.zeros_like(b)
+    # a bindable operator's probe sweep takes its context as the traced
+    # leading operand (same program shape the real solves reuse)
+    lead = (op.context,) if _is_bindable_dist(op) else ()
     iter_us = {}
     for cand in depths:
         sweep = plcg_mesh_sweep(
             op, l=cand, iters=PROBE_ITERS + cand + 1,
             sigma=tuple(chebyshev_shifts(0.0, 8.0, cand)), tol=0.0,
             precision=precision)
-        iter_us[cand] = _time_us(sweep, b, x0, PROBE_ITERS,
+        iter_us[cand] = _time_us(sweep, *lead, b, x0, PROBE_ITERS,
                                  reps=2) / PROBE_ITERS
     return {"spmv_us": spmv_us, "glred_us": glred, "iter_us": iter_us,
             "ring_hops": ring_hops, "nshards": nshards, "width": width}
@@ -348,7 +352,13 @@ def measured_latencies(target, *, dtype, backend=None, precision=None,
     depths = tuple(sorted(set(int(d) for d in depths)))
     width = 2 * max(depths) + 2    # deepest payload + the stability slot
     key = (kind, shape, meshkey, backend, pp, str(dtype), depths)
-    anchor = target if on_mesh else target.matvec
+    # single-device LinearOperators anchor on their (stable) matvec field;
+    # mesh and bindable operators anchor on the object itself (a bindable
+    # op's .matvec is an ephemeral bound method -- its key would die
+    # instantly and defeat the measure-once contract)
+    anchor = (target if on_mesh or callable(getattr(target, "matvec_ctx",
+                                                    None))
+              else target.matvec)
 
     def build():
         CALIBRATION_EVENTS.append(("measured", kind, shape, meshkey))

@@ -172,7 +172,13 @@ def build_comm_runtime(policy: CommPolicy, op, l: int) -> Optional[CommRuntime]:
 
 
 def _nshards(op) -> int:
-    """Number of shards the split reduction scatters over."""
+    """Number of shards the split reduction scatters over: the
+    operator's own ``nshards`` when it declares one (an operator may
+    scatter over a subset of the mesh axes, e.g. the FSDP axis only),
+    else the full device grid."""
+    n = getattr(op, "nshards", None)
+    if n is not None:
+        return int(n)
     import numpy as np
     return int(np.prod(list(op.mesh.shape.values())))
 

@@ -47,7 +47,7 @@ import numpy as np
 from . import solver_cache
 from .cg import classic_cg
 from .dlanczos import d_lanczos
-from .linop import LinearOperator, dense_operator
+from .linop import LinearOperator, dense_operator, is_bindable
 from .pcg import ghysels_pcg
 from .plcg import plcg
 from .precision import as_precision_policy
@@ -235,9 +235,14 @@ def get_method(name: str) -> MethodSpec:
 
 
 def as_operator(A, b=None) -> LinearOperator:
-    """Coerce ``A`` (LinearOperator | dense square array | matvec callable)
-    into a :class:`LinearOperator`."""
+    """Coerce ``A`` (LinearOperator | BindableOperator | dense square array
+    | matvec callable) into an operator the engine can run."""
     if isinstance(A, LinearOperator):
+        return A
+    if is_bindable(A):
+        # rebindable-context operator: pass through as-is -- the engine
+        # threads A.context into the jitted sweeps as a traced operand
+        # and keys its caches on the stable A.matvec_ctx callable
         return A
     if hasattr(A, "ndim") and getattr(A, "ndim") == 2:
         if A.shape[0] != A.shape[1]:
@@ -718,7 +723,7 @@ def _batched_engine(method_name: str, matvec, l: int, iters: int, sigma,
                     tol: float, prec, exploit_symmetry: bool, unroll: int,
                     backend, stencil_hw, restart=None, rr_period=None,
                     ritz_refresh: bool = True, k_budget=None,
-                    precision=None):
+                    precision=None, bindable: bool = False):
     """Jitted vmap(scan) engine, cached per configuration so repeated
     batched solves with the same operator/settings compile only once.
 
@@ -726,12 +731,18 @@ def _batched_engine(method_name: str, matvec, l: int, iters: int, sigma,
     pass a long-lived ``LinearOperator`` (rather than a fresh dense array
     each call, which ``as_operator`` wraps in a new closure) to benefit
     from the cache.  Entries of dead closures are evicted eagerly, so the
-    cache no longer pins operators the caller has dropped."""
+    cache no longer pins operators the caller has dropped.
+
+    ``bindable=True`` interprets ``matvec`` as ``matvec_ctx(context, v)``
+    and the returned engine takes ``(context, B, X0)``: the context is a
+    traced operand shared by every lane (``in_axes=(None, 0, 0)``), so
+    rebinding operator data between batched solves reuses the compiled
+    program."""
 
     def build():
-        engine = functools.partial(
-            _plcg_scan_engine, solver_cache.weakly_callable(matvec), l=l,
-            iters=iters, sigma=sigma, tol=tol,
+        mv = solver_cache.weakly_callable(matvec)
+        kwargs = dict(
+            l=l, iters=iters, sigma=sigma, tol=tol,
             prec=solver_cache.weakly_callable(prec),
             # diag fusion hint of a structured Preconditioner: captured as
             # an array constant (does not pin the preconditioner object)
@@ -741,6 +752,22 @@ def _batched_engine(method_name: str, matvec, l: int, iters: int, sigma,
             restart=restart, rr_period=rr_period,
             ritz_refresh=ritz_refresh, k_budget=k_budget,
             precision=precision)
+
+        if bindable:
+            def engine_ctx(ctx, bb, xx):
+                return _plcg_scan_engine(lambda v: mv(ctx, v), bb, xx,
+                                         **kwargs)
+
+            def _batched_ctx(ctx, Bb, Xb):
+                if len(BATCH_TRACE_EVENTS) < 4096:
+                    BATCH_TRACE_EVENTS.append(
+                        (method_name, tuple(Bb.shape), l))
+                return jax.vmap(engine_ctx,
+                                in_axes=(None, 0, 0))(ctx, Bb, Xb)
+
+            return jax.jit(_batched_ctx)
+
+        engine = functools.partial(_plcg_scan_engine, mv, **kwargs)
 
         def _batched(Bb, Xb):
             # trace-time side effect: fires once per XLA compilation, so
@@ -755,7 +782,7 @@ def _batched_engine(method_name: str, matvec, l: int, iters: int, sigma,
         (matvec, prec),
         (method_name, l, iters, sigma, tol, exploit_symmetry, unroll,
          backend, stencil_hw, restart, rr_period, ritz_refresh, k_budget,
-         as_precision_policy(precision)),
+         as_precision_policy(precision), bindable),
         build)
 
 
@@ -813,11 +840,12 @@ def _solve_batched_vmap(spec: MethodSpec, A: LinearOperator, B, *, x0, tol,
     # the stability slack bodies are pipeline re-fill, not extra updates:
     # an explicit k_budget freezes every lane at maxiter committed updates
     # (without stab, iters itself caps the count -- keep the graph as-is)
-    fn = build(spec.name, A.matvec, l, iters, sig, tol,
-               M, exploit_symmetry, unroll, backend,
+    bind = is_bindable(A)
+    fn = build(spec.name, A.matvec_ctx if bind else A.matvec, l, iters,
+               sig, tol, M, exploit_symmetry, unroll, backend,
                getattr(A, "stencil2d", None), restart, rr_period,
-               ritz_refresh, maxiter if stab else None, precision)
-    out = fn(Bj, X0)
+               ritz_refresh, maxiter if stab else None, precision, bind)
+    out = fn(A.context, Bj, X0) if bind else fn(Bj, X0)
     resn = np.asarray(out.resnorms)                     # (nrhs, iters)
     conv = np.asarray(out.converged)
     brk = np.asarray(out.breakdown)
@@ -916,13 +944,17 @@ def _run_plcg_scan(A, b, x0, *, tol, maxiter, M, l, sigma, spectrum,
     pp = as_precision_policy(precision)
     bj = jnp.asarray(b)
     x0j = None if x0 is None else jnp.asarray(x0)
-    x, resnorms, info = plcg_solve(A.matvec, bj, x0j, l=l, sigma=sig,
+    bind = is_bindable(A)
+    x, resnorms, info = plcg_solve(A.matvec_ctx if bind else A.matvec,
+                                   bj, x0j, l=l, sigma=sig,
                                    tol=tol, maxiter=maxiter, prec=M,
                                    backend=backend,
                                    stencil_hw=getattr(A, "stencil2d", None),
                                    sweep=sweep, restart=restart,
                                    residual_replacement=residual_replacement,
-                                   precision=precision, **kw)
+                                   precision=precision,
+                                   context=A.context if bind else None,
+                                   **kw)
     return SolveResult(
         x=x, resnorms=resnorms, iters=info["iterations"],
         converged=info["converged"], breakdowns=info["breakdowns"],

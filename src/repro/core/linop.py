@@ -41,6 +41,54 @@ class LinearOperator:
         return self.matvec(v)
 
 
+@dataclasses.dataclass(eq=False)
+class BindableOperator:
+    """Matrix-free SPD operator whose matvec closes over a *rebindable*
+    context pytree: ``matvec(v) = matvec_ctx(context, v)``.
+
+    The point is zero-retrace outer loops (Newton–CG training): a plain
+    ``LinearOperator`` closure would bake its captured arrays into the
+    compiled sweep as trace-time constants, forcing a retrace whenever the
+    operator data changes (new parameters, new batch).  Here the engine
+    threads ``context`` through every prepared sweep as a TRACED leading
+    operand and keys its compile caches on the *stable* ``matvec_ctx``
+    callable, so ``bind()``-ing fresh same-shape data between solves reuses
+    the one compiled program.
+
+    ``matvec_ctx`` must be a stable callable (an instance attribute or
+    module-level function, not a per-call lambda) with signature
+    ``(context, v) -> Av``; ``context`` may be any pytree of arrays.
+
+    ``eq=False`` keeps identity hashing -- instances are weak-cache keys.
+    """
+
+    matvec_ctx: Callable[[Any, Array], Array]
+    n: int
+    context: Any
+    diag: Optional[Array] = None
+    name: str = "A"
+    stencil2d: Optional[tuple] = None
+
+    def bind(self, context: Any) -> "BindableOperator":
+        """Swap in fresh operator data (same pytree structure/shapes)."""
+        self.context = context
+        return self
+
+    def matvec(self, v: Array) -> Array:
+        return self.matvec_ctx(self.context, v)
+
+    def __matmul__(self, v: Array) -> Array:
+        return self.matvec(v)
+
+    def __call__(self, v: Array) -> Array:
+        return self.matvec(v)
+
+
+def is_bindable(A: Any) -> bool:
+    """True when ``A`` carries a rebindable ``(context, v)`` matvec."""
+    return callable(getattr(A, "matvec_ctx", None)) and hasattr(A, "context")
+
+
 @dataclasses.dataclass(frozen=True)
 class Preconditioner:
     """SPD preconditioner; ``apply`` computes ``M^{-1} v``.

@@ -907,7 +907,7 @@ _SWEEP_CACHE = WeakCallableCache(maxsize=16)
 
 def _jitted_sweep(matvec, l, iters, sigma, tol, prec, exploit_symmetry,
                   unroll, backend, stencil_hw, restart=None, rr_period=None,
-                  ritz_refresh=True, precision=None):
+                  ritz_refresh=True, precision=None, bindable=False):
     """Cached jitted single sweep so repeated solves with the same
     operator/settings compile once.  Keyed on ``matvec``/``prec`` object
     identity through weak references: reuse the same callable across calls
@@ -917,12 +917,20 @@ def _jitted_sweep(matvec, l, iters, sigma, tol, prec, exploit_symmetry,
     The returned callable takes ``(b, x0, k_budget)``: the budget is a
     traced operand, so restart sweeps with shrinking budgets reuse the
     one compiled program.
+
+    ``bindable=True`` interprets ``matvec`` as a two-argument
+    ``matvec_ctx(context, v)`` (see :class:`~repro.core.linop.
+    BindableOperator`) and the returned callable takes
+    ``(context, b, x0, k_budget)``: the context pytree is a TRACED
+    leading operand, so rebinding operator data (new parameters, new
+    batch) between outer steps reuses the one compiled program.
     """
 
     def build():
-        fn = functools.partial(
-            plcg_scan, weakly_callable(matvec), l=l, iters=iters,
-            sigma=sigma, tol=tol, prec=weakly_callable(prec),
+        mv = weakly_callable(matvec)
+        kwargs = dict(
+            l=l, iters=iters, sigma=sigma, tol=tol,
+            prec=weakly_callable(prec),
             # fusion hint of a structured Preconditioner (None for bare
             # callables); the captured array does not pin the object
             prec_diag=getattr(prec, "inv_diag", None),
@@ -930,13 +938,17 @@ def _jitted_sweep(matvec, l, iters, sigma, tol, prec, exploit_symmetry,
             backend=backend, stencil_hw=stencil_hw,
             restart=restart, rr_period=rr_period, ritz_refresh=ritz_refresh,
             precision=precision)
+        if bindable:
+            return jax.jit(lambda ctx, bb, xx, kb: plcg_scan(
+                lambda v: mv(ctx, v), bb, xx, k_budget=kb, **kwargs))
+        fn = functools.partial(plcg_scan, mv, **kwargs)
         return jax.jit(lambda bb, xx, kb: fn(bb, xx, k_budget=kb))
 
     return _SWEEP_CACHE.get_or_build(
         (matvec, prec),
         (l, iters, sigma, tol, exploit_symmetry, unroll, backend,
          stencil_hw, restart, rr_period, ritz_refresh,
-         as_precision_policy(precision)),
+         as_precision_policy(precision), bindable),
         build)
 
 
@@ -988,12 +1000,26 @@ def run_restart_driver(sweep, b, x0, *, tol: float, maxiter: int,
             "iterations": int(k_done) + 1,
         }
     x = x0
+    # every (re-)entry must present the SAME placement to hit one
+    # compiled program: a restart re-enters with the previous sweep's
+    # OUTPUT -- committed, and on a mesh operator-sharded -- while x0's
+    # placement is whatever the caller chose, and both committedness
+    # and sharding key the jit cache.  Pin every entry to x0's sharding,
+    # but ONLY when x0 is itself committed: an uncommitted x0 (host-
+    # built zeros) has a default single-device sharding that is not an
+    # intended placement, and committing x to it would conflict with a
+    # mesh sweep's shard_map
+    x0_sharding = (getattr(x0, "sharding", None)
+                   if getattr(x0, "_committed", False) else None)
     resnorms: list[float] = []
     restarts = breakdowns = 0
     total_k = 0
     converged = False
     while total_k < maxiter:
         remaining = maxiter - total_k
+        if x0_sharding is not None:
+            import jax
+            x = jax.device_put(x, x0_sharding)
         x, resn, conv, brk, k_done = sweep(b, x, remaining)[:5]
         resnorms.extend(float(r) for r in np.asarray(resn) if r > 0)
         total_k += max(int(k_done) + 1, 1)
@@ -1022,7 +1048,7 @@ def plcg_solve(matvec, b, x0=None, *, l, sigma, tol=1e-8, maxiter=1000,
                stencil_hw: Optional[tuple] = None, sweep=None,
                restart: Optional[int] = None,
                residual_replacement: Optional[int] = None,
-               ritz_refresh: bool = True, precision=None):
+               ritz_refresh: bool = True, precision=None, context=None):
     """Driver around the jitted engine: explicit restart on square-root
     breakdown (paper Remark 8), happy-breakdown detection, and a GLOBAL
     iteration budget across restart sweeps (via the sweep's ``k_budget``
@@ -1042,6 +1068,11 @@ def plcg_solve(matvec, b, x0=None, *, l, sigma, tol=1e-8, maxiter=1000,
     tol/sigma/backend/restart configuration and enough ``iters``
     (``maxiter + l + 1`` plus ``stab_iter_slack`` on the in-scan path).
 
+    ``context`` (optional) switches to the bindable-operator protocol:
+    ``matvec`` is then a two-argument ``matvec_ctx(context, v)`` and the
+    context pytree is threaded through the jitted sweep as a traced
+    operand (no retrace when it is rebound between solves).
+
     Returns (x, resnorms, info dict).
     """
     x0 = jnp.zeros_like(b) if x0 is None else x0
@@ -1055,7 +1086,11 @@ def plcg_solve(matvec, b, x0=None, *, l, sigma, tol=1e-8, maxiter=1000,
         matvec, l, iters, tuple(sigma), tol, prec,
         exploit_symmetry, unroll, backend, stencil_hw,
         restart=restart, rr_period=residual_replacement,
-        ritz_refresh=ritz_refresh, precision=precision)
+        ritz_refresh=ritz_refresh, precision=precision,
+        bindable=context is not None)
+    if context is not None and sweep is None:
+        raw = fn
+        fn = lambda bb, xx, kb: raw(context, bb, xx, kb)  # noqa: E731
 
     def run_sweep(bb, xx, remaining):
         out = fn(bb, xx, remaining)

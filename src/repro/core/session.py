@@ -55,7 +55,7 @@ from typing import Any, Optional
 import numpy as np
 
 from . import engine
-from .linop import LinearOperator
+from .linop import LinearOperator, is_bindable
 from .results import SolveResult
 
 Array = Any
@@ -217,8 +217,13 @@ class Solver:
             return
 
         # single-device operator promotion (deferred only for a bare
-        # matvec callable with no dimension hint)
-        if isinstance(A, LinearOperator) or getattr(A, "ndim", None) == 2:
+        # matvec callable with no dimension hint).  Bindable operators
+        # must be caught before the bare-callable branch: they define
+        # __call__, and wrapping one in a LinearOperator would bake its
+        # context into the compiled sweeps as trace-time constants.
+        if is_bindable(A):
+            self._op = A
+        elif isinstance(A, LinearOperator) or getattr(A, "ndim", None) == 2:
             self._op = engine.as_operator(A)
         elif callable(A) and n is not None:
             self._op = LinearOperator(matvec=A, n=int(n), name="matvec")
@@ -265,15 +270,17 @@ class Solver:
                                               self.l))
             iters = maxiter + self.l + 1 + stab_iter_slack(
                 self.l, self.restart, self.residual_replacement, maxiter)
+            bind = is_bindable(self._op)
             self._prepared[key] = _jitted_sweep(
-                self._op.matvec, self.l, iters, sig, tol,
+                self._op.matvec_ctx if bind else self._op.matvec,
+                self.l, iters, sig, tol,
                 self.M, self.options.get("exploit_symmetry", True),
                 self.options.get("unroll", 1), self.backend,
                 getattr(self._op, "stencil2d", None),
                 restart=self.restart,
                 rr_period=self.residual_replacement,
                 ritz_refresh=self.options.get("ritz_refresh", True),
-                precision=self.precision)
+                precision=self.precision, bindable=bind)
             self.stats["prepared_builds"] += 1
         return self._prepared[key]
 
@@ -343,11 +350,18 @@ class Solver:
                                 if spec.batched == "vmap" else None),
                     **self.options)
             elif spec.name == "plcg_scan":
+                sweep = self._single_sweep(tol, maxiter)
+                if is_bindable(op):
+                    # bind the CURRENT context at call time: the raw
+                    # prepared sweep (kept in _prepared for the
+                    # compile_counts gate) takes it as a traced operand
+                    raw, ctx = sweep, op.context
+                    sweep = lambda bb, xx, kb: raw(ctx, bb, xx, kb)  # noqa: E731
                 r = engine._run_plcg_scan(
                     op, b, x0, tol=tol, maxiter=maxiter, M=self.M, l=self.l,
                     sigma=self.sigma, spectrum=self.spectrum,
                     backend=self.backend,
-                    sweep=self._single_sweep(tol, maxiter),
+                    sweep=sweep,
                     restart=self.restart,
                     residual_replacement=self.residual_replacement,
                     precision=self.precision,

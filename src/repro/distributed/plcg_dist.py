@@ -78,8 +78,19 @@ def _batch_spec(spec: P) -> P:
     return P(*((None,) + tuple(spec)))
 
 
+def _is_bindable_dist(op) -> bool:
+    """True for a distributed operator carrying a rebindable context:
+    ``matvec_local_ctx(context, v_local)`` plus ``context`` /
+    ``context_specs()`` (the mesh twin of ``repro.core.linop.
+    BindableOperator``)."""
+    return (callable(getattr(op, "matvec_local_ctx", None))
+            and hasattr(op, "context")
+            and callable(getattr(op, "context_specs", None)))
+
+
 def _shard_jit(op: DistributedOperator, one, *, batched: bool,
-               n_extra: int = 0, n_out: int = 4, trace_event=None):
+               n_extra: int = 0, n_out: int = 4, trace_event=None,
+               ctx_specs=None):
     """Wrap a per-shard local body into the jitted shard_map program.
 
     ``one(b_blk, x_blk, *extra)`` maps one local field block (plus
@@ -89,22 +100,32 @@ def _shard_jit(op: DistributedOperator, one, *, batched: bool,
     decomposition (extras are shared across lanes) and
     ``trace_event(shape)``, when given, logs a compile event like the
     single-device batched engine.
+
+    ``ctx_specs`` (a pytree of ``PartitionSpec`` from a bindable
+    operator's ``context_specs()``) prepends a traced context operand:
+    ``one(ctx, b_blk, x_blk, *extra)``, shared across vmapped lanes, so
+    rebinding the operator data between solves reuses the one compiled
+    shard_map program.
     """
     spec = op.spec()
+    n_ctx = 0 if ctx_specs is None else 1
     if batched:
-        def local_run(b_blk, x_blk, *extra):
+        def local_run(*args):
+            b_blk = args[n_ctx]
             if (trace_event is not None
                     and len(_engine.BATCH_TRACE_EVENTS) < 4096):
                 _engine.BATCH_TRACE_EVENTS.append(
                     trace_event(tuple(b_blk.shape)))
-            return jax.vmap(one, in_axes=(0, 0) + (None,) * n_extra)(
-                b_blk, x_blk, *extra)
+            in_axes = (None,) * n_ctx + (0, 0) + (None,) * n_extra
+            return jax.vmap(one, in_axes=in_axes)(*args)
         io_spec = _batch_spec(spec)
     else:
         local_run, io_spec = one, spec
+    in_specs = ((ctx_specs,) if n_ctx else ()) \
+        + (io_spec, io_spec) + (P(),) * n_extra
     fn = shard_map_compat(
         local_run, mesh=op.mesh,
-        in_specs=(io_spec, io_spec) + (P(),) * n_extra,
+        in_specs=in_specs,
         out_specs=(io_spec,) + (P(),) * n_out,
         check=False,
     )
@@ -188,6 +209,7 @@ def plcg_mesh_sweep(op: DistributedOperator, *, l: int, iters: int,
     sig = tuple(sigma)
     policy = as_comm_policy(comm)
     pp = as_precision_policy(precision)
+    bind = _is_bindable_dist(op)
 
     def build():
         # the cached jitted program must not pin the operator (the cache
@@ -197,9 +219,9 @@ def plcg_mesh_sweep(op: DistributedOperator, *, l: int, iters: int,
         resolve = _weak_prec_resolver(opref, prec)
         runtime = build_comm_runtime(policy, opref, l)
 
-        def one(b_blk, x_blk, k_budget):
+        def scan_body(matvec_local, b_blk, x_blk, k_budget):
             out = plcg_scan(
-                opref.matvec_local, b_blk.reshape(-1), x_blk.reshape(-1),
+                matvec_local, b_blk.reshape(-1), x_blk.reshape(-1),
                 l=l, iters=iters, sigma=sig, tol=tol,
                 prec=resolve(),
                 dot_local=opref.dot_local,
@@ -213,13 +235,27 @@ def plcg_mesh_sweep(op: DistributedOperator, *, l: int, iters: int,
                     out.breakdown, out.k_done, out.committed, out.restarts,
                     out.replacements)
 
+        if bind:
+            # the context is a traced leading operand of the shard_map
+            # program (sharded per the operator's context_specs), so
+            # rebinding operator data never retraces
+            def one(ctx, b_blk, x_blk, k_budget):
+                return scan_body(lambda v: opref.matvec_local_ctx(ctx, v),
+                                 b_blk, x_blk, k_budget)
+            ctx_specs = op.context_specs()
+        else:
+            def one(b_blk, x_blk, k_budget):
+                return scan_body(opref.matvec_local, b_blk, x_blk, k_budget)
+            ctx_specs = None
+
         return _shard_jit(op, one, batched=batched, n_extra=1, n_out=7,
-                          trace_event=lambda shape: ("plcg@mesh", shape, l))
+                          trace_event=lambda shape: ("plcg@mesh", shape, l),
+                          ctx_specs=ctx_specs)
 
     return _MESH_SWEEP_CACHE.get_or_build(
         (op, prec),
         ("plcg", l, iters, sig, tol, exploit_symmetry, batched, policy,
-         restart, rr_period, ritz_refresh, pp),
+         restart, rr_period, ritz_refresh, pp, bind),
         build)
 
 
@@ -238,16 +274,18 @@ def cg_mesh_sweep(op: DistributedOperator, *, iters: int, tol: float = 0.0,
     resnorms, resnorm0, converged, k_done)``.
     """
 
+    bind = _is_bindable_dist(op)
+
     def build():
         opref = weakref.proxy(op)       # see plcg_mesh_sweep
         resolve = _weak_prec_resolver(opref, prec)
 
-        def one(b_blk, x_blk):
+        def cg_body(matvec_local, b_blk, x_blk):
             plocal = resolve()
             bflat = b_blk.reshape(-1)
             bnorm2 = opref.reduce_scalars(opref.dot_local(bflat, bflat))
             bnorm2 = jnp.where(bnorm2 == 0, 1.0, bnorm2)
-            r0 = bflat - opref.matvec_local(x_blk.reshape(-1))
+            r0 = bflat - matvec_local(x_blk.reshape(-1))
             if plocal is None:
                 gamma0 = opref.reduce_scalars(opref.dot_local(r0, r0))
                 rr0 = gamma0
@@ -268,7 +306,7 @@ def cg_mesh_sweep(op: DistributedOperator, *, iters: int, tol: float = 0.0,
                     rr = gamma
                 else:
                     x, r, p, gamma, rr, k, done = st
-                s = opref.matvec_local(p)
+                s = matvec_local(p)
                 sp = opref.reduce_scalars(
                     opref.dot_local(s, p))                  # sync psum 1
                 alpha = gamma / sp
@@ -303,10 +341,20 @@ def cg_mesh_sweep(op: DistributedOperator, *, iters: int, tol: float = 0.0,
             return (st[0].reshape(b_blk.shape), resn, jnp.sqrt(rr0),
                     st[-1], st[-2])
 
-        return _shard_jit(op, one, batched=batched)
+        if bind:
+            def one(ctx, b_blk, x_blk):
+                return cg_body(lambda v: opref.matvec_local_ctx(ctx, v),
+                               b_blk, x_blk)
+            ctx_specs = op.context_specs()
+        else:
+            def one(b_blk, x_blk):
+                return cg_body(opref.matvec_local, b_blk, x_blk)
+            ctx_specs = None
+
+        return _shard_jit(op, one, batched=batched, ctx_specs=ctx_specs)
 
     return _MESH_SWEEP_CACHE.get_or_build(
-        (op, prec), ("cg", iters, tol, batched), build)
+        (op, prec), ("cg", iters, tol, batched, bind), build)
 
 
 # --------------------------------------------------------------------------
@@ -360,6 +408,14 @@ def _mesh_plcg(op, b, x0, *, tol, maxiter, l, sigma, prec=None,
                                    restart=restart,
                                    rr_period=residual_replacement,
                                    ritz_refresh=ritz_refresh, precision=pp)
+    if _is_bindable_dist(op):
+        # bind the CURRENT context at call time; the raw sweep (cached /
+        # strongly held by a session) takes it as a traced operand
+        raw_get = get_sweep
+
+        def get_sweep(*, iters, batched):
+            raw, ctx = raw_get(iters=iters, batched=batched), op.context
+            return lambda bb, xx, kb: raw(ctx, bb, xx, kb)
     base_info = {"l": l, "sigma": list(sig), "backend": None,
                  "mesh": dict(op.mesh.shape), "comm": policy.mode,
                  "precision": None if pp.is_default else pp,
@@ -455,6 +511,9 @@ def _mesh_cg(op, b, x0, *, tol, maxiter, prec=None,
             return cg_mesh_sweep(op, iters=iters, tol=tol, batched=batched,
                                  prec=prec)
     fn = get_sweep(iters=maxiter, batched=batched)
+    if _is_bindable_dist(op):
+        raw, ctx = fn, op.context
+        fn = lambda bb, xx: raw(ctx, bb, xx)  # noqa: E731
     x, resn, resn0, conv, k_done = fn(b, x0)
     base_info = {"method": "cg[mesh]", "mesh": dict(op.mesh.shape),
                  "psums_per_iter": 2,

@@ -14,16 +14,15 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import ARCHS, get_config, get_reduced
 from repro.launch.mesh import make_mesh_for
 from repro.launch.steps import build_train_step
-from repro.models import init_params, loss_fn, param_shardings
+from repro.models import init_params, loss_fn
 from repro.models import sharding as shd
 from repro.training import (AdamWConfig, CheckpointManager, NewtonPCGConfig,
-                            Prefetcher, StragglerMonitor, adamw_init,
-                            newton_pcg_step)
+                            NewtonPCGTrainer, Prefetcher, StragglerMonitor,
+                            adamw_init)
 
 
 def main(argv=None):
@@ -36,8 +35,13 @@ def main(argv=None):
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--optimizer", default="adamw",
                     choices=["adamw", "adamw8bit", "newton_pcg"])
-    ap.add_argument("--pipeline-depth", type=int, default=2,
-                    help="p(l)-CG depth for newton_pcg")
+    ap.add_argument("--pipeline-depth", default="2",
+                    help="p(l)-CG depth for newton_pcg: an int, or 'auto' "
+                         "to calibrate against measured HVP latency")
+    ap.add_argument("--inner-comm", default=None,
+                    choices=["blocking", "overlap", "ring", "auto"],
+                    help="reduction policy of the newton_pcg inner solve "
+                         "on a mesh")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=10)
     ap.add_argument("--model-parallel", type=int, default=1)
@@ -48,8 +52,13 @@ def main(argv=None):
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
     ndev = len(jax.devices())
-    if ndev > 1:
-        mesh = make_mesh_for(ndev, model_parallel=args.model_parallel)
+    mesh = (make_mesh_for(ndev, model_parallel=args.model_parallel)
+            if ndev > 1 else None)
+    if mesh is not None and args.optimizer != "newton_pcg":
+        # newton_pcg keeps the global sharding context UNSET: its GGN
+        # mesh operator runs the model shard-locally inside shard_map
+        # (where global sharding constraints cannot apply) and shards
+        # the flat parameter vector along the FSDP axis itself
         shd.set_mesh(mesh)
     params = init_params(cfg, jax.random.PRNGKey(args.seed))
 
@@ -60,9 +69,13 @@ def main(argv=None):
     start_step = 0
 
     if args.optimizer == "newton_pcg":
-        ncfg = NewtonPCGConfig(l=args.pipeline_depth, lr=args.lr)
+        depth = (args.pipeline_depth if args.pipeline_depth == "auto"
+                 else int(args.pipeline_depth))
+        ncfg = NewtonPCGConfig(l=depth, lr=args.lr)
         lf = lambda p, b: loss_fn(cfg, p, b, remat=args.remat)  # noqa: E731
-        step_fn = jax.jit(lambda p, b: newton_pcg_step(lf, p, b, ncfg))
+        trainer = NewtonPCGTrainer(lf, ncfg, mesh=mesh,
+                                   comm=args.inner_comm, monitor=monitor)
+        step_fn = trainer.step
         opt_state = None
         if ckpt and ckpt.latest_step() is not None:
             start_step, tree, _ = ckpt.restore()

@@ -5,10 +5,14 @@ from .checkpoint import CheckpointManager
 from .data import Prefetcher, synth_batch
 from .monitor import StragglerMonitor
 from .newton_pcg import NewtonPCGConfig, newton_pcg_step
+from .ggn import (GGNDistOperator, GGNOperator, estimate_ggn_lmax, ggn_hvp)
+from .trainer import NewtonPCGTrainer
 
 __all__ = [
     "AdamWConfig", "adamw_init", "adamw_update", "abstract_adamw_state",
     "compress_grads", "decompress_grads", "compress_init",
     "CheckpointManager", "Prefetcher", "synth_batch", "StragglerMonitor",
     "NewtonPCGConfig", "newton_pcg_step",
+    "GGNDistOperator", "GGNOperator", "NewtonPCGTrainer",
+    "estimate_ggn_lmax", "ggn_hvp",
 ]

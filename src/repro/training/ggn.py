@@ -1,0 +1,307 @@
+"""GGN operators: the damped Gauss-Newton Hessian as a solver operand.
+
+Newton-CG training maps onto the paper's cost model exactly (see
+``newton_pcg.py``): SPMV <-> one GGN Hessian-vector product, GLRED <->
+the CG dot products over the (FSDP-sharded) flat parameter vector, and
+``l`` <-> how many HVPs one global reduction is hidden behind.  This
+module packages the damped GGN ``(J^T H J + lambda I)`` as operators the
+prepared-solver engine (``repro.core.session``) can drive directly:
+
+  * :class:`GGNOperator` -- single-device, a
+    :class:`repro.core.linop.BindableOperator`: the HVP closure is built
+    ONCE per (pytree structure, damping) and the ``(p_flat, batch)``
+    context is threaded through every compiled sweep as a traced operand,
+    so successive outer steps rebind fresh parameters/batches with ZERO
+    retraces;
+  * :class:`GGNDistOperator` -- the mesh twin, implementing the
+    ``repro.distributed.operator.DistributedOperator`` protocol over the
+    flat parameter vector sharded along the FSDP axis (the same
+    ``embed -> data`` rule ``models/sharding.py`` applies to the weight
+    matrices).  ``matvec_local_ctx`` all-gathers the parameter and
+    direction shards (the FSDP param-gather analog), runs the HVP
+    shard-locally, and returns this shard's chunk; the CG dots then
+    reduce through the engine's ONE stacked ``psum`` per iteration
+    (``reduce_scalars``), with the split-phase / ring forms backing
+    ``comm="overlap"`` / ``comm="ring"``.
+
+:func:`estimate_ggn_lmax` replaces a hardcoded spectral bound with a
+cheap power-iteration estimate, following the
+``BlockJacobi.precond_spectrum`` conventions (fixed seed, Rayleigh
+quotient, 1.05 safety factor), so the Chebyshev shifts of the auxiliary
+basis track the actual GGN spectrum.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.flatten_util import ravel_pytree
+from jax.sharding import Mesh, PartitionSpec as P
+
+from ..core.linop import BindableOperator
+from ..models import sharding as shd
+
+
+def ggn_hvp(loss_fn: Callable, unravel: Callable, p_flat, batch, v_flat,
+            damping):
+    """Damped GGN product ``(J^T H J + damping) v`` on flat vectors.
+
+    One forward-over-reverse pass (jvp of grad): compute-heavy,
+    reduction-free -- precisely the operation the deep pipeline overlaps
+    the global reduction with.  For softmax-CE composites the Fisher ==
+    GGN, so the hvp of the scalar loss is the (PSD) Gauss-Newton matrix.
+    """
+    def f(q):
+        return loss_fn(unravel(q), batch)
+
+    _, hv = jax.jvp(jax.grad(f), (p_flat,), (v_flat,))
+    return hv + damping * v_flat
+
+
+def estimate_ggn_lmax(loss_fn: Callable, unravel: Callable, p_flat, batch,
+                      *, damping: float, power_iters: int = 8) -> float:
+    """Power-iteration estimate of ``lmax(GGN + damping I)``.
+
+    Same conventions as ``BlockJacobi.precond_spectrum``: fixed
+    ``default_rng(7)`` start vector, Rayleigh-quotient iteration, final
+    1.05 safety factor.  Host-side (called once per prepared trainer,
+    never inside a jitted step); the HVP itself is jitted so the
+    ``power_iters`` products reuse one compiled program.
+    """
+    n = int(p_flat.shape[0])
+    v = jnp.asarray(np.random.default_rng(7).standard_normal(n),
+                    dtype=p_flat.dtype)
+    hvp = jax.jit(functools.partial(ggn_hvp, loss_fn, unravel))
+    lam = float(damping)
+    for _ in range(max(int(power_iters), 0)):
+        w = hvp(p_flat, batch, v, damping)
+        lam = float(jnp.vdot(v, w) / jnp.vdot(v, v))
+        v = w / jnp.linalg.norm(w)
+    return 1.05 * lam
+
+
+class GGNOperator(BindableOperator):
+    """Damped GGN of ``loss_fn`` at ``(params, batch)`` as a bindable
+    SPD operator over the flat parameter vector.
+
+    The flatten/unravel pair is built ONCE here (not per HVP): the
+    operator owns ``unravel`` and its context carries the already-flat
+    ``p_flat``, so the inner solve's k matvecs never re-flatten the
+    pytree.  ``bind(p_flat, batch)`` swaps in the next outer step's data
+    without touching the compiled sweeps.
+    """
+
+    def __init__(self, loss_fn: Callable, params, batch, *,
+                 damping: float = 1e-3, name: str = "ggn"):
+        p_flat, unravel = ravel_pytree(params)
+        self.loss_fn = loss_fn
+        self.unravel = unravel
+        self.damping = float(damping)
+        dmp = self.damping
+
+        def matvec_ctx(ctx, v):
+            pf, bt = ctx
+            return ggn_hvp(loss_fn, unravel, pf, bt, v, dmp)
+
+        super().__init__(matvec_ctx=matvec_ctx, n=int(p_flat.shape[0]),
+                         context=(p_flat, batch), name=name)
+
+    def bind(self, p_flat, batch) -> "GGNOperator":
+        """Rebind to fresh (flat params, batch); shapes must match."""
+        if tuple(p_flat.shape) != (self.n,):
+            raise ValueError(
+                f"flat parameter shape {tuple(p_flat.shape)} does not match "
+                f"operator dimension ({self.n},)")
+        self.context = (p_flat, batch)
+        return self
+
+    def lmax_estimate(self, *, power_iters: int = 8) -> float:
+        """Power-iteration ``lmax`` bound at the CURRENT context."""
+        p_flat, batch = self.context
+        return estimate_ggn_lmax(self.loss_fn, self.unravel, p_flat, batch,
+                                 damping=self.damping,
+                                 power_iters=power_iters)
+
+
+def _fsdp_axis(mesh: Mesh) -> str:
+    """The FSDP shard axis for a flat parameter vector on ``mesh``: the
+    axis ``models/sharding.py`` maps the ``embed`` logical dimension to
+    (``data`` under the default rules), falling back to the first mesh
+    axis when the rule names an axis the mesh does not have."""
+    rule = shd.DEFAULT_RULES.get("embed") or ("data",)
+    cand = rule[0] if rule[0] is not None else "data"
+    return cand if cand in mesh.axis_names else mesh.axis_names[0]
+
+
+class GGNDistOperator:
+    """Damped GGN over the FSDP-sharded flat parameter vector.
+
+    Implements the mesh ``DistributedOperator`` protocol *and* the
+    bindable-context extension (``matvec_local_ctx`` / ``context`` /
+    ``context_specs``), so prepared mesh sweeps thread
+    ``(p_flat, batch)`` as a traced, sharded operand -- outer training
+    steps rebind without retracing the shard_map program.
+
+    Sharding: the flat vector is zero-padded to a multiple of the FSDP
+    axis size (``n_pad``) and split 1-D along that axis -- the same
+    ``embed -> data`` placement ``models/sharding.py`` gives the weight
+    matrices, collapsed to the ravel.  The padded tail rides a decoupled
+    ``damping * I`` block, so the operator stays SPD and a zero-padded
+    RHS keeps a zero tail in the solution.  ``matvec_local_ctx``
+    all-gathers the parameter and direction shards along the FSDP axis
+    (the standard FSDP param-gather; per-shard ``ppermute``/``all_gather``
+    traffic does not count against the one-reduction-per-iteration gate,
+    exactly like DistPoisson's halo exchanges), runs the full HVP
+    redundantly per shard, and slices out this shard's chunk.  The CG
+    scalar payloads reduce via ``reduce_scalars`` -- ONE stacked ``psum``
+    over the FSDP axis per p(l)-CG iteration -- with
+    ``reduce_scalars_start``/``finish`` (psum_scatter + delayed
+    all_gather) backing ``comm="overlap"`` and ``ring_schedule`` backing
+    ``comm="ring"``.
+    """
+
+    def __init__(self, loss_fn: Callable, params, batch, *, mesh: Mesh,
+                 damping: float = 1e-3, axis: str | None = None):
+        if axis is None:
+            axis = _fsdp_axis(mesh)
+        if axis not in mesh.axis_names:
+            raise ValueError(f"axis {axis!r} not in mesh axes "
+                             f"{tuple(mesh.axis_names)}")
+        p_flat, unravel = ravel_pytree(params)
+        n = int(p_flat.shape[0])
+        k = int(mesh.shape[axis])
+        n_pad = -(-n // k) * k
+        self.loss_fn = loss_fn
+        self.unravel = unravel
+        self.damping = float(damping)
+        self.mesh = mesh
+        self.axis = axis
+        self.n = n
+        self.n_pad = n_pad
+        self.name = "ggn@mesh"
+        self._batch_specs = jax.tree.map(lambda _: P(), batch)
+        dmp = self.damping
+
+        def matvec_local_ctx(ctx, v_local):
+            p_loc, bt = ctx
+            # FSDP param/direction gather along the shard axis; tiled so
+            # the result is the flat (n_pad,) vector
+            pf = jax.lax.all_gather(p_loc, axis, tiled=True)
+            vf = jax.lax.all_gather(v_local, axis, tiled=True)
+            hv = ggn_hvp(loss_fn, unravel, pf[:n], bt, vf[:n], dmp)
+            if n_pad > n:
+                hv = jnp.concatenate([hv, dmp * vf[n:]])
+            i = jax.lax.axis_index(axis)
+            chunk = n_pad // k
+            return jax.lax.dynamic_slice_in_dim(hv, i * chunk, chunk)
+
+        self.matvec_local_ctx = matvec_local_ctx
+        self.context = (self.pad(p_flat), batch)
+
+    # ---- bindable-context extension -----------------------------------
+
+    def bind(self, p_flat, batch) -> "GGNDistOperator":
+        """Rebind to fresh (flat params, batch); pads to ``n_pad``."""
+        if tuple(p_flat.shape) not in ((self.n,), (self.n_pad,)):
+            raise ValueError(
+                f"flat parameter shape {tuple(p_flat.shape)} does not match "
+                f"operator dimension ({self.n},)")
+        self.context = (self.pad(p_flat), batch)
+        return self
+
+    def context_specs(self):
+        return (P(self.axis), self._batch_specs)
+
+    # ---- padding helpers ----------------------------------------------
+
+    def pad(self, v):
+        """Zero-pad a flat ``(n,)`` vector to the sharded ``(n_pad,)``."""
+        if v.shape[-1] == self.n_pad:
+            return v
+        return jnp.pad(v, [(0, 0)] * (v.ndim - 1)
+                       + [(0, self.n_pad - self.n)])
+
+    def unpad(self, v):
+        """Drop the shard padding back to the true dimension ``n``."""
+        return v[..., :self.n]
+
+    # ---- DistributedOperator protocol ---------------------------------
+
+    @property
+    def shards(self) -> int:
+        return int(self.mesh.shape[self.axis])
+
+    @property
+    def nshards(self) -> int:
+        return self.shards
+
+    @property
+    def global_shape(self) -> tuple:
+        return (self.n_pad,)
+
+    @property
+    def local_shape(self) -> tuple:
+        return (self.n_pad // self.shards,)
+
+    def spec(self) -> P:
+        return P(self.axis)
+
+    def matvec_local(self, xflat):
+        """Calibration-only local HVP: the autotuner's throwaway probe
+        binds the CURRENT context as trace constants.  Real solves go
+        through ``matvec_local_ctx`` with the context as a traced
+        operand."""
+        p_full, bt = self.context
+        i = jax.lax.axis_index(self.axis)
+        chunk = self.n_pad // self.shards
+        p_loc = jax.lax.dynamic_slice_in_dim(p_full, i * chunk, chunk)
+        return self.matvec_local_ctx((p_loc, bt), xflat)
+
+    def dot_local(self, u, v):
+        return jnp.sum(u * v)
+
+    def reduce_scalars(self, payload):
+        """The ONE stacked psum per p(l)-CG iteration (FSDP axis only:
+        the other mesh axes hold replicas of the same shard)."""
+        return jax.lax.psum(payload, (self.axis,))
+
+    def reduce_scalars_start(self, payload):
+        """Split-phase issue (``comm="overlap"``): psum_scatter of the
+        zero-padded payload along the FSDP axis; the matching ``finish``
+        all-gathers the partial-sum chunks any number of iterations
+        later."""
+        w = payload.shape[-1]
+        wp = -(-w // self.nshards) * self.nshards
+        if wp != w:
+            pad = [(0, 0)] * (payload.ndim - 1) + [(0, wp - w)]
+            payload = jnp.pad(payload, pad)
+        return jax.lax.psum_scatter(payload, (self.axis,),
+                                    scatter_dimension=payload.ndim - 1,
+                                    tiled=True)
+
+    def reduce_scalars_finish(self, shard, width: int):
+        full = jax.lax.all_gather(shard, (self.axis,), axis=shard.ndim - 1,
+                                  tiled=True)
+        return full[..., :width]
+
+    def ring_schedule(self) -> tuple:
+        """``shards - 1`` circulate-accumulate hops around the 1-D FSDP
+        ring (``comm="ring"``); composes to the full ``psum``."""
+        k = self.shards
+        ring = tuple((i, (i + 1) % k) for i in range(k))
+        return tuple((self.axis, ring, False) for _ in range(k - 1))
+
+    # ---- spectral estimate --------------------------------------------
+
+    def lmax_estimate(self, *, power_iters: int = 8) -> float:
+        """Power-iteration ``lmax`` bound at the CURRENT context (runs
+        the plain single-program HVP on the unpadded vector -- the
+        estimate is a host-side scalar, not part of the mesh program)."""
+        p_full, batch = self.context
+        return estimate_ggn_lmax(self.loss_fn, self.unravel,
+                                 self.unpad(p_full), batch,
+                                 damping=self.damping,
+                                 power_iters=power_iters)

@@ -25,6 +25,8 @@ class StragglerMonitor:
     _m2: float = 0.0
     flagged: int = 0
     history: list = dataclasses.field(default_factory=list)
+    solves: list = dataclasses.field(default_factory=list)
+    last_solve: Optional[dict] = None
 
     def record(self, step: int, seconds: float) -> bool:
         """Returns True when the step is a straggler."""
@@ -40,10 +42,33 @@ class StragglerMonitor:
         if slow:
             self.flagged += 1
         if self.heartbeat_path:
-            pathlib.Path(self.heartbeat_path).write_text(json.dumps(
-                {"step": step, "t": time.time(), "step_s": seconds,
-                 "stragglers": self.flagged}))
+            beat = {"step": step, "t": time.time(), "step_s": seconds,
+                    "stragglers": self.flagged}
+            if self.last_solve is not None:
+                beat["solve"] = self.last_solve
+            pathlib.Path(self.heartbeat_path).write_text(json.dumps(beat))
         return slow
+
+    def record_solve(self, step: int, *, iters: int, converged: bool,
+                     restarts: int = 0, replacements: int = 0,
+                     resnorm: Optional[float] = None,
+                     auto: Optional[dict] = None) -> None:
+        """Per-step inner-solver evidence from the Newton-CG trainer:
+        inner iteration count, convergence, in-scan restart /
+        residual-replacement counts, and the autotuner's decision record
+        (``info["auto"]``: chosen depth/policy + measured latencies) when
+        ``l="auto"``/``comm="auto"`` calibrated the session.  Rides the
+        next heartbeat so an external supervisor sees solver health, not
+        just wall times."""
+        entry = {"step": step, "iters": int(iters),
+                 "converged": bool(converged), "restarts": int(restarts),
+                 "replacements": int(replacements)}
+        if resnorm is not None:
+            entry["resnorm"] = float(resnorm)
+        if auto is not None:
+            entry["auto"] = auto
+        self.solves.append(entry)
+        self.last_solve = entry
 
     @property
     def mean_step_s(self) -> float:

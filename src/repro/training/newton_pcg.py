@@ -11,16 +11,24 @@ exact:
              (all-reduces across the whole mesh);
   l      <-> how many HVPs one reduction is hidden behind.
 
-The parameter pytree is flattened once per outer step (ravel_pytree); the
-inner solver runs on flat vectors with the depth-l in-flight queue.  A
-damped-GGN solve is SPD, so CG applies; square-root breakdowns fall back to
-the last iterate (equivalent to truncated-Newton early stopping).
+The parameter pytree is flattened ONCE per outer step (ravel_pytree); the
+inner solver runs on flat vectors with the depth-l in-flight queue, and
+every one of its k HVPs reuses that flat view.  A damped-GGN solve is
+SPD, so CG applies; square-root breakdowns fall back to the last iterate
+(equivalent to truncated-Newton early stopping).
+
+This module is the *direct* form -- one ``plcg_scan`` call per step, fully
+jittable, no session state.  The subsystem form is
+:class:`repro.training.trainer.NewtonPCGTrainer`, which prepares a
+:class:`repro.core.Solver` once per shape and adds mesh execution,
+``comm=``/``precision=`` policies and ``l="auto"`` calibration on top of
+the same GGN operator (``repro.training.ggn``).
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Callable
+from typing import Callable, Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -28,32 +36,51 @@ from jax.flatten_util import ravel_pytree
 
 from repro.core.plcg_scan import plcg_scan
 from repro.core.shifts import chebyshev_shifts
+from repro.training.ggn import estimate_ggn_lmax, ggn_hvp
+
+#: Conservative legacy spectral bound, used only when the step runs under
+#: an outer jit with ``lmax_estimate=None`` (the Chebyshev shifts must be
+#: trace-time constants, so no host-side power iteration can run there).
+FALLBACK_LMAX = 10.0
 
 
 @dataclasses.dataclass(frozen=True)
 class NewtonPCGConfig:
-    l: int = 2                     # pipeline depth
+    l: Union[int, str] = 2         # pipeline depth (int, or "auto" for the
+    #                                prepared trainer's calibrated depth)
     cg_iters: int = 16             # inner iterations (solution index budget)
     damping: float = 1e-3          # lambda (Levenberg-Marquardt)
     lr: float = 1.0                # step on the Newton direction
-    lmax_estimate: float = 10.0    # spectral bound for the Chebyshev shifts
+    cg_tol: float = 1e-4           # inner relative-residual tolerance
+    lmax_estimate: Optional[float] = None
+    #: spectral bound for the Chebyshev shifts; None (default) estimates
+    #: it by power iteration (``repro.training.ggn.estimate_ggn_lmax``)
 
 
-def ggn_matvec(loss_fn: Callable, params, batch, unravel, v_flat, damping):
-    """Gauss-Newton product (J^T H_out J + damping) v on flat vectors."""
-    p_flat, _ = ravel_pytree(params)
+def ggn_matvec(loss_fn: Callable, p_flat, batch, unravel, v_flat, damping):
+    """Gauss-Newton product (J^T H_out J + damping) v on flat vectors.
 
-    def f(pf):
-        return loss_fn(unravel(pf), batch)
+    Operates on the already-flat ``p_flat`` -- the flatten/unravel pair is
+    hoisted to once per outer step (``newton_pcg_step``), so the inner
+    solve's k HVPs never re-ravel the parameter pytree.
+    """
+    return ggn_hvp(loss_fn, unravel, p_flat, batch, v_flat, damping)
 
-    # GGN via double-backprop on the scalar loss: here we use the (PSD)
-    # Gauss-Newton approximation J^T J for the softmax-CE composite by
-    # hvp of the loss plus damping; for CE the Fisher == GGN.
-    def grad_f(pf):
-        return jax.grad(f)(pf)
 
-    _, hv = jax.jvp(grad_f, (p_flat,), (v_flat,))
-    return hv + damping * v_flat
+def resolve_lmax(loss_fn: Callable, unravel, p_flat, batch,
+                 cfg: NewtonPCGConfig) -> float:
+    """The spectral bound feeding the Chebyshev shifts: the pinned
+    ``cfg.lmax_estimate`` when given, else a cheap power-iteration
+    estimate at the current (params, batch).  Under an outer jit the
+    shifts must be trace-time constants, so a traced ``p_flat`` falls
+    back to the conservative :data:`FALLBACK_LMAX` (pin the estimate or
+    use the prepared trainer to avoid that)."""
+    if cfg.lmax_estimate is not None:
+        return float(cfg.lmax_estimate)
+    if isinstance(p_flat, jax.core.Tracer):
+        return FALLBACK_LMAX
+    return estimate_ggn_lmax(loss_fn, unravel, p_flat, batch,
+                             damping=cfg.damping)
 
 
 def newton_pcg_step(loss_fn: Callable, params, batch, cfg: NewtonPCGConfig):
@@ -62,13 +89,18 @@ def newton_pcg_step(loss_fn: Callable, params, batch, cfg: NewtonPCGConfig):
     loss, g_tree = jax.value_and_grad(lambda p: loss_fn(p, batch))(params)
     g_flat, _ = ravel_pytree(g_tree)
 
-    matvec = functools.partial(ggn_matvec, loss_fn, params, batch, unravel,
+    matvec = functools.partial(ggn_matvec, loss_fn, p_flat, batch, unravel,
                                damping=cfg.damping)
 
-    sigma = chebyshev_shifts(cfg.damping, cfg.lmax_estimate, cfg.l)
+    if not isinstance(cfg.l, int):
+        raise ValueError("the direct newton_pcg_step needs an integer "
+                         "pipeline depth; l='auto' calibration lives in "
+                         "repro.training.trainer.NewtonPCGTrainer")
+    lmax = resolve_lmax(loss_fn, unravel, p_flat, batch, cfg)
+    sigma = chebyshev_shifts(cfg.damping, lmax, cfg.l)
     out = plcg_scan(matvec, -g_flat, None,
                     l=cfg.l, iters=cfg.cg_iters + cfg.l + 1,
-                    sigma=tuple(sigma), tol=1e-4)
+                    sigma=tuple(sigma), tol=cfg.cg_tol)
     d = jnp.where(out.k_done >= 0, 1.0, 0.0) * out.x
     # fall back to steepest descent if the inner solve broke down at once
     d = jnp.where(out.breakdown & (out.k_done < 1), -g_flat * cfg.lr, d)

@@ -1,5 +1,10 @@
 """Training substrate: optimizers, checkpoint/restart, compression,
-Newton-pCG."""
+Newton-pCG, and the Newton-CG trainer subsystem (GGN operators +
+prepared deep-pipelined inner solves)."""
+import json
+import subprocess
+import sys
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -7,9 +12,11 @@ import pytest
 
 from repro.configs import get_reduced
 from repro.models import init_params, loss_fn
-from repro.training import (AdamWConfig, CheckpointManager, NewtonPCGConfig,
-                            adamw_init, adamw_update, compress_grads,
-                            compress_init, decompress_grads, newton_pcg_step)
+from repro.training import (AdamWConfig, CheckpointManager, GGNOperator,
+                            NewtonPCGConfig, NewtonPCGTrainer, adamw_init,
+                            adamw_update, compress_grads, compress_init,
+                            decompress_grads, estimate_ggn_lmax,
+                            newton_pcg_step)
 from repro.training.data import synth_batch
 from repro.training.monitor import StragglerMonitor
 
@@ -144,3 +151,338 @@ def test_straggler_monitor():
         assert not mon.record(i, 1.0 + 0.01 * (i % 2))
     assert mon.record(10, 10.0)
     assert mon.flagged == 1
+
+
+# ---------------------------------------------------------------------------
+# Newton-CG training subsystem: GGN operators + NewtonPCGTrainer
+# ---------------------------------------------------------------------------
+
+def _ls_problem(dtype, seed=5, n_feat=24, n_out=6, m=32):
+    """A linear least-squares training problem: loss_fn(params, batch),
+    initial params, and a per-step synthetic batch generator."""
+    rng = np.random.default_rng(seed)
+    params = {
+        "w": jnp.asarray(rng.standard_normal((n_feat, n_out)) * 0.3, dtype),
+        "b": jnp.zeros((n_out,), dtype),
+    }
+
+    def lf(p, batch):
+        x, y = batch
+        pred = x @ p["w"] + p["b"]
+        return 0.5 * jnp.mean((pred - y) ** 2)
+
+    def batch_at(step):
+        r = np.random.default_rng(100 + step)
+        return (jnp.asarray(r.standard_normal((m, n_feat)), dtype),
+                jnp.asarray(r.standard_normal((m, n_out)), dtype))
+
+    return lf, params, batch_at
+
+
+def test_ggn_operator_matvec_and_bind():
+    """GGNOperator.matvec is the damped Hessian product at the CURRENT
+    context, and bind() swaps in fresh parameters without a new closure."""
+    from jax.flatten_util import ravel_pytree
+
+    # cubic loss: hvp depends on the linearization point (H = 2 diag(w))
+    def lf(p, batch):
+        return jnp.sum(p["w"] ** 3) / 3.0
+
+    params = {"w": jnp.arange(1.0, 9.0)}
+    op = GGNOperator(lf, params, batch=None, damping=0.5)
+    v = jnp.ones(8)
+    p_flat, _ = ravel_pytree(params)
+    np.testing.assert_allclose(np.asarray(op.matvec(v)),
+                               np.asarray(2.0 * p_flat + 0.5), rtol=1e-6)
+    mv_old = op.matvec_ctx                 # the closure is stable...
+    op.bind(3.0 * p_flat, None)            # ...only the context moves
+    assert op.matvec_ctx is mv_old
+    np.testing.assert_allclose(np.asarray(op.matvec(v)),
+                               np.asarray(6.0 * p_flat + 0.5), rtol=1e-6)
+
+
+def test_estimate_ggn_lmax_quadratic():
+    """The power-iteration bound tracks the true top eigenvalue of a
+    known quadratic (replacing the old hardcoded 10.0)."""
+    from jax.flatten_util import ravel_pytree
+
+    q = jnp.asarray(np.linspace(0.5, 4.0, 16), jnp.float32)
+
+    def lf(p, batch):
+        return 0.5 * jnp.sum(q * p["w"] ** 2)
+
+    params = {"w": jnp.ones(16, jnp.float32)}
+    p_flat, unravel = ravel_pytree(params)
+    est = estimate_ggn_lmax(lf, unravel, p_flat, None, damping=1e-2,
+                            power_iters=40)
+    # exact top eigenvalue of (diag(q) + damping I) is 4.01; the estimate
+    # carries the conventional 1.05 safety factor
+    assert abs(est - 1.05 * 4.01) / 4.01 < 0.05
+
+
+def test_trainer_matches_legacy_newton_step(x64):
+    """Engine-backed trainer step == direct newton_pcg_step to <= 1e-10 on
+    the Newton direction (same pinned spectrum, same depth/tol/budget)."""
+    from jax.flatten_util import ravel_pytree
+
+    lf, params, batch_at = _ls_problem(jnp.float64)
+    batch = batch_at(0)
+    # pin the power-iteration spectral bound so both paths build identical
+    # Chebyshev shifts (a bad bound breaks the auxiliary recurrences down,
+    # and then the two paths legitimately diverge: the direct step freezes
+    # at the breakdown iterate while the engine restarts and converges)
+    p_flat, unravel = ravel_pytree(params)
+    lmax = estimate_ggn_lmax(lf, unravel, p_flat, batch, damping=0.1,
+                             power_iters=30)
+    cfg = NewtonPCGConfig(l=2, cg_iters=40, damping=0.1, lr=1.0,
+                          cg_tol=1e-8, lmax_estimate=float(lmax))
+    p_legacy, _ = newton_pcg_step(lf, params, batch, cfg)
+    tr = NewtonPCGTrainer(lf, cfg)
+    p_engine, stats = tr.step(params, batch)
+    assert stats["cg_converged"] and not stats["cg_breakdown"]
+    for k in params:
+        np.testing.assert_allclose(np.asarray(p_engine[k]),
+                                   np.asarray(p_legacy[k]),
+                                   rtol=0.0, atol=1e-10)
+
+
+def test_trainer_zero_retrace_across_rebinds():
+    """Outer steps 2..N rebind fresh (params, batch) into the step-1
+    compiled sweep: compile_counts() stays at 1 everywhere, while the
+    rebound data actually steers the solve (directions differ)."""
+    lf, params, batch_at = _ls_problem(jnp.float32)
+    cfg = NewtonPCGConfig(l=2, cg_iters=8, damping=0.1, lr=0.5)
+    tr = NewtonPCGTrainer(lf, cfg)
+    from jax.flatten_util import ravel_pytree
+    deltas = []
+    prev = params
+    for i in range(4):
+        params, stats = tr.step(params, batch_at(i))
+        pa, _ = ravel_pytree(prev)
+        pb, _ = ravel_pytree(params)
+        deltas.append(np.asarray(pb - pa))
+        prev = params
+        if i == 0:
+            first = dict(tr.compile_counts())
+            assert first and all(v == 1 for v in first.values())
+    assert dict(tr.compile_counts()) == first
+    # rebinds took effect: per-step Newton directions are not the same
+    assert not np.allclose(deltas[0], deltas[1])
+
+
+def test_trainer_reduces_loss_and_grad_norm():
+    """5 outer steps on the reduced model config: loss and gradient norm
+    both decrease (the subsystem form of test_newton_pcg_reduces_loss)."""
+    cfg = get_reduced("qwen3-14b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    ncfg = NewtonPCGConfig(l=2, cg_iters=6, lr=0.5)
+    lf = lambda p, b: loss_fn(cfg, p, b)  # noqa: E731
+    tr = NewtonPCGTrainer(lf, ncfg, power_iters=4)
+    batch = synth_batch(cfg, 0, 2, 32, seed=0)
+    hist = []
+    for i in range(5):
+        params, stats = tr.step(params, batch)
+        hist.append((float(stats["loss"]), float(stats["grad_norm"])))
+    assert hist[-1][0] < hist[0][0]
+    assert hist[-1][1] < hist[0][1]
+
+
+def test_trainer_l_auto_injected_latencies():
+    """l='auto' calibrates the depth from the latency table: with one
+    reduction costing 3 HVPs, the chosen depth hides 3 per reduction."""
+    from repro.core.autotune import override_latencies
+
+    lf, params, batch_at = _ls_problem(jnp.float32)
+    cfg = NewtonPCGConfig(l="auto", cg_iters=8, damping=0.1)
+    tr = NewtonPCGTrainer(lf, cfg)
+    with override_latencies({"spmv_us": 100.0,
+                             "glred_us": {"blocking": 300.0}}):
+        params, stats = tr.step(params, batch_at(0))
+    assert tr.solver.l == 3
+    assert stats["auto"] is not None and stats["auto"]["l"] == 3
+    assert np.isfinite(stats["loss"])
+
+
+@pytest.mark.parametrize("knobs", [
+    dict(precision="bf16"),
+    dict(restart=3, residual_replacement=5),
+])
+def test_trainer_engine_knobs(knobs):
+    """Solver-engine knobs pass through the trainer: bf16 window storage
+    and in-scan restart/residual replacement run and stay zero-retrace."""
+    lf, params, batch_at = _ls_problem(jnp.float32)
+    cfg = NewtonPCGConfig(l=2, cg_iters=8, damping=0.1, lr=0.5)
+    tr = NewtonPCGTrainer(lf, cfg, **knobs)
+    for i in range(2):
+        params, stats = tr.step(params, batch_at(i))
+        assert np.isfinite(stats["loss"])
+    counts = tr.compile_counts()
+    assert counts and all(v == 1 for v in counts.values())
+
+
+def test_trainer_reports_to_monitor(tmp_path):
+    """Per-step solver evidence reaches the monitor and rides the next
+    heartbeat."""
+    hb = tmp_path / "heartbeat.json"
+    mon = StragglerMonitor(heartbeat_path=str(hb))
+    lf, params, batch_at = _ls_problem(jnp.float32)
+    cfg = NewtonPCGConfig(l=2, cg_iters=8, damping=0.1)
+    tr = NewtonPCGTrainer(lf, cfg, monitor=mon)
+    for i in range(2):
+        params, stats = tr.step(params, batch_at(i))
+        mon.record(i, stats["step_s"])
+    assert len(mon.solves) == 2
+    assert {"step", "iters", "converged", "restarts",
+            "replacements"} <= set(mon.solves[0])
+    beat = json.loads(hb.read_text())
+    assert beat["solve"]["step"] == 1
+    assert beat["solve"]["iters"] >= 1
+
+
+# ----------------------- live-mesh subprocess tests -----------------------
+
+def _run(code: str, env: dict) -> dict:
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=560)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+_MESH_PRELUDE = r"""
+import json
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+from repro.training import NewtonPCGConfig, NewtonPCGTrainer
+
+def ls_problem(dtype, seed=5, n_feat=24, n_out=6, m=32):
+    rng = np.random.default_rng(seed)
+    params = {
+        "w": jnp.asarray(rng.standard_normal((n_feat, n_out)) * 0.3, dtype),
+        "b": jnp.zeros((n_out,), dtype),
+    }
+    def lf(p, batch):
+        x, y = batch
+        return 0.5 * jnp.mean((x @ p["w"] + p["b"] - y) ** 2)
+    def batch_at(step):
+        r = np.random.default_rng(100 + step)
+        return (jnp.asarray(r.standard_normal((m, n_feat)), dtype),
+                jnp.asarray(r.standard_normal((m, n_out)), dtype))
+    return lf, params, batch_at
+
+mesh = Mesh(np.array(jax.devices()[:4]).reshape(2, 2), ("data", "model"))
+
+# one shared, well-placed spectral bound: both the mesh and the
+# single-device reference trainer must build IDENTICAL Chebyshev shifts
+from jax.flatten_util import ravel_pytree
+from repro.training import estimate_ggn_lmax
+_lf, _p, _b = ls_problem(jnp.float32)
+_pf, _unr = ravel_pytree(_p)
+LMAX = float(estimate_ggn_lmax(_lf, _unr, _pf, _b(0), damping=0.1,
+                               power_iters=20))
+"""
+
+
+def test_trainer_mesh_live_step(dist_env):
+    """Live (2, 2)-mesh outer steps: exactly ONE stacked psum per inner
+    p(l)-CG iteration (structural jaxpr gate on the prepared sweep),
+    mesh == single-device Newton directions, and zero retraces across
+    rebinding outer steps."""
+    code = _MESH_PRELUDE + r"""
+from repro.kernels.introspect import count_primitive_in_scan_bodies
+
+cfg = NewtonPCGConfig(l=3, cg_iters=8, damping=0.1, lr=0.5,
+                      lmax_estimate=LMAX)
+
+lf, params, batch_at = ls_problem(jnp.float32)
+tr = NewtonPCGTrainer(lf, cfg, mesh=mesh)
+lf1, p1, _ = ls_problem(jnp.float32)
+single = NewtonPCGTrainer(lf1, cfg)
+
+losses, gaps = [], []
+for i in range(3):
+    p_in = params
+    params, stats = tr.step(params, batch_at(i))
+    # one-step parity from the SAME state (f32 trajectories would
+    # otherwise drift apart across steps); the single twin still
+    # exercises its own rebind path every step
+    p1, s1 = single.step(p_in, batch_at(i))
+    losses.append(float(stats["loss"]))
+    ref = np.concatenate([np.asarray(p1[k]).ravel() for k in sorted(p1)])
+    got = np.concatenate([np.asarray(params[k]).ravel()
+                          for k in sorted(params)])
+    gaps.append(float(np.max(np.abs(got - ref))))
+
+counts = list(tr.compile_counts().values())
+
+op = tr.op
+raw = next(iter(tr.solver._mesh_session._sweeps.values()))
+b = jnp.zeros((op.n_pad,), jnp.float32)
+psums = count_primitive_in_scan_bodies(raw, "psum", op.context, b,
+                                       jnp.zeros_like(b), cfg.cg_iters)
+
+print(json.dumps({"losses": losses, "gaps": gaps, "counts": counts,
+                  "psums": psums, "iters": int(stats["cg_iters"])}))
+"""
+    out = _run(code, dist_env)
+    assert out["counts"] and all(c == 1 for c in out["counts"])
+    assert out["psums"] == [1]
+    assert max(out["gaps"]) < 1e-5
+    assert out["losses"][-1] < out["losses"][0]
+
+
+def test_trainer_mesh_knob_matrix(dist_env):
+    """The full engine knob matrix through the trainer on a live mesh:
+    comm=overlap/ring, precision=bf16, and l='auto'+comm='auto' with an
+    injected latency table (one reduction = 3 HVPs -> depth 3).  Every
+    configuration must agree with blocking f32 on the first Newton
+    direction and stay zero-retrace over rebinding steps."""
+    code = _MESH_PRELUDE + r"""
+from repro.core.autotune import override_latencies
+
+cfg = NewtonPCGConfig(l=3, cg_iters=8, damping=0.1, lr=0.5,
+                      lmax_estimate=LMAX)
+
+def run(tcfg, steps=2, **kw):
+    lf, params, batch_at = ls_problem(jnp.float32)
+    tr = NewtonPCGTrainer(lf, tcfg, mesh=mesh, **kw)
+    for i in range(steps):
+        params, stats = tr.step(params, batch_at(i))
+    flat = np.concatenate([np.asarray(params[k]).ravel()
+                           for k in sorted(params)])
+    return tr, flat, stats
+
+_, ref, _ = run(cfg)
+out = {}
+for name, kw in [("overlap", dict(comm="overlap")),
+                 ("ring", dict(comm="ring")),
+                 ("bf16", dict(precision="bf16"))]:
+    tr, flat, stats = run(cfg, **kw)
+    out[name] = {"gap": float(np.max(np.abs(flat - ref))),
+                 "counts": list(tr.compile_counts().values()),
+                 "finite": bool(np.isfinite(stats["loss"]))}
+
+acfg = NewtonPCGConfig(l="auto", cg_iters=8, damping=0.1, lr=0.5,
+                       lmax_estimate=LMAX)
+with override_latencies({"spmv_us": 100.0,
+                         "glred_us": {"blocking": 300.0,
+                                      "overlap": 240.0,
+                                      "ring": 420.0}}):
+    tr, flat, stats = run(acfg, comm="auto")
+out["auto"] = {"l": tr.solver.l, "comm": stats["auto"]["comm"],
+               "info_l": stats["auto"]["l"],
+               "counts": list(tr.compile_counts().values())}
+print(json.dumps(out))
+"""
+    out = _run(code, dist_env)
+    for name in ("overlap", "ring"):
+        assert out[name]["gap"] < 1e-5, (name, out[name])
+    for name in ("overlap", "ring", "bf16"):
+        assert out[name]["finite"]
+        assert all(c == 1 for c in out[name]["counts"]), (name, out[name])
+    # one reduction costs ~3 HVPs -> the calibrated depth hides 3, and the
+    # cheapest policy at that depth wins
+    assert out["auto"]["l"] == 3 and out["auto"]["info_l"] == 3
+    assert out["auto"]["comm"] in ("blocking", "overlap", "ring")
+    assert all(c == 1 for c in out["auto"]["counts"])
